@@ -1,0 +1,16 @@
+"""Paper Fig. 4: β (boundary-edge ratio) with and without message reduction,
+two- and three-way partitioning, scale-free vs uniform graphs."""
+from __future__ import annotations
+
+from repro.core import partition as PT
+from benchmarks.common import emit, workload
+
+
+def run(scale: int = 16):
+    for kind in ("rmat", "uniform"):
+        g = workload(scale, kind)
+        for parts in (2, 3):
+            pg = PT.partition(g, parts, PT.RAND, seed=0)
+            emit(f"fig4_beta_{kind}{scale}_{parts}way", 0.0,
+                 f"no_reduction={pg.beta_no_reduction:.3f}|"
+                 f"with_reduction={pg.beta_with_reduction:.3f}")

@@ -1,0 +1,37 @@
+"""Shared benchmark helpers: timing, CSV emission, workload cache."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable
+
+import jax
+
+ROWS = []
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call (after warmup; blocks on jax outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    """Print the scaffold's ``name,us_per_call,derived`` CSV row."""
+    row = f"{name},{seconds*1e6:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+@functools.lru_cache(maxsize=8)
+def workload(scale: int, kind: str = "rmat", weighted: bool = False):
+    from repro.core import graph as G
+    g = (G.rmat if kind == "rmat" else G.uniform)(scale, 16, seed=1)
+    return g.with_uniform_weights(seed=1) if weighted else g

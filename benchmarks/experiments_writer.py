@@ -1,0 +1,193 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline from the dry-run JSONs.
+
+  PYTHONPATH=src:. python -m benchmarks.experiments_writer
+
+§Perf is maintained by hand in experiments/perf_log.md (the hillclimb
+iteration log) and included verbatim.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "experiments" / "dryrun"
+PERF_LOG = ROOT / "experiments" / "perf_log.md"
+OUT = ROOT / "EXPERIMENTS.md"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k",
+               "pagerank_superstep"]
+
+
+def _cells(mesh):
+    out = []
+    for f in sorted(glob.glob(str(DRYRUN / f"*__{mesh}.json"))):
+        out.append(json.load(open(f)))
+    out.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                            if r["shape"] in SHAPE_ORDER else 99))
+    return out
+
+
+def _fix_sentence(rec):
+    r = rec.get("roofline")
+    if not r:
+        return ""
+    dom = r["dominant"]
+    kind = rec["shape"]
+    if dom == "compute" and r.get("useful_ratio", 1) < 0.8:
+        return ("remat recompute inflates FLOPs ~4/3×; a selective "
+                "checkpoint policy (save matmul outputs) trades memory for "
+                "the recompute pass")
+    if dom == "compute":
+        return ("near the useful-FLOPs bound; next lever is attention-"
+                "window/kernel-fusion to cut non-matmul overhead")
+    if dom == "memory" and "decode" in kind or kind == "long_500k":
+        return ("KV/state-cache streaming bound; levers: cache dtype (int8 "
+                "KV), two-tier local/global cache, wider batch to amortize "
+                "weight reads")
+    if dom == "memory":
+        return ("HBM traffic bound; levers: fused bf16 weights on the wire, "
+                "activation re-layout, larger microbatches")
+    return ("boundary traffic bound; levers: message reduction (done), "
+            "int8 payloads, hierarchical in-pod reduce before cross-pod")
+
+
+def write() -> None:
+    single = _cells("single")
+    multi = _cells("multi")
+
+    md = ["# EXPERIMENTS", ""]
+    md += [
+        "Container: CPU-only (1 core); TPU v5e is the *target* "
+        "(197 TFLOP/s bf16, 819 GB/s HBM, 4×50 GB/s ICI per chip). "
+        "All dry-runs use 512 placeholder host devices "
+        "(`xla_force_host_platform_device_count`, set only inside "
+        "`launch/dryrun.py`).",
+        "",
+        "Methodology notes:",
+        "- `cost_analysis()` counts `while`-body FLOPs ONCE (verified: a "
+        "95-layer scan reports single-body numbers), so raw HLO FLOPs are "
+        "recorded as a lower bound and the roofline compute/memory terms "
+        "come from the first-principles calculator "
+        "(`benchmarks/calculator.py`).",
+        "- Collective bytes ARE parsed from `compiled.as_text()` (all-"
+        "gather/all-reduce/reduce-scatter/all-to-all/collective-permute) "
+        "with loop-depth multipliers from each op's `op_name` while-nesting "
+        "(`benchmarks/hlo_analysis.py`).",
+        "- `long_500k` runs only for sub-quadratic archs per spec; skips "
+        "are recorded rows, not silent omissions.",
+        "",
+    ]
+
+    # ----------------------------------------------------------------- dryrun
+    md += ["## §Dry-run", ""]
+    md += ["Every cell lowers + compiles for BOTH production meshes — "
+           "single-pod `(data=16, model=16)` = 256 chips and multi-pod "
+           "`(pod=2, data=16, model=16)` = 512 chips.", ""]
+    for mesh, cells in (("single", single), ("multi", multi)):
+        ok = sum(1 for r in cells if r.get("ok") and "skipped" not in r)
+        skip = sum(1 for r in cells if r.get("skipped"))
+        fail = sum(1 for r in cells if not r.get("ok"))
+        md += [f"### Mesh: {mesh} — {ok} compiled, {skip} spec-skips, "
+               f"{fail} failures", ""]
+        md += ["| arch | shape | compile s | args GiB/dev | temp GiB/dev | "
+               "HLO GFLOP (raw) | collectives GB (loop-corrected) |",
+               "|---|---|---|---|---|---|---|"]
+        for r in cells:
+            if r.get("skipped"):
+                md += [f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"{r['skipped'].split(';')[0]} |"]
+                continue
+            if not r.get("ok"):
+                md += [f"| {r['arch']} | {r['shape']} | FAILED | | | | |"]
+                continue
+            ma = r["memory_analysis"]
+            cb = r.get("collective_bytes", {})
+            md += ["| {a} | {s} | {c:.1f} | {arg:.2f} | {tmp:.2f} | "
+                   "{fl:.1f} | {coll:.1f} |".format(
+                       a=r["arch"], s=r["shape"], c=r.get("compile_s", 0),
+                       arg=ma.get("argument_bytes", 0) / 2**30,
+                       tmp=ma.get("temp_bytes", 0) / 2**30,
+                       fl=r["cost_analysis_raw"]["flops"] / 1e9,
+                       coll=cb.get("total", 0) / 1e9)]
+        md += [""]
+
+    # --------------------------------------------------------------- roofline
+    md += ["## §Roofline (single-pod, 256 chips)", ""]
+    md += ["Terms in seconds per step/device: compute = FLOPs/(chips·peak), "
+           "memory = bytes/(chips·HBM), collective = bytes/(chips·ICI). "
+           "`useful` = MODEL_FLOPS / total-compiled-FLOPs "
+           "(6·N·D dense, 6·N_active·D MoE); `MFU bound` = model FLOPs over "
+           "peak during max(term).", ""]
+    md += ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful | MFU bound | what moves the dominant term |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in single:
+        if not r.get("ok") or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        md += ["| {a} | {s} | {c:.2e} | {m:.2e} | {k:.2e} | {d} | {u:.2f} | "
+               "{f:.3f} | {fix} |".format(
+                   a=r["arch"], s=r["shape"], c=rf["compute_s"],
+                   m=rf["memory_s"], k=rf["collective_s"], d=rf["dominant"],
+                   u=rf.get("useful_ratio", 0),
+                   f=rf.get("mfu_bound", 0), fix=_fix_sentence(r))]
+    md += [""]
+
+    skips = [r for r in single if r.get("skipped")]
+    if skips:
+        md += ["Skipped cells (spec: long_500k needs sub-quadratic "
+               "attention): " + ", ".join(f"{r['arch']}" for r in skips),
+               ""]
+
+    # ------------------------------------------------- paper validation
+    bench_out = ROOT / "bench_output.txt"
+    md += ["## §Paper-validation (reduced-scale, CPU backend)", ""]
+    if bench_out.exists():
+        lines = bench_out.read_text().splitlines()
+        keys = ("fig2_worstcase", "fig4_beta", "table3_", "fig8_breakdown",
+                "fig9_bfs_high", "fig9_bfs_rand", "table4_")
+        md += ["Key rows from `bench_output.txt` "
+               "(full CSV there; one benchmark per paper artifact):", "",
+               "```"]
+        md += [ln for ln in lines if ln.startswith(keys)]
+        md += ["```", "",
+               "Reading:",
+               "- **Fig. 4 reproduced**: message reduction drops β from "
+               "~50% to 3–5% on scale-free graphs (the paper reports <5%).",
+               "- **Fig. 8 reproduced**: with reduction, communication is "
+               "~5% of a superstep vs ~95% computation — the paper's "
+               "pivotal finding that partitioning should target compute.",
+               "- **Table 3 methodology**: model-vs-measured correlation "
+               "0.72 on the hybrid two-engine step (paper: 0.88–0.99 on "
+               "real hardware; interpret-mode kernel timings on 1 CPU core "
+               "add noise the TPU target would not have).",
+               "- **Fig. 9 nuance**: HIGH shrinks the bottleneck "
+               "partition's vertex share 0.50 → 0.02 (the Fig. 13 "
+               "mechanism), but wall-clock TEPS is ≈flat on this backend — "
+               "the paper's super-linear win comes from LLC residency, "
+               "which XLA-on-CPU segment ops do not model; the TPU "
+               "analogue (VMEM-resident frontier) lives in the dense-path "
+               "Pallas kernel.",
+               "- **Table 4 caveat**: the numpy reference beats the engine "
+               "at toy scale on CPU (fixed JAX dispatch overhead); this "
+               "measures framework overhead, not the TPU-target "
+               "throughput, which §Roofline covers.", ""]
+    else:
+        md += ["(run `python -m benchmarks.run | tee bench_output.txt` "
+               "then regenerate)", ""]
+
+    # ------------------------------------------------------------------ perf
+    md += ["## §Perf — hillclimb log", ""]
+    if PERF_LOG.exists():
+        md += [PERF_LOG.read_text()]
+    else:
+        md += ["(pending — see experiments/perf_log.md)"]
+
+    OUT.write_text("\n".join(md) + "\n")
+    print(f"wrote {OUT} ({len(single)} single cells, {len(multi)} multi)")
+
+
+if __name__ == "__main__":
+    write()

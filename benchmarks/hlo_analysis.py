@@ -1,0 +1,116 @@
+"""Parse compiled HLO text for collective traffic (spec §Roofline).
+
+``cost_analysis()`` has no collective numbers, so we sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute in ``compiled.as_text()``.
+
+Loop correction: XLA prints each ``while`` body once, but scan bodies run
+``trip_count`` times.  Every op's ``metadata={op_name="..."}`` records its
+``/while/body/`` nesting path, so we multiply each collective by the product
+of the trip counts of its enclosing loops.  Trip counts are supplied by the
+caller per nesting depth (they are static properties of the program we
+built: microbatch count, layer count, chunk counts).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Sequence
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    bs = _DTYPE_BYTES.get(dtype)
+    if bs is None:
+        return 0.0
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return float(n * bs)
+
+
+def _first_output_bytes(line: str) -> float:
+    """Sum the (tuple) output shapes on the lhs of the op line."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0.0
+    # shapes between '=' and the op name
+    m = re.match(r"\s*\(?([^)]*)\)?\s*" + "(?:" + "|".join(COLLECTIVES) + ")",
+                 lhs[1])
+    head = m.group(1) if m else lhs[1].split("(")[0]
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))            # [groups, members] v2 format
+    m = _GROUPS_V1_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _depth(line: str) -> int:
+    m = _OPNAME_RE.search(line)
+    if not m:
+        return 0
+    return m.group(1).count("/while/body")
+
+
+def collective_bytes(hlo_text: str,
+                     depth_multipliers: Sequence[int] = (1,),
+                     ) -> Dict[str, float]:
+    """Per-collective operand bytes, loop-corrected.
+
+    ``depth_multipliers[i]`` is the execution-count multiplier for a
+    collective nested inside ``i`` while loops (e.g. train step:
+    ``[1, n_microbatches, n_microbatches * n_layers]``); depths beyond the
+    list reuse the last entry.
+    """
+    out = {c: 0.0 for c in COLLECTIVES}
+    out["by_depth"] = {}
+    for line in hlo_text.splitlines():
+        for c in COLLECTIVES:
+            if f" {c}(" not in line and f"{c}-start(" not in line:
+                continue
+            if f"%{c}" in line and " = " not in line:
+                continue
+            ob = _first_output_bytes(line)
+            if ob == 0.0:
+                continue
+            g = _group_size(line)
+            # operand bytes from output bytes per op semantics
+            if c == "all-gather":
+                operand = ob / max(g, 1)
+            elif c == "reduce-scatter":
+                operand = ob * g
+            else:                      # all-reduce / all-to-all / permute
+                operand = ob
+            d = _depth(line)
+            mult = depth_multipliers[min(d, len(depth_multipliers) - 1)]
+            out[c] += operand * mult
+            key = f"depth{d}"
+            out["by_depth"][key] = out["by_depth"].get(key, 0.0) \
+                + operand * mult
+            break
+    out["total"] = sum(out[c] for c in COLLECTIVES)
+    return out
+
+
+def collective_summary(hlo_text: str, depth_multipliers=(1,)) -> str:
+    cb = collective_bytes(hlo_text, depth_multipliers)
+    parts = [f"{c}={cb[c]/1e9:.3f}GB" for c in COLLECTIVES if cb[c]]
+    return f"total={cb['total']/1e9:.3f}GB " + " ".join(parts)

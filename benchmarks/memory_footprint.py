@@ -1,0 +1,22 @@
+"""Paper Table 5: memory footprint of the offloaded (GPU) partition —
+graph representation / inboxes / outboxes / algorithm state breakdown."""
+from __future__ import annotations
+
+from repro.core import partition as PT
+from benchmarks.common import emit, workload
+
+# per-vertex algorithm state sizes (paper Table 5 semantics)
+ALG_STATE_BYTES = {"bfs": 4, "pagerank": 8, "bc": 16, "sssp": 4, "cc": 4}
+
+
+def run(scale: int = 16):
+    g = workload(scale, "rmat")
+    pg = PT.partition(g, 2, PT.LOW, cpu_edge_fraction=0.7, seed=0)
+    for alg, sbytes in ALG_STATE_BYTES.items():
+        fp = PT.memory_footprint_bytes(pg, state_bytes=sbytes)
+        p = 1  # the offloaded partition
+        mb = {k: v / 2**20 for k, v in fp[p].items()}
+        emit(f"table5_{alg}_rmat{scale}", 0.0,
+             f"graph={mb['graph']:.1f}MB|inbox={mb['inbox']:.1f}MB|"
+             f"outbox={mb['outbox']:.1f}MB|state={mb['state']:.1f}MB|"
+             f"total={mb['total']:.1f}MB")

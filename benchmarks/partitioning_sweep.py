@@ -1,0 +1,34 @@
+"""Paper Fig. 9 + Fig. 13: partitioning strategies (RAND/HIGH/LOW) vs the
+share of edges on the bottleneck partition; BFS traversal rate (TEPS) and
+the |V_cpu| skew that explains it (paper §6.3.2)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import partition as PT
+from repro.core.bsp import BSPEngine
+from repro.algorithms import bfs
+from repro.algorithms.bfs import teps
+from benchmarks.common import emit, timeit, workload
+
+
+def run(scale: int = 14):
+    g = workload(scale, "rmat")
+    src = int(np.argmax(g.out_degrees()))
+
+    for strategy in (PT.RAND, PT.HIGH, PT.LOW):
+        for alpha in (0.5, 0.8):
+            pg = PT.partition(g, 2, strategy, cpu_edge_fraction=alpha,
+                              seed=0)
+            eng = BSPEngine(pg)
+            levels, _ = bfs(eng, src)            # warm компile + correctness
+
+            def run_once():
+                return bfs(eng, src)[0]
+
+            t = timeit(run_once, warmup=0, iters=3)
+            rate = teps(g, levels, t)
+            v_share = pg.assignment.part_sizes[0] / g.num_vertices
+            emit(f"fig9_bfs_{strategy}_alpha={alpha}", t,
+                 f"TEPS={rate/1e6:.2f}M|V_share_p0={v_share:.3f}|"
+                 f"beta={pg.beta_with_reduction:.3f}")

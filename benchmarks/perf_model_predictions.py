@@ -1,0 +1,55 @@
+"""Paper Fig. 2 + Fig. 3: speedups predicted by the performance model.
+
+Left (Fig. 2a): vary r_cpu at β=5%.  Right (Fig. 2b): vary β at r_cpu=1BE/s.
+Fig. 3: vary bytes/edge at α=60%.  Values reproduce the paper's curves from
+Eq. 4 with the paper's parameters (c = 3 BE/s from 12 GB/s PCIe ÷ 4 B/edge);
+the derived column also reports the TPU re-parameterization.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import perf_model as pm
+from benchmarks.common import emit
+
+
+def run():
+    alphas = np.array([0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9])
+
+    # Fig 2 (left): r_cpu sweep at beta=5%
+    for r_cpu in (0.5e9, 1e9, 2e9):
+        s = pm.speedup_curve(alphas, beta=0.05, r_cpu=r_cpu, c=pm.PAPER_C)
+        emit(f"fig2_left_rcpu={r_cpu/1e9:.1f}BE/s", 0.0,
+             "speedup@alpha=" + "|".join(f"{a:.1f}:{v:.2f}"
+                                         for a, v in zip(alphas, s)))
+
+    # Fig 2 (right): beta sweep at r_cpu=1BE/s — includes the paper's
+    # worst case beta=100% (slowdown only when alpha > ~0.7... see paper)
+    for beta in (0.02, 0.05, 0.2, 0.4, 1.0):
+        s = pm.speedup_curve(alphas, beta=beta, r_cpu=1e9, c=pm.PAPER_C)
+        emit(f"fig2_right_beta={beta:.2f}", 0.0,
+             "speedup@alpha=" + "|".join(f"{a:.1f}:{v:.2f}"
+                                         for a, v in zip(alphas, s)))
+    # paper check: at beta=1.0 slowdown appears only for alpha < ~0.7
+    s_worst = pm.speedup_curve(alphas, beta=1.0, r_cpu=1e9, c=pm.PAPER_C)
+    crossover = alphas[np.argmax(s_worst < 1.0)] if (s_worst < 1.0).any() \
+        else None
+    emit("fig2_worstcase_crossover", 0.0, f"alpha<1 below alpha={crossover}")
+
+    # Fig 3: bytes/edge sweep at alpha=0.6
+    for bytes_per_edge in (4, 8, 12):
+        c = pm.PAPER_PCIE_GBPS / bytes_per_edge
+        s = pm.speedup_curve(alphas, beta=0.05, r_cpu=1e9, c=c)
+        emit(f"fig3_bytes_per_edge={bytes_per_edge}", 0.0,
+             "speedup@alpha=" + "|".join(f"{a:.1f}:{v:.2f}"
+                                         for a, v in zip(alphas, s)))
+
+    # TPU re-parameterization (DESIGN.md §2)
+    tpu = pm.ModelParams.tpu_defaults()
+    s = pm.speedup_curve(alphas, beta=0.05, r_cpu=tpu.r_bottleneck, c=tpu.c)
+    emit("tpu_reparam_beta=0.05", 0.0,
+         f"c={tpu.c/1e9:.1f}BE/s r_sparse={tpu.r_bottleneck/1e9:.1f}BE/s "
+         + "speedup@alpha=" + "|".join(f"{a:.1f}:{v:.2f}"
+                                       for a, v in zip(alphas, s)))
+    emit("tpu_mxu_crossover_density", 0.0,
+         f"{pm.mxu_crossover_density():.2e}")

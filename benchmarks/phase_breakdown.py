@@ -1,0 +1,48 @@
+"""Paper Fig. 8/10/16: breakdown of execution time into computation vs
+communication phases.
+
+The engine's superstep is one fused XLA program, so phases are profiled by
+lowering *phase-isolated* programs: (i) compute+reduce only (no exchange),
+(ii) the full superstep.  The difference estimates the communication phase
+— mirroring how the paper attributes stream-timer segments.  The expected
+finding (paper §5.2): with message reduction, communication ≪ computation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import partition as PT
+from repro.core.bsp import BSPEngine, _superstep, _Dims
+from repro.algorithms.pagerank import make_pagerank_program, initial_state
+from benchmarks.common import emit, timeit, workload
+
+
+def run(scale: int = 14, parts: int = 4):
+    g = workload(scale, "rmat")
+    pg = PT.partition(g, parts, PT.HIGH, seed=0)
+    eng = BSPEngine(pg)
+    program = make_pagerank_program(pg.num_vertices)
+    state0 = initial_state(pg)
+    edges = eng.edges_for(program)
+    dims = eng.dims_for(edges)
+
+    full_step = jax.jit(functools.partial(
+        _superstep, dims, program, edges, eng._exchange, jnp.all))
+
+    def compute_only(state, step):
+        # identical program with the exchange replaced by a zero-copy no-op
+        return _superstep(dims, program, edges, lambda ob: ob * 0.0,
+                          jnp.all, state, step)
+
+    compute_step = jax.jit(compute_only)
+
+    t_full = timeit(lambda: full_step(state0, jnp.int32(0)))
+    t_comp = timeit(lambda: compute_step(state0, jnp.int32(0)))
+    t_comm = max(t_full - t_comp, 0.0)
+    emit(f"fig8_breakdown_rmat{scale}_{parts}parts", t_full,
+         f"compute={t_comp/t_full*100:.0f}%|"
+         f"communication={t_comm/t_full*100:.0f}%|"
+         f"beta={pg.beta_with_reduction:.3f}")

@@ -1,0 +1,49 @@
+"""§Roofline: aggregate the dry-run JSONs into the per-cell roofline table.
+
+For each (arch × shape × mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, and per-device memory — the
+deliverable (g) table.  Also regenerates EXPERIMENTS.md §Dry-run/§Roofline
+when invoked with --write-experiments (see experiments_writer.py).
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(mesh: str = "single"):
+    cells = []
+    for f in sorted(glob.glob(str(DRYRUN_DIR / f"*__{mesh}.json"))):
+        rec = json.load(open(f))
+        if rec.get("ok") and "roofline" in rec:
+            cells.append(rec)
+    return cells
+
+
+def run():
+    cells = load_cells("single")
+    if not cells:
+        emit("roofline_missing", 0.0,
+             "run: python -m repro.launch.dryrun --all --mesh both")
+        return
+    for rec in cells:
+        r = rec["roofline"]
+        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        frac = max(r["compute_s"], r["memory_s"], r["collective_s"]) / \
+            max(total, 1e-30)
+        emit(f"roofline_{rec['arch']}_{rec['shape']}", total,
+             f"dominant={r['dominant']}|compute={r['compute_s']:.2e}s|"
+             f"memory={r['memory_s']:.2e}s|"
+             f"collective={r['collective_s']:.2e}s|"
+             f"useful_ratio={r['useful_ratio']:.2f}|"
+             f"peak_mem={rec['memory_analysis']['peak_estimate_gib']}GiB")
+    # summary: dominant-term histogram
+    from collections import Counter
+    hist = Counter(rec["roofline"]["dominant"] for rec in cells)
+    emit("roofline_summary", 0.0,
+         "|".join(f"{k}={v}" for k, v in sorted(hist.items())))

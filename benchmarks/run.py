@@ -1,0 +1,55 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).  The graph
+benchmarks run reduced workloads on the CPU backend (absolute rates are not
+TPU numbers — DESIGN.md §6); the roofline section reads the 512-device
+dry-run artifacts.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    import benchmarks.perf_model_predictions as b_model
+    import benchmarks.beta_reduction as b_beta
+    import benchmarks.model_accuracy as b_acc
+    import benchmarks.partitioning_sweep as b_part
+    import benchmarks.phase_breakdown as b_phase
+    import benchmarks.scalability as b_scale
+    import benchmarks.framework_compare as b_frame
+    import benchmarks.memory_footprint as b_mem
+    import benchmarks.roofline as b_roof
+
+    sections = [
+        ("fig2_fig3_perf_model", b_model.run),
+        ("fig4_beta_reduction", b_beta.run),
+        ("fig7_table3_model_accuracy", b_acc.run),
+        ("fig8_phase_breakdown", b_phase.run),
+        ("fig9_partitioning", b_part.run),
+        ("fig23_scalability", b_scale.run),
+        ("table4_framework_compare", b_frame.run),
+        ("table5_memory_footprint", b_mem.run),
+        ("roofline_40cells", b_roof.run),
+    ]
+    failures = 0
+    for name, fn in sections:
+        print(f"# --- {name} ---", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            print(f"{name},ERROR,", flush=True)
+            traceback.print_exc()
+        print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

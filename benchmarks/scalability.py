@@ -1,0 +1,28 @@
+"""Paper Fig. 23: scalability across graph sizes and engine configurations.
+
+The paper sweeps RMAT27→30 on 1S/2S/1S1G/2S1G/2S2G.  CPU-container analogue:
+graph sizes RMAT12→16, configurations = {sparse-only (xS), hybrid
+dense+sparse (xSyG)} × {1, 2 partitions}.  Rates are CPU-backend numbers —
+relative scaling is the signal, as absolute TPU rates come from §Roofline.
+"""
+from __future__ import annotations
+
+from repro.core.hybrid import degree_split, hybrid_pagerank
+from benchmarks.common import emit, timeit, workload
+
+
+def run():
+    for scale in (12, 13, 14):
+        g = workload(scale, "rmat")
+        configs = {
+            "sparse_only(2S)": 0,
+            "hybrid(2S1G)": max(256, g.num_vertices // 16),
+            "hybrid_big(2S2G)": max(512, g.num_vertices // 8),
+        }
+        for name, k in configs.items():
+            hg = degree_split(g, k)
+            t = timeit(lambda hg=hg: hybrid_pagerank(hg, num_iterations=3),
+                       iters=3)
+            rate = 3 * g.num_edges / t
+            emit(f"fig23_pagerank_rmat{scale}_{name}", t,
+                 f"TEPS={rate/1e6:.2f}M|dense_frac={hg.dense_fraction:.2f}")

@@ -1,0 +1,60 @@
+"""Node-failure drill: inject failures mid-training, verify the restart path
+reproduces the failure-free trajectory bit-exactly (seekable data + atomic
+checkpoints).
+
+  PYTHONPATH=src python examples/fault_tolerance_drill.py
+"""
+import shutil
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import TokenStream
+from repro.models import api
+from repro.optim.adamw import AdamW
+from repro.runtime import FaultInjector, run_with_restarts
+from repro import configs
+
+cfg = configs.get_smoke("tinyllama-1.1b")
+model = api.build(cfg)
+opt = AdamW(learning_rate=1e-3)
+step_fn = jax.jit(api.make_train_step(model, opt, microbatches=1))
+stream = TokenStream(cfg, batch=8, seq=64)
+
+
+def make_runner(injector=None):
+    def one_step(step, state):
+        if injector:
+            injector.maybe_fail(step)
+        p, o, m = step_fn(state["params"], state["opt_state"],
+                          stream.batch_at(step))
+        return {"params": p, "opt_state": o}, {k: float(v)
+                                               for k, v in m.items()}
+    return one_step
+
+
+def fresh_state():
+    params = model.init(jax.random.key(0))
+    return {"params": params, "opt_state": opt.init(params)}
+
+
+for d in ("/tmp/ft_clean", "/tmp/ft_faulty"):
+    shutil.rmtree(d, ignore_errors=True)
+
+clean, _ = run_with_restarts(make_runner(), fresh_state(), 30,
+                             CheckpointManager("/tmp/ft_clean"),
+                             checkpoint_every=10)
+
+injector = FaultInjector({12, 23})
+faulty, summary = run_with_restarts(make_runner(injector), fresh_state(), 30,
+                                    CheckpointManager("/tmp/ft_faulty"),
+                                    checkpoint_every=10)
+print(f"injected failures: {summary['failures']} at "
+      f"{[r['step'] for r in summary['restarts']]}")
+
+for (pa, a), (pb, b) in zip(
+        jax.tree_util.tree_leaves_with_path(clean["params"]),
+        jax.tree_util.tree_leaves_with_path(faulty["params"])):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=str(pa))
+print("restarted run is BIT-IDENTICAL to the failure-free run ✓")

@@ -1,0 +1,11 @@
+from repro.algorithms.bfs import bfs, bfs_reference
+from repro.algorithms.pagerank import pagerank, pagerank_reference
+from repro.algorithms.sssp import sssp, sssp_reference
+from repro.algorithms.cc import connected_components, cc_reference
+from repro.algorithms.bc import betweenness_centrality, bc_reference
+
+__all__ = [
+    "bfs", "bfs_reference", "pagerank", "pagerank_reference", "sssp",
+    "sssp_reference", "connected_components", "cc_reference",
+    "betweenness_centrality", "bc_reference",
+]

@@ -1,0 +1,162 @@
+"""Betweenness Centrality — Brandes (paper §7.2, Fig. 18).
+
+Two BSP cycles, exactly the paper's structure:
+
+- **Forward** (over out-edges): level-synchronous BFS that also accumulates
+  shortest-path counts: frontier vertices push ``sigma`` (sum-reduced);
+  undiscovered receivers adopt ``dist = level + 1`` and ``sigma = acc``.
+  Because the reduction is a sum over *all* same-level contributions in one
+  superstep, the paper's ``atomicAdd(numSPs)`` becomes a segment_sum.
+- **Backward** (over *reverse* edges, the paper's two-way pull): vertices at
+  ``dist == level+1`` send ``(1 + delta) / sigma`` to their predecessors;
+  vertices at ``dist == level`` set ``delta = sigma * acc`` and fold it into
+  the bc score.  This runs levels ``max_level-1 .. 1``.
+
+Single-source BC, as in the paper's evaluation (Table 4: "for a single
+source").  ``bc_exact`` loops over all sources for small-graph validation.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bsp import MIN, SUM, BSPEngine, VertexProgram, gather_src
+from repro.core.graph import CSRGraph
+
+
+# --------------------------- forward cycle ---------------------------------
+
+def _fwd_edge(state, src, weight, step):
+    del weight
+    dist = gather_src(state["dist"], src)
+    sigma = gather_src(state["sigma"], src)
+    on_frontier = dist == step.astype(jnp.float32)
+    return jnp.where(on_frontier, sigma, 0.0)
+
+
+def _fwd_apply(state, acc, step):
+    dist, sigma = state["dist"], state["sigma"]
+    newly = jnp.isinf(dist) & (acc > 0)
+    new_dist = jnp.where(newly, step.astype(jnp.float32) + 1.0, dist)
+    new_sigma = jnp.where(newly, acc, sigma)
+    state = dict(state, dist=new_dist, sigma=new_sigma)
+    return state, ~jnp.any(newly)
+
+
+FORWARD_PROGRAM = VertexProgram(combine=SUM, edge_fn=_fwd_edge,
+                                apply_fn=_fwd_apply)
+
+
+# --------------------------- backward cycle --------------------------------
+
+def _bwd_edge(state, src, weight, step):
+    del weight
+    # level being processed: max_level - 1 - step (per-partition scalar).
+    level = (state["max_level"] - 1.0 - step.astype(jnp.float32))[:, None]
+    dist = gather_src(state["dist"], src)
+    sigma = gather_src(state["sigma"], src)
+    delta = gather_src(state["delta"], src)
+    sending = (dist == level + 1.0) & (sigma > 0)
+    return jnp.where(sending, (1.0 + delta) / jnp.maximum(sigma, 1.0), 0.0)
+
+
+def _bwd_apply(state, acc, step):
+    level = (state["max_level"] - 1.0 - step.astype(jnp.float32))[:, None]
+    at_level = state["dist"] == level
+    new_delta = jnp.where(at_level, state["sigma"] * acc, state["delta"])
+    # Exclude the source (level 0) from its own score, per Brandes.
+    add = jnp.where(at_level & (level > 0), new_delta, 0.0)
+    state = dict(state, delta=new_delta, bc=state["bc"] + add)
+    next_level = state["max_level"][0] - 2.0 - step.astype(jnp.float32)
+    return state, next_level < 1.0
+
+
+BACKWARD_PROGRAM = VertexProgram(combine=SUM, edge_fn=_bwd_edge,
+                                 apply_fn=_bwd_apply, use_reverse=True)
+
+
+def betweenness_centrality(engine: BSPEngine,
+                           source: int) -> Tuple[np.ndarray, int]:
+    """Single-source BC contribution; returns (bc [n], total supersteps)."""
+    pg = engine.pg
+    if pg.rev is None:
+        raise ValueError("BC needs reverse edges "
+                         "(partition with include_reverse=True)")
+    P, V = pg.num_parts, pg.v_max
+    dist0 = np.full((P, V), np.inf, dtype=np.float32)
+    sigma0 = np.zeros((P, V), dtype=np.float32)
+    sp = int(pg.assignment.part_of[source])
+    sl = int(pg.assignment.local_id[source])
+    dist0[sp, sl], sigma0[sp, sl] = 0.0, 1.0
+
+    fwd_state, fwd_steps = engine.run(FORWARD_PROGRAM, {
+        "dist": jnp.asarray(dist0), "sigma": jnp.asarray(sigma0)})
+
+    dist = np.asarray(fwd_state["dist"])
+    finite = dist[np.isfinite(dist)]
+    max_level = float(finite.max()) if len(finite) else 0.0
+
+    bwd_state = {
+        "dist": fwd_state["dist"], "sigma": fwd_state["sigma"],
+        "delta": jnp.zeros((P, V), dtype=jnp.float32),
+        "bc": jnp.zeros((P, V), dtype=jnp.float32),
+        "max_level": jnp.full((P,), max_level, dtype=jnp.float32),
+    }
+    if max_level >= 2.0:
+        bwd_state, bwd_steps = engine.run(BACKWARD_PROGRAM, bwd_state)
+    else:
+        bwd_steps = 0
+    bc = pg.gather_global(np.asarray(bwd_state["bc"]))
+    return bc, int(fwd_steps) + int(bwd_steps)
+
+
+def bc_reference(g: CSRGraph, source: int) -> np.ndarray:
+    """Pure-numpy Brandes oracle (single source, unweighted)."""
+    n = g.num_vertices
+    dist = np.full(n, np.inf)
+    sigma = np.zeros(n)
+    dist[source], sigma[source] = 0.0, 1.0
+    frontier = [source]
+    levels = [frontier]
+    d = 0
+    while frontier:
+        nxt = {}
+        for v in frontier:
+            for w in g.col[g.row_ptr[v]: g.row_ptr[v + 1]]:
+                w = int(w)
+                if np.isinf(dist[w]):
+                    nxt[w] = True
+                    dist[w] = d + 1
+        for v in frontier:
+            for w in g.col[g.row_ptr[v]: g.row_ptr[v + 1]]:
+                w = int(w)
+                if dist[w] == d + 1:
+                    sigma[w] += sigma[v]
+        frontier = list(nxt)
+        if frontier:
+            levels.append(frontier)
+        d += 1
+    delta = np.zeros(n)
+    bc = np.zeros(n)
+    for lvl in reversed(range(1, len(levels))):
+        for v in levels[lvl - 1]:
+            acc = 0.0
+            for w in g.col[g.row_ptr[v]: g.row_ptr[v + 1]]:
+                w = int(w)
+                if dist[w] == lvl and sigma[w] > 0:
+                    acc += (1.0 + delta[w]) / sigma[w]
+            delta[v] = sigma[v] * acc
+            if lvl - 1 > 0:
+                bc[v] += delta[v]
+    return bc.astype(np.float32)
+
+
+def bc_exact(engine: BSPEngine) -> np.ndarray:
+    """All-sources exact BC (small graphs only)."""
+    total = np.zeros(engine.pg.num_vertices, dtype=np.float64)
+    for s in range(engine.pg.num_vertices):
+        contrib, _ = betweenness_centrality(engine, s)
+        total += contrib
+    return total.astype(np.float32)

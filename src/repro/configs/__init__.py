@@ -1,0 +1,51 @@
+"""Architecture registry: one module per assigned architecture.
+
+Each module exports ``CONFIG`` (the exact public configuration) and
+``SMOKE_CONFIG`` (a reduced same-family config for CPU smoke tests).
+"""
+import importlib
+
+ARCHS = [
+    "seamless_m4t_large_v2",
+    "deepseek_67b",
+    "command_r_plus_104b",
+    "tinyllama_1_1b",
+    "gemma3_4b",
+    "olmoe_1b_7b",
+    "qwen3_moe_235b_a22b",
+    "internvl2_26b",
+    "xlstm_125m",
+    "zamba2_2_7b",
+]
+
+# public ids (spec spelling) → module names
+ARCH_IDS = {
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "deepseek-67b": "deepseek_67b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "gemma3-4b": "gemma3_4b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "internvl2-26b": "internvl2_26b",
+    "xlstm-125m": "xlstm_125m",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "totem-rmat": "totem_rmat",
+}
+
+
+def get(arch_id: str):
+    """Load CONFIG by public id (e.g. --arch deepseek-67b)."""
+    mod = importlib.import_module(
+        f"repro.configs.{ARCH_IDS[arch_id]}")
+    return mod.CONFIG
+
+
+def get_smoke(arch_id: str):
+    mod = importlib.import_module(
+        f"repro.configs.{ARCH_IDS[arch_id]}")
+    return mod.SMOKE_CONFIG
+
+
+def all_ids():
+    return [k for k in ARCH_IDS if k != "totem-rmat"]

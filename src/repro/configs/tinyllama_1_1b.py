@@ -1,0 +1,16 @@
+"""tinyllama-1.1b [dense] — llama2-arch small [arXiv:2401.02385; hf].
+
+22L d_model=2048 32H (GQA kv=4) d_ff=5632 vocab=32000.  Pure full attention
+→ long_500k cell skipped (DESIGN.md §4).
+"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="tinyllama-1.1b", family="dense",
+    n_layers=22, d_model=2048, n_heads=32, n_kv_heads=4,
+    d_ff=5632, vocab=32000, head_dim=64,
+    tie_embeddings=False,
+    microbatches=4,
+)
+
+SMOKE_CONFIG = CONFIG.reduced(tie_embeddings=True)

@@ -1,0 +1,31 @@
+"""The paper's own workload configs (Table 2): RMAT scale-free graphs.
+
+RMAT parameters (A,B,C) = (0.57, 0.19, 0.19), average degree 16 — exactly
+the paper's Graph500-style generator.  Scales here are reduced for the
+CPU-only container (the paper's RMAT27–30 → our RMAT16–22 for runnable
+benchmarks; the dry-run lowers the full-scale partition shapes without
+allocation).
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphWorkload:
+    name: str
+    scale: int               # |V| = 2^scale
+    edge_factor: int = 16
+    kind: str = "rmat"       # rmat | uniform
+
+
+# Reduced-scale stand-ins for the paper's Table 2 workloads.
+RMAT_SMALL = GraphWorkload("rmat18", 18)        # benchmark default
+RMAT_MEDIUM = GraphWorkload("rmat20", 20)
+RMAT_LARGE = GraphWorkload("rmat22", 22)
+UNIFORM_SMALL = GraphWorkload("uniform18", 18, kind="uniform")
+
+# Full-scale (dry-run / partition-shape math only; never allocated).
+RMAT28 = GraphWorkload("rmat28", 28)
+RMAT30 = GraphWorkload("rmat30", 30)
+
+CONFIG = RMAT_SMALL
+SMOKE_CONFIG = GraphWorkload("rmat10", 10)

@@ -1,0 +1,7 @@
+# The paper's primary contribution: the TOTEM hybrid graph engine in JAX —
+# CSR partitioning, the hybrid performance model, and the BSP runtime.
+from repro.core import graph, partition, perf_model
+from repro.core.bsp import BSPEngine, DistributedBSPEngine, VertexProgram
+
+__all__ = ["graph", "partition", "perf_model", "BSPEngine",
+           "DistributedBSPEngine", "VertexProgram"]

@@ -1,0 +1,261 @@
+"""The TOTEM BSP engine in JAX (paper §4).
+
+Each BSP superstep is exactly the paper's cycle:
+
+  1. **compute**  — every partition runs the algorithm's edge kernel on its
+     edges; messages to local destinations and to outbox slots are reduced in
+     a single ``segment_min``/``segment_sum`` over the extended destination
+     index (source-side message reduction, §3.4, is implicit here — multiple
+     local edges to the same remote vertex share one outbox slot).
+  2. **communicate** — outboxes are exchanged with the symmetric inboxes of
+     the peer partitions (paper Fig. 6).  Locally this is a transpose;
+     distributed it is an ``all_to_all`` over the mesh axis (ICI = the PCI-E
+     analogue).
+  3. **scatter** — the user combine (``alg_scatter``) folds inbox messages
+     into local vertex state.
+  4. **apply + vote** — per-vertex update; all partitions vote to finish
+     (paper "Termination").
+
+The same superstep body runs in two modes:
+  - *local*: all P partitions stacked on one device (tests, small graphs);
+  - *distributed*: partitions sharded over a mesh axis with ``shard_map``
+    (one partition per device; this is the multi-pod scale-out path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.partition import EdgeArrays, PartitionedGraph
+
+Array = jax.Array
+State = Any  # pytree of [Pl, v_max]-leading arrays + scalars
+
+SUM = "sum"
+MIN = "min"
+_IDENTITY = {SUM: 0.0, MIN: jnp.inf}
+_SEGMENT_OP = {SUM: jax.ops.segment_sum, MIN: jax.ops.segment_min}
+_COMBINE = {SUM: jnp.add, MIN: jnp.minimum}
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexProgram:
+    """An algorithm in TOTEM's callback form (paper Fig. 5).
+
+    ``edge_fn(state, src, weight, step) -> msgs [Pl, e_max]`` — the per-edge
+    part of ``alg_compute`` (messages for inactive sources must be the
+    combine identity).
+    ``apply_fn(state, acc, step) -> (new_state, finished)`` — the per-vertex
+    part of ``alg_compute`` + ``alg_scatter``'s state update; ``acc`` is the
+    fully-reduced [Pl, v_max] accumulator (local + remote contributions).
+    ``finished`` is this shard's vote to terminate.
+    """
+
+    combine: str
+    edge_fn: Callable[[State, Array, Optional[Array], Array], Array]
+    apply_fn: Callable[[State, Array, Array], Tuple[State, Array]]
+    max_steps: int = 1 << 30
+    use_reverse: bool = False
+
+
+def gather_src(x: Array, src: Array) -> Array:
+    """Fetch per-edge source-vertex state: [Pl, v_max] × [Pl, e_max]."""
+    return jnp.take_along_axis(x, src, axis=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Dims:
+    num_parts: int       # global partition count P
+    v_max: int
+    e_max: int
+    o_max: int
+
+    @property
+    def seg(self) -> int:  # extended segment space per partition
+        return self.v_max + 1 + self.num_parts * self.o_max
+
+
+def _superstep(dims: _Dims, program: VertexProgram, edges: dict,
+               exchange: Callable[[Array], Array],
+               all_finished: Callable[[Array], Array],
+               state: State, step: Array) -> Tuple[State, Array]:
+    """One BSP superstep over the local shard of partitions."""
+    combine = program.combine
+    ident = _IDENTITY[combine]
+    seg_op = _SEGMENT_OP[combine]
+    pl = edges["src"].shape[0]  # local partition count
+
+    # -- compute: per-edge messages, reduced over extended destinations -----
+    msgs = program.edge_fn(state, edges["src"], edges.get("weight"), step)
+    offs = jnp.arange(pl, dtype=jnp.int32)[:, None] * dims.seg
+    ids = (edges["dst_ext"] + offs).ravel()
+    acc = seg_op(msgs.ravel(), ids, num_segments=pl * dims.seg)
+    acc = acc.reshape(pl, dims.seg)
+    local_acc = acc[:, : dims.v_max]
+    outbox = acc[:, dims.v_max + 1:].reshape(pl, dims.num_parts, dims.o_max)
+
+    # -- communicate: outbox -> symmetric inbox (paper Fig. 6) --------------
+    inbox = exchange(outbox)  # [pl, P, o_max]: inbox[p, q] = from partition q
+
+    # -- scatter: combine inbox messages into local vertex accumulator ------
+    in_ids = (edges["inbox_dst"]
+              + (jnp.arange(pl, dtype=jnp.int32) * (dims.v_max + 1))[:, None,
+                                                                     None])
+    racc = seg_op(inbox.ravel(), in_ids.ravel(),
+                  num_segments=pl * (dims.v_max + 1))
+    racc = racc.reshape(pl, dims.v_max + 1)[:, : dims.v_max]
+    total = _COMBINE[combine](local_acc, racc)
+
+    # -- apply + vote --------------------------------------------------------
+    new_state, finished = program.apply_fn(state, total, step)
+    del ident
+    return new_state, all_finished(finished)
+
+
+def _edges_dict(ea: EdgeArrays) -> dict:
+    d = dict(src=jnp.asarray(ea.src), dst_ext=jnp.asarray(ea.dst_ext),
+             inbox_dst=jnp.asarray(ea.inbox_dst))
+    if ea.weight is not None:
+        d["weight"] = jnp.asarray(ea.weight)
+    return d
+
+
+class BSPEngine:
+    """Single-device engine: all P partitions stacked on axis 0."""
+
+    def __init__(self, pg: PartitionedGraph):
+        self.pg = pg
+        self.dims = _Dims(pg.num_parts, pg.v_max, pg.fwd.e_max, pg.fwd.o_max)
+        self._fwd = _edges_dict(pg.fwd)
+        self._rev = _edges_dict(pg.rev) if pg.rev is not None else None
+        self.out_deg = jnp.asarray(pg.out_deg)
+        self.vertex_mask = jnp.asarray(pg.vertex_mask)
+
+    # Local exchange: outbox[p, q] -> inbox[q, p] is a transpose.
+    @staticmethod
+    def _exchange(outbox: Array) -> Array:
+        return outbox.transpose(1, 0, 2)
+
+    def edges_for(self, program: VertexProgram) -> dict:
+        if program.use_reverse:
+            if self._rev is None:
+                raise ValueError("program needs reverse edges; partition with "
+                                 "include_reverse=True")
+            rev = dict(self._rev)
+            # reverse direction may have different e/o_max; dims adjust below
+            return rev
+        return self._fwd
+
+    def dims_for(self, edges: dict) -> _Dims:
+        return _Dims(self.dims.num_parts, self.dims.v_max,
+                     edges["src"].shape[1], edges["inbox_dst"].shape[2])
+
+    @functools.partial(jax.jit, static_argnums=(0, 1))
+    def run(self, program: VertexProgram, state: State) -> Tuple[State, Array]:
+        """Run supersteps until all partitions vote finish (lax.while_loop)."""
+        edges = self.edges_for(program)
+        dims = self.dims_for(edges)
+        step_fn = functools.partial(_superstep, dims, program, edges,
+                                    self._exchange, jnp.all)
+
+        def body(carry):
+            state, step, _ = carry
+            state, fin = step_fn(state, step)
+            return state, step + 1, fin
+
+        def cond(carry):
+            _, step, fin = carry
+            return jnp.logical_and(~fin, step < program.max_steps)
+
+        state, steps, _ = jax.lax.while_loop(
+            cond, body, (state, jnp.int32(0), jnp.bool_(False)))
+        return state, steps
+
+    @functools.partial(jax.jit, static_argnums=(0, 1, 2))
+    def run_fixed(self, program: VertexProgram, num_steps: int,
+                  state: State) -> State:
+        """Fixed-iteration algorithms (PageRank)."""
+        edges = self.edges_for(program)
+        dims = self.dims_for(edges)
+        step_fn = functools.partial(_superstep, dims, program, edges,
+                                    self._exchange, jnp.all)
+
+        def body(i, state):
+            state, _ = step_fn(state, i)
+            return state
+
+        return jax.lax.fori_loop(0, num_steps, body, state)
+
+
+class DistributedBSPEngine(BSPEngine):
+    """Partitions sharded over a mesh axis with shard_map.
+
+    One (or more) partition(s) per device; the exchange phase becomes an
+    ``all_to_all`` over the mesh axis — the ICI analogue of the paper's PCI-E
+    outbox/inbox copy.  The termination vote is a global AND (psum).
+    """
+
+    def __init__(self, pg: PartitionedGraph, mesh: Mesh, axis: str = "parts"):
+        super().__init__(pg)
+        if pg.num_parts % mesh.shape[axis]:
+            raise ValueError("num_parts must divide mesh axis size")
+        self.mesh = mesh
+        self.axis = axis
+
+    def _dist_exchange(self, outbox: Array) -> Array:
+        # outbox: [pl, P, o_max] -> split peer axis across devices, concat the
+        # received blocks on the local-partition axis, then restore layout.
+        pl = outbox.shape[0]
+        n_dev = self.mesh.shape[self.axis]
+        # regroup peer axis as (device, local_partition)
+        ob = outbox.reshape(pl, n_dev, pl, outbox.shape[-1])
+        recv = jax.lax.all_to_all(ob, self.axis, split_axis=1, concat_axis=0,
+                                  tiled=False)
+        # recv: [n_dev, pl, pl, o] with recv[q, my_p?]  — reorder to
+        # inbox[pl_local, P_global, o]
+        recv = recv.transpose(2, 0, 1, 3)  # [pl_dst, n_dev, pl_src, o]
+        return recv.reshape(pl, n_dev * pl, outbox.shape[-1])
+
+    def _dist_finished(self, fin: Array) -> Array:
+        not_done = jnp.sum(jnp.logical_not(fin).astype(jnp.int32))
+        return jax.lax.psum(not_done, self.axis) == 0
+
+    def run(self, program: VertexProgram, state: State) -> Tuple[State, Array]:
+        edges = self.edges_for(program)
+        dims = self.dims_for(edges)
+        spec = P(self.axis)
+        sharding = jax.sharding.NamedSharding(self.mesh, spec)
+
+        def local_fn(state, edges):
+            step_fn = functools.partial(_superstep, dims, program, edges,
+                                        self._dist_exchange,
+                                        self._dist_finished)
+
+            def body(carry):
+                st, step, _ = carry
+                st, fin = step_fn(st, step)
+                return st, step + 1, fin
+
+            def cond(carry):
+                _, step, fin = carry
+                return jnp.logical_and(~fin, step < program.max_steps)
+
+            st, steps, _ = jax.lax.while_loop(
+                cond, body, (state, jnp.int32(0), jnp.bool_(False)))
+            return st, steps
+
+        sharded = jax.shard_map(
+            local_fn, mesh=self.mesh,
+            in_specs=(jax.tree.map(lambda _: spec, state),
+                      jax.tree.map(lambda _: spec, edges)),
+            out_specs=(jax.tree.map(lambda _: spec, state), P()),
+            check_vma=False)
+        state = jax.device_put(state, sharding)
+        edges = jax.tree.map(lambda x: jax.device_put(x, sharding), edges)
+        return jax.jit(sharded)(state, edges)

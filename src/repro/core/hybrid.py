@@ -1,0 +1,125 @@
+"""The hybrid two-engine step — TOTEM's CPU/GPU split, TPU-native.
+
+The paper assigns the few high-degree vertices to the CPU (cache-friendly)
+and the many low-degree vertices to the GPU (latency-hiding) — §6.2.  A TPU
+chip is homogeneous silicon but has two *execution paths* with exactly the
+same duality:
+
+  - the **MXU** (systolic matmul): the high-degree block's adjacency is dense
+    enough that SpMV-as-GEMM wins (kernels/dense_spmv);
+  - the **VPU + HBM streaming** path: the low-degree remainder has a tight
+    degree bound, ideal for ELLPACK row-block streaming (kernels/ell_spmv).
+
+``degree_split`` plays the role of the paper's HIGH partitioning: vertices
+are ranked by (in+out) degree, the top-K become the dense block H, and every
+edge inside H×H moves to the dense engine; the rest stays sparse.
+
+The perf model (perf_model.hybrid_makespan_tpu) predicts when the split wins,
+the same role Eq. 4 plays in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import CSRGraph, from_edge_list
+from repro.core import perf_model
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class HybridGraph:
+    """Degree-split graph: dense H×H block + ELL remainder (pull form)."""
+
+    num_vertices: int
+    num_edges: int
+    k_dense: int                 # |H| (0 → pure sparse)
+    perm: np.ndarray             # new id -> old id (degree-descending)
+    inv_perm: np.ndarray         # old id -> new id
+    dense_block: np.ndarray      # [K, K] f32 adjacency (H×H edges)
+    ell_col: np.ndarray          # [V, kmax] int32 (pull: in-neighbours)
+    ell_val: np.ndarray          # [V, kmax] f32
+    out_deg: np.ndarray          # [V] f32 in new id space (true out-degree)
+    dense_edges: int             # edges handled by the MXU path
+    sparse_edges: int            # edges handled by the ELL path
+
+    @property
+    def dense_density(self) -> float:
+        return self.dense_edges / max(self.k_dense ** 2, 1)
+
+    @property
+    def dense_fraction(self) -> float:
+        return self.dense_edges / max(self.num_edges, 1)
+
+    def predicted_makespan(self, num_chips: int = 1) -> dict:
+        return perf_model.hybrid_makespan_tpu(
+            self.dense_edges, self.dense_density, self.sparse_edges,
+            boundary_slots=0, num_chips=num_chips)
+
+
+def degree_split(g: CSRGraph, k_dense: int) -> HybridGraph:
+    """Split ``g``: top-``k_dense`` degree vertices → dense block."""
+    total_deg = g.out_degrees() + g.in_degrees()
+    perm = np.argsort(-total_deg, kind="stable")       # new -> old
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    src = inv[g.edge_sources()]
+    dst = inv[g.col]
+
+    in_h = (src < k_dense) & (dst < k_dense)
+    dense = np.zeros((k_dense, k_dense), dtype=np.float32)
+    if k_dense:
+        np.add.at(dense, (src[in_h], dst[in_h]), 1.0)
+
+    rest = ~in_h
+    g_rest = from_edge_list(src[rest], dst[rest], g.num_vertices)
+    col, val, _ = kops.csr_to_ell(g_rest, combine="sum", transpose=True)
+
+    deg = g.out_degrees().astype(np.float32)[perm]
+    return HybridGraph(
+        num_vertices=g.num_vertices, num_edges=g.num_edges, k_dense=k_dense,
+        perm=perm, inv_perm=inv, dense_block=dense, ell_col=col, ell_val=val,
+        out_deg=deg, dense_edges=int(in_h.sum()), sparse_edges=int(rest.sum()))
+
+
+def hybrid_pagerank(hg: HybridGraph, num_iterations: int = 20,
+                    damping: float = 0.85,
+                    interpret: Optional[bool] = None) -> np.ndarray:
+    """PageRank where H×H runs on the MXU path, the rest on the ELL path.
+
+    Returns ranks in the *original* vertex id order.
+    """
+    n = hg.num_vertices
+    k = hg.k_dense
+    dense = jnp.asarray(hg.dense_block)
+    col = jnp.asarray(hg.ell_col)
+    val = jnp.asarray(hg.ell_val)
+    inv_deg = jnp.asarray(np.where(hg.out_deg > 0,
+                                   1.0 / np.maximum(hg.out_deg, 1.0), 0.0))
+    delta = (1.0 - damping) / n
+
+    @jax.jit
+    def step(rank):
+        contrib = rank * inv_deg
+        # sparse path: pull-reduce over the ELL remainder
+        x = jnp.concatenate([contrib, jnp.zeros((1,), contrib.dtype)])
+        y = kops.ell_spmv_op(col, val, x, combine="sum",
+                             interpret=interpret)
+        # dense path: MXU GEMM over the high-degree block
+        if k:
+            yh = kops.dense_spmv_op(contrib[None, :k], dense,
+                                    interpret=interpret)[0]
+            y = y.at[:k].add(yh)
+        return delta + damping * y
+
+    rank = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+    for _ in range(num_iterations):
+        rank = step(rank)
+    out = np.asarray(rank)
+    result = np.empty_like(out)
+    result[hg.perm] = out          # back to original id order
+    return result

@@ -1,0 +1,304 @@
+"""Graph partitioning for hybrid/multi-shard processing (paper §4.3, §6).
+
+Implements the paper's partition data layout in a JAX-friendly, fixed-shape
+form:
+
+- Each vertex is assigned to exactly one partition; vertex ids are re-labelled
+  into a per-partition local space (paper Fig. 6).
+- Per-partition CSR edges are flattened to edge-parallel ``(src_local,
+  dst_ext)`` pairs.  ``dst_ext`` is an *extended* destination index: local
+  destinations map to ``[0, v_max)``; boundary (remote) destinations map to an
+  **outbox slot** ``v_max + 1 + peer * o_max + slot`` — exactly the paper's
+  trick of storing the outbox index in the edge array (§4.3.1).
+- The outbox has one slot per *unique* (source-partition, remote-vertex) pair:
+  source-side message reduction (§3.4) therefore happens for free inside a
+  single ``segment_min`` / ``segment_sum`` over ``dst_ext``.
+- Outboxes/inboxes are symmetric (paper Fig. 6): ``inbox_dst[p, q, s]`` is the
+  local id on ``p`` of the vertex that receives ``outbox[q, p, s]``.
+
+Partitioning strategies (paper §6): RAND, HIGH (high-degree vertices to
+partition 0 — the "CPU" / dense-path analogue), LOW (low-degree to partition
+0).  The strategy is O(|V| log |V|) via sorting, matching the paper's cost
+analysis (§6.2).
+
+All of this is numpy preprocessing; the returned arrays are handed to JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.graph import CSRGraph
+
+RAND = "rand"
+HIGH = "high"
+LOW = "low"
+STRATEGIES = (RAND, HIGH, LOW)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass
+class VertexAssignment:
+    """Vertex → (partition, local id) mapping plus the inverse."""
+
+    num_parts: int
+    part_of: np.ndarray     # [n] int32, partition of each global vertex
+    local_id: np.ndarray    # [n] int32, local id of each global vertex
+    l2g: List[np.ndarray]   # per-partition local → global
+
+    @property
+    def part_sizes(self) -> np.ndarray:
+        return np.array([len(x) for x in self.l2g])
+
+
+@dataclasses.dataclass
+class EdgeArrays:
+    """Fixed-shape per-partition edge-parallel arrays (stacked on axis 0)."""
+
+    src: np.ndarray         # [P, e_max] int32 local source vertex
+    dst_ext: np.ndarray     # [P, e_max] int32 extended destination index
+    weight: Optional[np.ndarray]  # [P, e_max] float32 or None
+    edge_mask: np.ndarray   # [P, e_max] bool (False for padding)
+    outbox_dst: np.ndarray  # [P, P, o_max] int32 local id on the *peer*
+    outbox_mask: np.ndarray  # [P, P, o_max] bool
+    inbox_dst: np.ndarray   # [P, P, o_max] = outbox_dst.transpose(1, 0, 2)
+    num_edges: np.ndarray   # [P] true edge counts
+
+    @property
+    def e_max(self) -> int:
+        return self.src.shape[1]
+
+    @property
+    def o_max(self) -> int:
+        return self.outbox_dst.shape[2]
+
+
+@dataclasses.dataclass
+class PartitionedGraph:
+    """A partitioned graph ready for the BSP engine."""
+
+    num_parts: int
+    num_vertices: int
+    num_edges: int
+    v_max: int                       # padded vertices per partition
+    assignment: VertexAssignment
+    fwd: EdgeArrays                  # out-edges (push direction)
+    rev: Optional[EdgeArrays]        # in-edges (pull / BC backward)
+    out_deg: np.ndarray              # [P, v_max] float32 true global out-degree
+    vertex_mask: np.ndarray          # [P, v_max] bool
+    # --- partition quality statistics (paper Fig. 4) ---
+    alpha: np.ndarray                # [P] share of edges per partition
+    beta_no_reduction: float         # boundary edges / |E|
+    beta_with_reduction: float       # outbox slots / |E|  (paper §3.4)
+
+    @property
+    def seg_count(self) -> int:
+        """Extended segment space: v_max locals + 1 sink + P*o_max outbox."""
+        return self.v_max + 1 + self.num_parts * self.fwd.o_max
+
+    def gather_global(self, per_part: np.ndarray) -> np.ndarray:
+        """Collect a [P, v_max] per-partition state into global [n] order."""
+        out = np.empty(self.num_vertices, dtype=per_part.dtype)
+        for p, l2g in enumerate(self.assignment.l2g):
+            out[l2g] = per_part[p, : len(l2g)]
+        return out
+
+    def scatter_global(self, global_vals: np.ndarray,
+                       fill) -> np.ndarray:
+        """Distribute a global [n] array into [P, v_max] partition layout."""
+        out = np.full((self.num_parts, self.v_max), fill,
+                      dtype=np.asarray(global_vals).dtype)
+        for p, l2g in enumerate(self.assignment.l2g):
+            out[p, : len(l2g)] = global_vals[l2g]
+        return out
+
+
+def assign_vertices(g: CSRGraph, num_parts: int, strategy: str = RAND,
+                    cpu_edge_fraction: Optional[float] = None,
+                    seed: int = 0) -> VertexAssignment:
+    """Assign vertices to partitions (paper §6.2/§6.3.1).
+
+    ``cpu_edge_fraction`` is the paper's α: the share of *edges* kept on
+    partition 0 (the bottleneck / "CPU" partition).  The remaining edges are
+    split evenly (by edge count) across partitions ``1..P-1``.  When ``None``,
+    edges are split evenly across all partitions.
+    """
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    n = g.num_vertices
+    deg = g.out_degrees()
+    rng = np.random.default_rng(seed)
+    if strategy == RAND:
+        order = rng.permutation(n)
+    elif strategy == HIGH:
+        # High-degree first → partition 0 (stable to keep determinism).
+        order = np.argsort(-deg, kind="stable")
+    else:  # LOW
+        order = np.argsort(deg, kind="stable")
+
+    cum = np.cumsum(deg[order])
+    total = int(cum[-1]) if len(cum) else 0
+    if cpu_edge_fraction is None:
+        targets = [total * (p + 1) / num_parts for p in range(num_parts - 1)]
+    else:
+        rest = (1.0 - cpu_edge_fraction) / max(num_parts - 1, 1)
+        fracs = [cpu_edge_fraction] + [rest] * (num_parts - 1)
+        targets = list(np.cumsum(fracs)[:-1] * total)
+    cuts = np.searchsorted(cum, targets, side="left")
+    bounds = np.concatenate([[0], cuts, [n]]).astype(np.int64)
+
+    part_of = np.empty(n, dtype=np.int32)
+    local_id = np.empty(n, dtype=np.int32)
+    l2g = []
+    for p in range(num_parts):
+        verts = order[bounds[p]: bounds[p + 1]]
+        part_of[verts] = p
+        local_id[verts] = np.arange(len(verts), dtype=np.int32)
+        l2g.append(np.asarray(verts, dtype=np.int64))
+    return VertexAssignment(num_parts, part_of, local_id, l2g)
+
+
+def _build_edge_arrays(g: CSRGraph, asg: VertexAssignment, v_max: int,
+                       align: int) -> EdgeArrays:
+    """Construct the edge-parallel arrays + outbox maps for one direction."""
+    P = asg.num_parts
+    src_g = g.edge_sources()
+    dst_g = g.col
+    sp = asg.part_of[src_g]       # partition of each edge's source
+    dp = asg.part_of[dst_g]       # partition of each edge's destination
+
+    # Unique remote destinations per (src_part, dst_part): the outbox slots.
+    remote_sets: List[List[np.ndarray]] = [[None] * P for _ in range(P)]
+    o_req = 0
+    for p in range(P):
+        for q in range(P):
+            if p == q:
+                remote_sets[p][q] = np.empty(0, dtype=np.int64)
+                continue
+            m = (sp == p) & (dp == q)
+            uniq = np.unique(dst_g[m])
+            remote_sets[p][q] = uniq
+            o_req = max(o_req, len(uniq))
+    o_max = max(_round_up(o_req, align), align)
+
+    e_req = int(np.bincount(sp, minlength=P).max()) if len(sp) else 0
+    e_max = max(_round_up(e_req, align), align)
+
+    src = np.zeros((P, e_max), dtype=np.int32)
+    dst_ext = np.full((P, e_max), v_max, dtype=np.int32)  # default → sink
+    weight = (np.zeros((P, e_max), dtype=np.float32)
+              if g.weights is not None else None)
+    edge_mask = np.zeros((P, e_max), dtype=bool)
+    outbox_dst = np.full((P, P, o_max), v_max, dtype=np.int32)  # pad → sink
+    outbox_mask = np.zeros((P, P, o_max), dtype=bool)
+    num_edges = np.zeros(P, dtype=np.int64)
+
+    for p in range(P):
+        em = sp == p
+        e_src = asg.local_id[src_g[em]].astype(np.int32)
+        e_dst_g = dst_g[em]
+        e_dp = dp[em]
+        ext = np.empty(len(e_src), dtype=np.int32)
+        local = e_dp == p
+        ext[local] = asg.local_id[e_dst_g[local]]
+        for q in range(P):
+            if q == p:
+                continue
+            mq = e_dp == q
+            if not mq.any() and len(remote_sets[p][q]) == 0:
+                continue
+            uniq = remote_sets[p][q]          # sorted by *global* id
+            # Order slots by the peer's local id (paper §4.3.4(i): inboxes
+            # sorted by vertex id for prefetch/cache efficiency on scatter).
+            loc = asg.local_id[uniq]
+            by_local = np.argsort(loc, kind="stable")
+            inv = np.empty_like(by_local)
+            inv[by_local] = np.arange(len(by_local))
+            # Slot of each remote edge destination within the (p,q) outbox.
+            idx = np.searchsorted(uniq, e_dst_g[mq])
+            ext[mq] = v_max + 1 + q * o_max + inv[idx].astype(np.int32)
+            k = len(uniq)
+            outbox_dst[p, q, :k] = loc[by_local]
+            outbox_mask[p, q, :k] = True
+        # Sort edges by extended destination: local edges first, then boundary
+        # — the paper's locality ordering (§4.3.1), and it makes the segment
+        # reduction access pattern monotonic.
+        order = np.argsort(ext, kind="stable")
+        k = len(e_src)
+        src[p, :k] = e_src[order]
+        dst_ext[p, :k] = ext[order]
+        edge_mask[p, :k] = True
+        if weight is not None:
+            weight[p, :k] = g.weights[em][order]
+        num_edges[p] = k
+
+    return EdgeArrays(src=src, dst_ext=dst_ext, weight=weight,
+                      edge_mask=edge_mask, outbox_dst=outbox_dst,
+                      outbox_mask=outbox_mask,
+                      inbox_dst=np.ascontiguousarray(
+                          outbox_dst.transpose(1, 0, 2)),
+                      num_edges=num_edges)
+
+
+def partition(g: CSRGraph, num_parts: int, strategy: str = RAND,
+              cpu_edge_fraction: Optional[float] = None, seed: int = 0,
+              include_reverse: bool = False,
+              align: int = 8) -> PartitionedGraph:
+    """Partition ``g`` into ``num_parts`` fixed-shape partitions."""
+    asg = assign_vertices(g, num_parts, strategy, cpu_edge_fraction, seed)
+    v_max = max(_round_up(int(asg.part_sizes.max()), align), align)
+
+    fwd = _build_edge_arrays(g, asg, v_max, align)
+    rev = (_build_edge_arrays(g.reverse(), asg, v_max, align)
+           if include_reverse else None)
+
+    deg = g.out_degrees().astype(np.float32)
+    out_deg = np.zeros((num_parts, v_max), dtype=np.float32)
+    vertex_mask = np.zeros((num_parts, v_max), dtype=bool)
+    for p, l2g in enumerate(asg.l2g):
+        out_deg[p, : len(l2g)] = deg[l2g]
+        vertex_mask[p, : len(l2g)] = True
+
+    total_e = max(g.num_edges, 1)
+    boundary = int((asg.part_of[g.edge_sources()] !=
+                    asg.part_of[g.col]).sum())
+    slots = int(fwd.outbox_mask.sum())
+    return PartitionedGraph(
+        num_parts=num_parts, num_vertices=g.num_vertices,
+        num_edges=g.num_edges, v_max=v_max, assignment=asg, fwd=fwd, rev=rev,
+        out_deg=out_deg, vertex_mask=vertex_mask,
+        alpha=fwd.num_edges / total_e,
+        beta_no_reduction=boundary / total_e,
+        beta_with_reduction=slots / total_e,
+    )
+
+
+def memory_footprint_bytes(pg: PartitionedGraph, state_bytes: int = 4,
+                           vid_bytes: int = 4,
+                           eid_bytes: int = 4) -> dict:
+    """Per-partition memory footprint, the analogue of paper Table 5.
+
+    Actual-size formula from §4.3.3:
+    ``eid*|Vp| + vid*|Ep| (+ w*|Ep|) + (vid+s)*|Vi| + (vid+s)*|Vo|``.
+    """
+    P = pg.num_parts
+    res = {}
+    w_bytes = 4 if pg.fwd.weight is not None else 0
+    for p in range(P):
+        vp = int(pg.assignment.part_sizes[p])
+        ep = int(pg.fwd.num_edges[p])
+        vo = int(pg.fwd.outbox_mask[p].sum())          # remote vertices we msg
+        vi = int(pg.fwd.outbox_mask[:, p].sum())       # local verts msg'd to
+        res[p] = dict(
+            graph=eid_bytes * vp + (vid_bytes + w_bytes) * ep,
+            outbox=(vid_bytes + state_bytes) * vo,
+            inbox=(vid_bytes + state_bytes) * vi,
+            state=state_bytes * vp,
+        )
+        res[p]["total"] = sum(res[p].values())
+    return res

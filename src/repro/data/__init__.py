@@ -1,0 +1,4 @@
+from repro.data.tokens import TokenStream
+from repro.data.graphs import load_workload
+
+__all__ = ["TokenStream", "load_workload"]

@@ -1,0 +1,16 @@
+"""Graph workload loading (paper Table 2 stand-ins)."""
+from __future__ import annotations
+
+from repro.core.graph import CSRGraph, rmat, uniform
+from repro.configs.totem_rmat import GraphWorkload
+
+
+def load_workload(w: GraphWorkload, seed: int = 1,
+                  weighted: bool = False) -> CSRGraph:
+    if w.kind == "rmat":
+        g = rmat(w.scale, w.edge_factor, seed=seed)
+    elif w.kind == "uniform":
+        g = uniform(w.scale, w.edge_factor, seed=seed)
+    else:
+        raise ValueError(w.kind)
+    return g.with_uniform_weights(seed=seed) if weighted else g

@@ -1,0 +1,103 @@
+"""Flash-attention Pallas kernel (LM-side hot-spot, beyond-paper).
+
+Online-softmax attention with VMEM-resident running (max, denom, acc) state,
+KV blocks streamed HBM→VMEM by the grid pipeline.  Needed so the 32k-token
+prefill shapes fit: naive attention materializes S² scores (32k² × bf16 =
+2 GiB per head) while this kernel keeps O(block²) in VMEM.
+
+Supports causal masking and an optional sliding window (``window > 0``),
+which covers both gemma3's 5:1 local:global pattern and full causal decode.
+
+Grid: ``(batch·heads, S/bq, S/bk)`` — the kv axis (j) is innermost so the
+accumulator tile stays in VMEM across the kv sweep.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int, block_q: int,
+                  block_k: int, num_k_blocks: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                     # [bq, d]
+    k = k_ref[0]                                     # [bk, d]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = i * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = jnp.ones_like(s, dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # [bq, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                           # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)                  # [bq, 1]
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * alpha
+                    + jnp.dot(p.astype(v_ref.dtype), v_ref[0],
+                              preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(j == num_k_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q, k, v: [BH, S, D] (kv already head-repeated for GQA). Returns [BH, S, D]."""
+    bh, s, d = q.shape
+    assert k.shape == v.shape == (bh, s, d)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    nq, nk = s // block_q, s // block_k
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, num_k_blocks=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,184 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These handle shape padding / alignment (callers see arbitrary shapes, the
+kernels see 128-aligned tiles), dtype policy (bf16 compute, f32 accumulate),
+interpret-mode selection (CPU container → interpret=True, real TPU → False),
+and the CSR→ELL / CSR→dense-block packing used by the hybrid engine.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import CSRGraph
+from repro.kernels import dense_spmv as _dense
+from repro.kernels import ell_spmv as _ell
+from repro.kernels import flash_attention as _flash
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult: int, axis: int, value=0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# dense-block SpMV
+# ---------------------------------------------------------------------------
+
+def dense_spmv_op(x: jax.Array, a: jax.Array, *, block: int = 256,
+                  interpret: bool | None = None) -> jax.Array:
+    """y = x @ a for arbitrary [M, K] × [K, N]; pads K and N to tiles."""
+    if interpret is None:
+        interpret = _interpret_default()
+    m, k = x.shape
+    _, n = a.shape
+    bk = min(block, max(128, 1 << (k - 1).bit_length()))
+    bn = min(block, max(128, 1 << (n - 1).bit_length()))
+    xp = _pad_to(x, bk, 1)
+    ap = _pad_to(_pad_to(a, bk, 0), bn, 1)
+    y = _dense.dense_spmv(xp, ap, block_n=bn, block_k=bk,
+                          interpret=interpret)
+    return y[:, :n]
+
+
+# ---------------------------------------------------------------------------
+# ELL SpMV
+# ---------------------------------------------------------------------------
+
+def csr_to_ell(g: CSRGraph, combine: str = "sum",
+               transpose: bool = True) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Pack a CSR graph into ELLPACK (numpy preprocessing).
+
+    ``transpose=True`` packs *in*-edges per vertex (pull form: y[v] reduces
+    over in-neighbours), which is the natural SpMV orientation.  Sentinel
+    slots point at index ``num_vertices`` (callers append an identity slot to
+    x) with identity values.
+    """
+    gg = g.reverse() if transpose else g
+    deg = gg.out_degrees()
+    kmax = max(int(deg.max()) if len(deg) else 1, 1)
+    n = gg.num_vertices
+    ident = 0.0 if combine == "sum" else np.inf
+    col = np.full((n, kmax), n, dtype=np.int32)
+    val = np.full((n, kmax), ident, dtype=np.float32)
+    w = gg.weights if gg.weights is not None else np.ones(gg.num_edges,
+                                                          dtype=np.float32)
+    fill = 1.0 if combine == "sum" else w
+    for v_ in range(n):
+        lo, hi = gg.row_ptr[v_], gg.row_ptr[v_ + 1]
+        col[v_, : hi - lo] = gg.col[lo:hi]
+        val[v_, : hi - lo] = (np.ones(hi - lo) if combine == "sum"
+                              else w[lo:hi])
+    del fill
+    return col, val, kmax
+
+
+def ell_spmv_op(col: jax.Array, val: jax.Array, x: jax.Array, *,
+                combine: str = "sum", block_v: int = 512,
+                interpret: bool | None = None) -> jax.Array:
+    """ELL SpMV for arbitrary V; pads rows to the block size."""
+    if interpret is None:
+        interpret = _interpret_default()
+    v = col.shape[0]
+    bv = min(block_v, max(8, 1 << (v - 1).bit_length()))
+    ident = 0.0 if combine == "sum" else jnp.inf
+    sentinel = x.shape[0] - 1  # callers append the identity slot
+    colp = _pad_to(col, bv, 0, value=sentinel)
+    valp = _pad_to(val, bv, 0, value=ident)
+    y = _ell.ell_spmv(colp, valp, x, combine=combine, block_v=bv,
+                      interpret=interpret)
+    return y[:v]
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def flash_attention_op(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       causal: bool = True, window: int = 0,
+                       block_q: int = 512, block_k: int = 512,
+                       interpret: bool | None = None) -> jax.Array:
+    """[B, H, S, D] attention; repeats KV heads for GQA; pads S and D."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, h, s, d = q.shape
+    kv_heads = k.shape[1]
+    if kv_heads != h:
+        rep = h // kv_heads
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    out = _flash.flash_attention(qf, kf, vf, causal=causal, window=window,
+                                 block_q=min(block_q, s),
+                                 block_k=min(block_k, s),
+                                 interpret=interpret)
+    return out.reshape(b, h, s, d)
+
+
+# ---------------------------------------------------------------------------
+# sorted segment reduce (TOTEM message reduction)
+# ---------------------------------------------------------------------------
+
+def segment_reduce_op(msgs: jax.Array, seg_ids: np.ndarray,
+                      num_segments: int, *, combine: str = "sum",
+                      block_e: int = 1024, max_span: int = 4096,
+                      interpret: bool | None = None) -> jax.Array:
+    """Two-phase sorted segment reduce.
+
+    ``seg_ids`` must be a *static* (numpy, sorted ascending) id array —
+    it is preprocessing output in the engine (partition.py sorts edges by
+    destination).  Falls back to plain ``jax.ops.segment_*`` when any
+    block's segment-id span exceeds ``max_span`` (sparse/gappy data).
+    """
+    from repro.kernels import segment_reduce as _seg
+
+    if interpret is None:
+        interpret = _interpret_default()
+    seg_ids = np.asarray(seg_ids)
+    e = len(seg_ids)
+    assert np.all(np.diff(seg_ids) >= 0), "seg_ids must be sorted"
+    ident = 0.0 if combine == "sum" else np.inf
+
+    pad = (-e) % block_e
+    ids_p = np.concatenate([seg_ids,
+                            np.full(pad, num_segments, seg_ids.dtype)])
+    nb = len(ids_p) // block_e
+    blocks = ids_p.reshape(nb, block_e)
+    base = blocks[:, 0].astype(np.int32)                  # per-block min id
+    span = int((blocks.max(axis=1) - base).max()) + 1
+    if span > max_span:
+        op = (jax.ops.segment_sum if combine == "sum"
+              else jax.ops.segment_min)
+        return op(msgs, jnp.asarray(seg_ids), num_segments=num_segments)
+
+    span = max(8, -(-span // 8) * 8)
+    local = (blocks - base[:, None]).astype(np.int32).reshape(-1)
+    msgs_p = jnp.concatenate(
+        [msgs.astype(jnp.float32),
+         jnp.full((pad,), ident, jnp.float32)])
+    partials = _seg.segment_reduce_blocks(
+        msgs_p, jnp.asarray(local), span=span, block_e=block_e,
+        combine=combine, interpret=interpret)            # [nb, span]
+
+    # phase 2: merge block partials (blocks may share boundary segments)
+    out_ids = (base[:, None] + np.arange(span)[None]).reshape(-1)
+    out_ids = np.minimum(out_ids, num_segments)          # pad sink
+    op = jax.ops.segment_sum if combine == "sum" else jax.ops.segment_min
+    final = op(partials.reshape(-1), jnp.asarray(out_ids),
+               num_segments=num_segments + 1)
+    return final[:num_segments]

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_spmv_ref(x: jax.Array, a: jax.Array) -> jax.Array:
+    """y = x @ a with f32 accumulation."""
+    return jnp.dot(x, a, preferred_element_type=jnp.float32)
+
+
+def ell_spmv_ref(col: jax.Array, val: jax.Array, x: jax.Array,
+                 combine: str = "sum") -> jax.Array:
+    gathered = jnp.take(x, col, axis=0)
+    if combine == "sum":
+        return jnp.sum(gathered * val, axis=1).astype(jnp.float32)
+    return jnp.min(gathered + val, axis=1).astype(jnp.float32)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """Naive softmax attention, [BH, S, D] (same masking semantics)."""
+    bh, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    logits = jnp.where(mask[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def segment_reduce_ref(msgs: jax.Array, seg_ids: jax.Array,
+                       num_segments: int, combine: str = "sum") -> jax.Array:
+    if combine == "sum":
+        return jax.ops.segment_sum(msgs, seg_ids,
+                                   num_segments=num_segments)
+    return jax.ops.segment_min(msgs, seg_ids, num_segments=num_segments)

@@ -1,0 +1,75 @@
+"""Sorted segment-reduce Pallas kernel — TOTEM's message reduction (§3.4).
+
+The BSP engine's hot op is the reduction of edge messages into (local vertex
+| outbox slot) segments.  Edges are pre-sorted by destination (partition.py
+does this at load, the paper's §4.3.1 ordering), so each block of ``be``
+messages touches a *contiguous span* of segment ids.  That makes a
+TPU-native two-phase reduction possible:
+
+  phase 1 (this kernel): per block, build the one-hot matrix of local
+  segment offsets and contract it against the messages on the **MXU**
+  (``onehot.T @ msgs``) — the gather/scatter-free formulation of a segment
+  sum; ``min`` combines use a masked VPU reduction.  Output: per-block
+  partials ``[n_blocks, span]`` + the block's base segment id.
+
+  phase 2 (ops.py, plain jnp): a tiny segment-sum over n_blocks·span
+  partials merges blocks that share a boundary segment.
+
+``span`` must bound (max segment id − min segment id + 1) within any block;
+ops.py measures it during preprocessing and falls back to plain
+``jax.ops.segment_sum`` when the data is too sparse for the span bound
+(adversarial gaps) — the engine's correctness never depends on the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _seg_sum_kernel(msgs_ref, local_ref, o_ref, *, span: int):
+    msgs = msgs_ref[...]                          # [be]
+    local = local_ref[...]                        # [be] offsets in [0, span)
+    onehot = (local[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (1, span), 1)
+              ).astype(jnp.float32)               # [be, span]
+    # MXU contraction: segment partials in one matmul
+    o_ref[...] = jax.lax.dot_general(
+        msgs.astype(jnp.float32)[None, :], onehot,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _seg_min_kernel(msgs_ref, local_ref, o_ref, *, span: int):
+    msgs = msgs_ref[...]
+    local = local_ref[...]
+    hit = (local[:, None] ==
+           jax.lax.broadcasted_iota(jnp.int32, (1, span), 1))
+    vals = jnp.where(hit, msgs.astype(jnp.float32)[:, None], jnp.inf)
+    o_ref[...] = jnp.min(vals, axis=0)[None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("span", "block_e", "combine",
+                                    "interpret"))
+def segment_reduce_blocks(msgs: jax.Array, local: jax.Array, *, span: int,
+                          block_e: int = 1024, combine: str = "sum",
+                          interpret: bool = False) -> jax.Array:
+    """Phase-1 partials.  msgs, local: [E] (E % block_e == 0; ``local`` is
+    segment id minus the block's base id).  Returns [E/block_e, span]."""
+    e = msgs.shape[0]
+    assert e % block_e == 0
+    grid = (e // block_e,)
+    kernel = functools.partial(
+        _seg_sum_kernel if combine == "sum" else _seg_min_kernel, span=span)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_e,), lambda i: (i,)),
+                  pl.BlockSpec((block_e,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, span), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((e // block_e, span), jnp.float32),
+        interpret=interpret,
+    )(msgs, local)

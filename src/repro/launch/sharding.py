@@ -1,0 +1,173 @@
+"""Sharding rules: logical activation axes + parameter PartitionSpecs.
+
+The models annotate activations with *logical* names ("batch", "ffn", …);
+this module resolves them to mesh axes.  Parameters are sharded by leaf-name
+convention:
+
+  - column-parallel weights (wq/wk/wv/w_gate/w_up/moe_w1): last dim → model
+  - row-parallel weights  (wo/w_down/moe_w2): contracted dim → model
+  - embeddings / lm head: vocab dim → model
+  - everything big additionally FSDP-shards over the data(+pod) axes
+  - MoE expert stacks: expert dim → model (expert parallelism)
+
+This is Megatron-style TP × FSDP, hierarchical across pods (the "pod" axis
+joins the FSDP/data-parallel group).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def activation_rules(mesh: Mesh, *, seq_sharded: bool = False):
+    """Install logical-axis → mesh-axis rules for the enclosed trace."""
+    batch = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    rules = {
+        "batch": batch,
+        "heads": ("model",),
+        "ffn": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "expert_cap": batch,
+        "seq": ("model",) if seq_sharded else None,
+        "kv_len": None,
+        "embed": None,
+    }
+    prev = _rules()
+    prev_mesh = getattr(_state, "mesh", None)
+    _state.rules = rules
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.rules = prev
+        _state.mesh = prev_mesh
+
+
+def data_shard_count() -> int:
+    """Number of shards on the data(+pod) axes of the active mesh (1 when
+    no mesh rules are installed — smoke tests)."""
+    mesh = getattr(_state, "mesh", None)
+    if mesh is None or _rules() is None:
+        return 1
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                        if a in ("pod", "data")]))
+
+
+def constrain(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    rules = _rules()
+    mesh = getattr(_state, "mesh", None)
+    if rules is None or mesh is None:
+        return x
+    spec = []
+    for dim, n in zip(x.shape, names):
+        axes = rules.get(n) if n else None
+        if axes:
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            axes = axes if dim % size == 0 else None
+        spec.append(axes if axes else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+_COL_NAMES = ("wq", "wk", "wv", "w_gate", "w_up", "moe_w1", "in_proj",
+              "patch_proj", "frame_proj")
+_ROW_NAMES = ("wo", "w_down", "moe_w2", "out_proj")
+_VOCAB_NAMES = ("embed", "lm_head")
+_EXPERT_NAMES = ("moe_w1", "moe_w2", "moe_wg")
+
+
+def _leaf_spec(path: str, ndim: int, shape, fsdp_axes: Tuple[str, ...],
+               mesh: Mesh, fsdp_min_size: int = 1 << 20) -> P:
+    name = path.split("/")[-1]
+    big = int(np.prod(shape)) >= fsdp_min_size
+    is_expert = any(name.startswith(e) for e in _EXPERT_NAMES)
+    spec = [None] * ndim
+
+    def put(dim: int, axes) -> bool:
+        """Assign mesh axes to dim if the size divides evenly."""
+        axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+        size = int(np.prod([mesh.shape[a] for a in axes_t]))
+        if shape[dim] % size == 0 and spec[dim] is None:
+            spec[dim] = axes_t if len(axes_t) > 1 else axes_t[0]
+            return True
+        return False
+
+    if any(name == v for v in _VOCAB_NAMES):
+        # [V, D] or [D, V]: shard the larger (vocab) dim on model.
+        vdim = int(np.argmax(shape[-2:])) + ndim - 2
+        other = ndim - 1 if vdim == ndim - 2 else ndim - 2
+        put(vdim, "model")
+        if big:
+            put(other, fsdp_axes)
+        return P(*spec)
+
+    if is_expert and ndim >= 3:
+        # [L, E, ...]: expert parallelism on the E axis.
+        put(1, "model")
+        if big and ndim >= 4:
+            put(2, fsdp_axes)
+        return P(*spec)
+
+    if any(name.startswith(c) for c in _COL_NAMES) and ndim >= 2:
+        put(ndim - 1, "model")
+        if big:
+            put(ndim - 2, fsdp_axes)
+        return P(*spec)
+    if any(name.startswith(r) for r in _ROW_NAMES) and ndim >= 2:
+        put(ndim - 2, "model")
+        if big:
+            put(ndim - 1, fsdp_axes)
+        return P(*spec)
+    # norms / biases / small tensors: replicated (still FSDP the huge ones).
+    if big and ndim >= 2:
+        put(ndim - 1, fsdp_axes) or put(ndim - 2, fsdp_axes)
+    return P(*spec)
+
+
+def param_specs(params_shape, mesh: Mesh):
+    """PartitionSpec pytree matching a params (shape-)pytree."""
+    fsdp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}") for k, v in tree.items()}
+        shape = tree.shape
+        return _leaf_spec(prefix, len(shape), shape, fsdp, mesh)
+
+    return walk(params_shape)
+
+
+def named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(batch_shape, mesh: Mesh):
+    """Inputs: leading batch dim sharded over pod+data (when divisible —
+    long_500k has global_batch=1, which stays replicated)."""
+    fsdp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    size = int(np.prod([mesh.shape[a] for a in fsdp]))
+
+    def leaf(x):
+        if len(x.shape) and x.shape[0] % size == 0:
+            return P(fsdp, *([None] * (len(x.shape) - 1)))
+        return P(*([None] * len(x.shape)))
+
+    return jax.tree.map(leaf, batch_shape)

@@ -1,0 +1,190 @@
+"""Model API: family dispatch, input specs, train/serve step builders.
+
+Every architecture exposes the same five entry points regardless of family
+(transformer / moe / ssm / hybrid / enc-dec / vlm):
+
+  init(key) → params
+  loss(params, microbatch) → scalar
+  prefill(params, batch) → (last logits, cache)
+  decode_step(params, cache, tokens) → (logits, cache)
+  init_cache(batch, max_len) → cache
+
+`input_specs` produces ShapeDtypeStruct stand-ins for the dry-run (no
+allocation), including cache inputs for decode shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ArchConfig
+from repro.optim.adamw import AdamW, AdamWState, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[[Any, Dict], jax.Array]
+    prefill: Callable[[Any, Dict], Tuple[jax.Array, Dict]]
+    decode_step: Callable[[Any, Dict, jax.Array], Tuple[jax.Array, Dict]]
+    init_cache: Callable[[int, int], Dict]
+
+    def params_shape(self):
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+
+def build(cfg: ArchConfig) -> Model:
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        from repro.models import transformer as T
+        return Model(
+            cfg=cfg,
+            init=functools.partial(T.init_params, cfg=cfg),
+            loss=functools.partial(T.loss_fn, cfg=cfg),
+            prefill=functools.partial(T.prefill, cfg=cfg),
+            decode_step=functools.partial(T.decode_step, cfg=cfg),
+            init_cache=functools.partial(T.init_cache, cfg),
+        )
+    if cfg.family == "ssm":
+        from repro.models import xlstm as X
+        return Model(
+            cfg=cfg,
+            init=functools.partial(X.init_params, cfg=cfg),
+            loss=functools.partial(X.loss_fn, cfg=cfg),
+            prefill=functools.partial(X.prefill, cfg=cfg),
+            decode_step=functools.partial(X.decode_step, cfg=cfg),
+            init_cache=functools.partial(X.init_cache, cfg),
+        )
+    if cfg.family == "hybrid":
+        from repro.models import zamba as Z
+        return Model(
+            cfg=cfg,
+            init=functools.partial(Z.init_params, cfg=cfg),
+            loss=functools.partial(Z.loss_fn, cfg=cfg),
+            prefill=functools.partial(Z.prefill, cfg=cfg),
+            decode_step=functools.partial(Z.decode_step, cfg=cfg),
+            init_cache=functools.partial(Z.init_cache, cfg),
+        )
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run stand-ins; also used to synthesize smoke batches)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    b, s = shape.batch, shape.seq
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s + 1), i32)}
+        if cfg.frontend == "vision":
+            batch["patches"] = sds((b, cfg.frontend_len, cfg.d_model),
+                                   jnp.float32)
+        if cfg.enc_dec:
+            batch["frames"] = sds((b, min(s, 4096), cfg.d_model),
+                                  jnp.float32)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((b, s), i32)}
+        if cfg.frontend == "vision":
+            batch["patches"] = sds((b, cfg.frontend_len, cfg.d_model),
+                                   jnp.float32)
+        if cfg.enc_dec:
+            batch["frames"] = sds((b, 4096, cfg.d_model), jnp.float32)
+        return batch
+    # decode: one new token against a seq-long cache
+    model = build(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    return {"tokens": sds((b,), i32), "cache": cache}
+
+
+def synth_batch(cfg: ArchConfig, shape: ShapeSpec, seed: int = 0):
+    """Materialize a random batch matching input_specs (smoke tests)."""
+    rng = np.random.default_rng(seed)
+    specs = input_specs(cfg, shape)
+
+    def make(spec):
+        if jnp.issubdtype(spec.dtype, jnp.integer):
+            return jnp.asarray(rng.integers(0, cfg.vocab, spec.shape),
+                               spec.dtype)
+        return jnp.asarray(rng.normal(size=spec.shape) * 0.02, spec.dtype)
+
+    return jax.tree.map(make, specs)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: Model, optimizer: Optional[AdamW] = None,
+                    microbatches: Optional[int] = None):
+    """(params, opt_state, batch) → (params, opt_state, metrics).
+
+    Gradient accumulation over microbatches via lax.scan; XLA overlaps the
+    per-microbatch backward with the (reduce-scattered) gradient psum of the
+    previous one — the compute/comm overlap the paper gets from double
+    buffering (§4.3.4-iv).
+    """
+    optimizer = optimizer or AdamW()
+    n_mb = microbatches or model.cfg.microbatches
+
+    def train_step(params, opt_state: AdamWState, batch):
+        def to_mb(x):
+            return x.reshape(n_mb, x.shape[0] // n_mb, *x.shape[1:])
+
+        from repro.models.common import opt_enabled
+        acc_dtype = (jnp.bfloat16 if opt_enabled("grad_bf16")
+                     else jnp.float32)
+        mbs = jax.tree.map(to_mb, batch)
+        zero_grads = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, acc_dtype), params)
+
+        def mb_step(acc, mb):
+            loss, grads = jax.value_and_grad(model.loss)(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(acc_dtype),
+                               acc, grads)
+            return acc, loss
+
+        grads, losses = jax.lax.scan(mb_step, zero_grads, mbs)
+        grads = jax.tree.map(lambda g: g / n_mb, grads)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": losses.mean(),
+                   "grad_norm_sq": sum(jnp.sum(jnp.square(g))
+                                       for g in jax.tree.leaves(grads))}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(model: Model, kind: str):
+    if kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch)
+        return prefill_step
+
+    def decode(params, batch):
+        return model.decode_step(params, batch["cache"], batch["tokens"])
+    return decode

@@ -1,0 +1,133 @@
+"""Attention: GQA, chunked (flash-style) train/prefill path, KV-cache decode.
+
+The train/prefill path is a pure-jnp double-chunked online-softmax scan —
+O(chunk²) live memory, differentiable, and tolerant of *traced* window sizes
+(needed because layers are executed under ``lax.scan`` with a per-layer
+local/global flag).  The Pallas ``kernels/flash_attention`` kernel is the
+serving-path accelerator when the window is static; both share semantics and
+are cross-checked in tests.
+
+GQA uses grouped einsums (no materialized head repetition): q heads are
+reshaped to [groups, q_per_kv].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def pick_chunk(s: int, target: int) -> int:
+    """Largest divisor of ``s`` that is ≤ target (VLM prompts are
+    seq+frontend_len, e.g. 4352 = 2^8·17, so chunks must divide exactly)."""
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def _mask(q_pos, k_pos, window):
+    """causal + optional sliding window (window<=0 → full causal)."""
+    m = q_pos[:, None] >= k_pos[None, :]
+    m &= jnp.where(window > 0, (q_pos[:, None] - k_pos[None, :]) < window,
+                   True)
+    return m
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      q_offset: jax.Array | int = 0,
+                      window: jax.Array | int = 0,
+                      causal: bool = True,
+                      q_chunk: int = 1024, k_chunk: int = 1024) -> jax.Array:
+    """q: [B, Sq, G, R, D]; k, v: [B, Skv, G, D]. Returns [B, Sq, G, R, D].
+
+    G = kv head groups, R = q heads per group.  Online softmax over k chunks
+    inside a scan over q chunks; peak live logits are [B, G, R, qc, kc].
+    """
+    b, sq, g, r, d = q.shape
+    skv = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, skv)
+    assert sq % q_chunk == 0 and skv % k_chunk == 0
+    nq, nk = sq // q_chunk, skv // k_chunk
+    scale = 1.0 / (d ** 0.5)
+    window = jnp.asarray(window, jnp.int32)
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+
+    qs = q.reshape(b, nq, q_chunk, g, r, d).transpose(1, 0, 3, 4, 2, 5)
+    ks = k.reshape(b, nk, k_chunk, g, d).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(b, nk, k_chunk, g, d).transpose(1, 0, 3, 2, 4)
+    # qs: [nq, B, G, R, qc, D]; ks/vs: [nk, B, G, kc, D]
+
+    def q_step(_, qi_and_idx):
+        qi, iq = qi_and_idx
+        q_pos = q_offset + iq * q_chunk + jnp.arange(q_chunk)
+
+        def k_step(carry, ki_and_idx):
+            m_run, l_run, acc = carry
+            (ki, vi), jk = ki_and_idx
+            k_pos = jk * k_chunk + jnp.arange(k_chunk)
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", qi.astype(jnp.float32),
+                           ki.astype(jnp.float32)) * scale
+            msk = _mask(q_pos, k_pos, window) if causal else \
+                jnp.ones((q_chunk, k_chunk), bool)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + p.sum(-1)
+            acc = (acc * alpha[..., None]
+                   + jnp.einsum("bgrqk,bgkd->bgrqd", p,
+                                vi.astype(jnp.float32)))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, g, r, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, g, r, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, g, r, q_chunk, d), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0), ((ks, vs), jnp.arange(nk)))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    # outs: [nq, B, G, R, qc, D] -> [B, Sq, G, R, D]
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, g, r, d)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+                     cache_len: jax.Array,
+                     window: jax.Array | int = 0) -> jax.Array:
+    """Single-token decode. q: [B, 1, G, R, D]; caches: [B, Smax, G, D].
+
+    ``cache_len`` is a scalar (uniform batch, as in the serving benchmark).
+    Positions ≥ cache_len are masked; a positive window additionally masks
+    positions older than ``cache_len - window`` (gemma3 local layers).
+    """
+    b, _, g, r, d = q.shape
+    smax = k_cache.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    window = jnp.asarray(window, jnp.int32)
+    s = q[:, 0].astype(jnp.float32)                       # [B, G, R, D]
+    logits = jnp.einsum("bgrd,bkgd->bgrk", s,
+                        k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(smax)
+    lo = jnp.where(window > 0, cache_len - window, 0)
+    mask = (pos < cache_len) & (pos >= lo)                # [Smax]
+    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrk,bkgd->bgrd", p, v_cache.astype(jnp.float32))
+    return out[:, None].astype(q.dtype)
+
+
+def cross_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Full (non-causal) cross attention. q: [B,Sq,G,R,D]; k,v: [B,Skv,G,D]."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

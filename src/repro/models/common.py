@@ -1,0 +1,177 @@
+"""Shared model components: config, norms, RoPE, losses, init, sharding hints.
+
+Everything is functional: params are plain pytrees of jnp arrays, model
+classes are thin namespaces of pure functions.  All layer stacks are stored
+stacked on a leading L axis and executed with ``lax.scan`` so the HLO (and
+hence SPMD-partitioning/compile time) is O(1) in depth — essential for the
+512-device dry-run of 95-layer models.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+def opt_enabled(flag: str) -> bool:
+    """Beyond-paper optimization flags (§Perf hillclimbs), env-selected so a
+    dry-run A/B needs no code edits: REPRO_OPTS=bf16_stack,remat_dots,...
+
+    Flags: bf16_stack (cast layer stacks to compute dtype BEFORE the scan so
+    FSDP all-gathers move bf16), remat_dots (save matmul outputs instead of
+    full recompute), grad_bf16 (bf16 gradient accumulator), moe_local
+    (per-data-shard MoE capacity → dispatch scatter stays shard-local),
+    seq_shard (sequence-sharded residual stream).
+    """
+    return flag in os.environ.get("REPRO_OPTS", "").split(",")
+
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0             # 0 → d_model // n_heads
+    # --- MoE ---
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_capacity_factor: float = 1.25
+    # --- attention pattern ---
+    local_window: int = 0         # sliding-window size for local layers
+    local_global_ratio: int = 0   # N local layers per 1 global (gemma3: 5)
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    attn_every: int = 0           # zamba: shared attn block every N ssm layers
+    slstm_every: int = 0          # xlstm: sLSTM block every N layers
+    # --- structure ---
+    enc_dec: bool = False         # seamless: encoder-decoder
+    frontend: str = ""            # "audio" | "vision" | ""
+    frontend_len: int = 256       # prepended embedding length (vision)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = True
+    # --- training ---
+    microbatches: int = 16        # grad-accumulation steps within a step
+    remat: bool = True
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # --- shapes this arch supports (spec: skips noted in DESIGN.md) ---
+    sub_quadratic: bool = False   # may run long_500k
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    def reduced(self, **overrides) -> "ArchConfig":
+        """A smoke-test sized config of the same family (spec requirement)."""
+        base = dict(
+            n_layers=min(self.n_layers, 4) or 2,
+            d_model=64, n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 4) or 2,
+            d_ff=128 if self.d_ff else 0,
+            vocab=256, head_dim=16,
+            moe_experts=8 if self.moe_experts else 0,
+            moe_top_k=2 if self.moe_top_k else 0,
+            local_window=8 if self.local_window else 0,
+            ssm_state=16 if self.ssm_state else 0,
+            attn_every=2 if self.attn_every else 0,
+            slstm_every=self.slstm_every and 2,
+            frontend_len=8 if self.frontend else 256,
+            microbatches=1,
+            name=self.name + "-smoke",
+        )
+        base.update(overrides)
+        return dataclasses.replace(self, **base)
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale)).astype(dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array,
+         theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: [..., S, H?, D] with positions [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (np.log(theta) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    # broadcast over the head axis if present (x: [..., S, H, D])
+    while angles.ndim < x.ndim:
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: Optional[jax.Array] = None) -> jax.Array:
+    """Token-mean cross entropy; numerically stable, vocab-shard friendly."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1).squeeze(-1)
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, shape: Sequence[int], dtype,
+               fan_in: Optional[int] = None) -> jax.Array:
+    fan_in = fan_in or shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, tuple(shape), jnp.float32)
+            * scale).astype(dtype)
+
+
+def split_keys(key: jax.Array, names: Sequence[str]) -> Dict[str, jax.Array]:
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+# ---------------------------------------------------------------------------
+# Sharding hints
+# ---------------------------------------------------------------------------
+
+def logical_constraint(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Annotate activation sharding with logical axis names.
+
+    Resolved to mesh axes by launch/sharding.py rules; a no-op when no mesh
+    is active (single-device smoke tests).
+    """
+    from repro.launch import sharding as shd  # local import: no cycles
+    return shd.constrain(x, names)

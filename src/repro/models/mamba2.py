@@ -1,0 +1,203 @@
+"""Mamba2 (SSD — state-space dual) block, chunk-parallel, MXU-friendly.
+
+The chunked SSD algorithm computes the scalar-decay SSM
+
+    h_t = exp(a_t) · h_{t-1} + B_t x_tᵀ ;   y_t = C_t · h_t
+
+as (i) quadratic attention-like matmuls inside length-``l`` chunks and (ii) a
+cheap inter-chunk scan over the [H, P, N] states — matmul-rich (MXU) with an
+O(S/l) sequential tail.  This is the hardware-adaptation of the recurrence:
+TPUs want big matmuls, not elementwise scans.
+
+Also exposes ``ssd()`` for reuse: mLSTM (xlstm.py) is the same dual with
+decay = log-sigmoid(forget gate) and input scale = exp(input gate).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, dense_init, rms_norm, split_keys
+
+HEAD_DIM = 64  # mamba2 P (headdim)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise cumulative sums.
+
+    a: [..., l] → out[..., i, j] = Σ_{j < k ≤ i} a[k]  (−inf above diagonal).
+    """
+    l = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd(x: jax.Array, a_log: jax.Array, b: jax.Array, c: jax.Array,
+        chunk: int = 128,
+        init_state: jax.Array | None = None
+        ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked scalar-decay SSM.
+
+    x: [B, S, H, P] (inputs, already dt-scaled), a_log: [B, S, H] (log decay,
+    already dt-scaled, ≤ 0), b: [B, S, N] (input proj), c: [B, S, N] (output
+    proj; groups=1 broadcast over heads).  Returns (y [B, S, H, P],
+    final_state [B, H, P, N]).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    ac = a_log.reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, n)
+    cc = c.reshape(bsz, nc, chunk, n)
+
+    # (i) intra-chunk (diagonal blocks): attention-like quadratic term.
+    L = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))        # [B,nc,H,l,l]
+    y_diag = jnp.einsum("bzln,bzsn,bzhls,bzshp->bzlhp", cc, bc, L, xc)
+
+    # chunk summaries: state contribution of each chunk (f32 recurrence).
+    cum = jnp.cumsum(ac, axis=2)                           # [B,nc,l,H]
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)        # [B,nc,l,H]
+    states = jnp.einsum("bzsn,bzsh,bzshp->bzhpn",
+                        bc.astype(jnp.float32), decay_states,
+                        xc.astype(jnp.float32))
+
+    # (ii) inter-chunk recurrence over the nc chunk states.
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # [B,nc,H]
+    s0 = (jnp.zeros((bsz, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                  # emit *previous*
+
+    final, prev_states = jax.lax.scan(
+        scan_fn, s0, (states.transpose(1, 0, 2, 3, 4),
+                      chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # [B,nc,H,P,N]
+
+    # state → output within each chunk.
+    state_decay = jnp.exp(cum)                             # [B,nc,l,H]
+    y_off = jnp.einsum("bzln,bzhpn,bzlh->bzlhp",
+                       cc.astype(jnp.float32), prev_states, state_decay)
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), final.astype(x.dtype)
+
+
+def ssd_step(state: jax.Array, x: jax.Array, a_log: jax.Array, b: jax.Array,
+             c: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrence. state: [B,H,P,N]; x: [B,H,P]; a_log: [B,H];
+    b, c: [B,N]."""
+    decay = jnp.exp(a_log)[:, :, None, None]
+    state = state * decay + jnp.einsum("bhp,bn->bhpn", x, b)
+    y = jnp.einsum("bhpn,bn->bhp", state, c)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (in_proj → conv → SSD → gated norm → out_proj)
+# ---------------------------------------------------------------------------
+
+def mamba_param_shapes(cfg: ArchConfig) -> Dict[str, tuple]:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = di // HEAD_DIM
+    conv_ch = di + 2 * n
+    return {
+        "norm": (d,),
+        "in_proj": (d, 2 * di + 2 * n + h),   # z, x, B, C, dt
+        "conv_w": (cfg.ssm_conv, conv_ch),
+        "a_log": (h,),
+        "d_skip": (h,),
+        "dt_bias": (h,),
+        "ssm_norm": (di,),
+        "out_proj": (di, d),
+    }
+
+
+def init_mamba_stack(key, cfg: ArchConfig, n_layers: int, dtype) -> Dict:
+    shapes = mamba_param_shapes(cfg)
+    keys = split_keys(key, list(shapes))
+    out = {}
+    for name, shape in shapes.items():
+        full = (n_layers,) + shape
+        if name in ("norm", "ssm_norm"):
+            out[name] = jnp.zeros(full, dtype)
+        elif name == "a_log":
+            out[name] = jnp.ones(full, dtype)          # A = -exp(1) ≈ -e
+        elif name in ("d_skip",):
+            out[name] = jnp.ones(full, dtype)
+        elif name == "dt_bias":
+            out[name] = jnp.zeros(full, dtype)
+        elif name == "conv_w":
+            out[name] = dense_init(keys[name], full, dtype,
+                                   fan_in=cfg.ssm_conv)
+        else:
+            out[name] = dense_init(keys[name], full, dtype,
+                                   fan_in=shape[-2])
+    return out
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: [B, S, C]; w: [K, C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(k))
+    return out
+
+
+def mamba_block(x: jax.Array, lp: Dict, cfg: ArchConfig,
+                chunk: int = 128,
+                state: Tuple | None = None,
+                return_state: bool = False):
+    """x: [B, S, D] → [B, S, D].  state = (conv_tail [B,K-1,C], ssd [B,H,P,N])
+    for decode; pass S=1 with state for single-step."""
+    bsz, s, d = x.shape
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = di // HEAD_DIM
+
+    hidden = rms_norm(x, lp["norm"], cfg.norm_eps)
+    zxbcdt = hidden @ lp["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+
+    if state is None:
+        xbc_conv = jax.nn.silu(_causal_conv(xbc, lp["conv_w"]))
+        new_conv_tail = xbc[:, -(cfg.ssm_conv - 1):]
+    else:
+        conv_tail = state[0]
+        window = jnp.concatenate([conv_tail, xbc], axis=1)
+        xbc_conv = jax.nn.silu(
+            jnp.einsum("bkc,kc->bc", window, lp["conv_w"]))[:, None]
+        new_conv_tail = window[:, 1:]
+
+    xs, b, c = jnp.split(xbc_conv, [di, di + n], axis=-1)
+    xs = xs.reshape(bsz, -1, h, HEAD_DIM)
+    dt = jax.nn.softplus(dt + lp["dt_bias"])              # [B, S, H]
+    a = -jnp.exp(lp["a_log"].astype(jnp.float32))         # [H]
+    a_log = (dt.astype(jnp.float32) * a)                  # [B, S, H] ≤ 0
+    x_scaled = xs * dt[..., None].astype(xs.dtype)
+
+    if state is None:
+        y, final = ssd(x_scaled, a_log, b, c, chunk=chunk)
+    else:
+        y, final = ssd_step(state[1], x_scaled[:, 0], a_log[:, 0],
+                            b[:, 0], c[:, 0])
+        y = y[:, None]
+
+    y = y + xs * lp["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, -1, di)
+    y = rms_norm(y * jax.nn.silu(z), lp["ssm_norm"], cfg.norm_eps)
+    out = x + y @ lp["out_proj"]
+    if return_state or state is not None:
+        return out, (new_conv_tail, final)
+    return out

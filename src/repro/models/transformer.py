@@ -1,0 +1,388 @@
+"""Decoder-only / encoder-decoder transformer with GQA, RoPE, SwiGLU, MoE.
+
+Covers: tinyllama, deepseek-67b, command-r-plus (dense); gemma3 (5:1
+local:global sliding window); olmoe / qwen3-moe (MoE FFN); internvl2 (vision
+patch-embedding stub prepended); seamless-m4t (encoder-decoder with audio
+frame-embedding stub).
+
+Layer stacks are stacked on a leading L axis and run under ``lax.scan``
+(HLO size O(1) in depth).  Per-layer attention windows are scan-carried
+values, so gemma3's pattern costs no extra HLO.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models.common import (ArchConfig, cross_entropy_loss, dense_init,
+                                 logical_constraint, opt_enabled, rms_norm,
+                                 rope, split_keys)
+from repro.models.moe import moe_ffn, moe_layer_params
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _layer_param_shapes(cfg: ArchConfig, cross: bool = False) -> Dict[str, tuple]:
+    d, hd = cfg.d_model, cfg.hd
+    h, g = cfg.n_heads, cfg.n_kv_heads
+    shapes = {
+        "norm1": (d,), "norm2": (d,),
+        "wq": (d, h * hd), "wk": (d, g * hd), "wv": (d, g * hd),
+        "wo": (h * hd, d),
+    }
+    if cross:
+        shapes.update({"norm_x": (d,), "wq_x": (d, h * hd),
+                       "wk_x": (d, g * hd), "wv_x": (d, g * hd),
+                       "wo_x": (h * hd, d)})
+    if cfg.is_moe:
+        shapes.update(moe_layer_params(cfg))
+    else:
+        f = cfg.d_ff
+        shapes.update({"w_gate": (d, f), "w_up": (d, f), "w_down": (f, d)})
+    return shapes
+
+
+def _init_stack(key, cfg: ArchConfig, n_layers: int, dtype,
+                cross: bool = False) -> Params:
+    shapes = _layer_param_shapes(cfg, cross)
+    keys = split_keys(key, list(shapes))
+    out = {}
+    for name, shape in shapes.items():
+        full = (n_layers,) + shape
+        if name.startswith("norm"):
+            out[name] = jnp.zeros(full, dtype)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            out[name] = dense_init(keys[name], full, dtype, fan_in=fan_in)
+    return out
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    names = ["embed", "layers", "final_norm", "lm_head", "encoder",
+             "enc_norm", "frontend"]
+    keys = split_keys(key, names)
+    params: Params = {
+        "embed": dense_init(keys["embed"], (cfg.vocab, cfg.d_model), dtype,
+                            fan_in=cfg.d_model),
+        "layers": _init_stack(keys["layers"], cfg, cfg.n_layers, dtype,
+                              cross=cfg.enc_dec),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys["lm_head"],
+                                       (cfg.d_model, cfg.vocab), dtype)
+    if cfg.enc_dec:
+        params["encoder"] = _init_stack(keys["encoder"], cfg, cfg.n_layers,
+                                        dtype)
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    if cfg.frontend:
+        params["frontend_proj"] = dense_init(
+            keys["frontend"], (cfg.d_model, cfg.d_model), dtype)
+    return params
+
+
+def layer_windows(cfg: ArchConfig) -> np.ndarray:
+    """Per-layer attention window (0 = full causal). gemma3: N local : 1 global."""
+    if cfg.local_global_ratio and cfg.local_window:
+        period = cfg.local_global_ratio + 1
+        idx = np.arange(cfg.n_layers)
+        return np.where((idx + 1) % period == 0, 0,
+                        cfg.local_window).astype(np.int32)
+    return np.zeros(cfg.n_layers, dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _qkv(h, lp, cfg: ArchConfig, prefix: str = "w"):
+    b, s, _ = h.shape
+    g, hd = cfg.n_kv_heads, cfg.hd
+    r = cfg.n_heads // g
+    q = h @ lp[prefix + "q"]
+    k = h @ lp[prefix + "k"]
+    v = h @ lp[prefix + "v"]
+    q = logical_constraint(q, "batch", None, "heads")
+    k = logical_constraint(k, "batch", None, "heads")
+    v = logical_constraint(v, "batch", None, "heads")
+    return (q.reshape(b, s, g, r, hd), k.reshape(b, s, g, hd),
+            v.reshape(b, s, g, hd))
+
+
+def _ffn(h, lp, cfg: ArchConfig):
+    gate = jax.nn.silu(h @ lp["w_gate"])
+    up = h @ lp["w_up"]
+    inter = logical_constraint(gate * up, "batch", None, "ffn")
+    return inter @ lp["w_down"]
+
+
+def _decoder_layer(x, lp, window, positions, cfg: ArchConfig,
+                   enc_kv: Optional[Tuple] = None,
+                   causal: bool = True):
+    """One pre-norm block: attn (+cross) + ffn/moe.  x: [B, S, D]."""
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    q, k, v = _qkv(h, lp, cfg)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    o = attn.chunked_attention(
+        q, k, v, window=window, causal=causal,
+        q_chunk=attn.pick_chunk(x.shape[1], 2048),
+        k_chunk=attn.pick_chunk(x.shape[1], 1024))
+    b, s = x.shape[:2]
+    o = o.reshape(b, s, cfg.n_heads * cfg.hd)
+    x = x + o @ lp["wo"]
+    x = logical_constraint(x, "batch", "seq", None)
+
+    if enc_kv is not None:
+        h = rms_norm(x, lp["norm_x"], cfg.norm_eps)
+        qx = (h @ lp["wq_x"]).reshape(b, s, cfg.n_kv_heads,
+                                      cfg.n_heads // cfg.n_kv_heads, cfg.hd)
+        o = attn.cross_attention(qx, *enc_kv)
+        x = x + o.reshape(b, s, -1) @ lp["wo_x"]
+
+    h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+    if cfg.is_moe:
+        y = moe_ffn(h, lp, cfg)
+    else:
+        y = _ffn(h, lp, cfg)
+    x = x + y
+    return logical_constraint(x, "batch", "seq", None)
+
+
+def _run_stack(x, stack: Params, cfg: ArchConfig, windows, positions,
+               causal: bool = True, enc_out: Optional[jax.Array] = None):
+    """scan over layers. enc_out: [B, Senc, D] for cross-attention."""
+    b = x.shape[0]
+    enc_kv = None
+    if enc_out is not None:
+        # Cross K/V are layer-specific; computed inside the scan from enc_out.
+        pass
+
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if opt_enabled("bf16_stack"):
+        # cast BEFORE the scan: the FSDP all-gather then moves bf16 (half
+        # the wire bytes and half the gathered-weight VMEM residency).
+        stack = jax.tree.map(lambda w: w.astype(cdt), stack)
+
+    def body(h, per_layer):
+        lp, window = per_layer
+        lp = jax.tree.map(lambda w: w.astype(cdt), lp)
+        ekv = None
+        if enc_out is not None:
+            se = enc_out.shape[1]
+            ke = (enc_out @ lp["wk_x"]).reshape(b, se, cfg.n_kv_heads, cfg.hd)
+            ve = (enc_out @ lp["wv_x"]).reshape(b, se, cfg.n_kv_heads, cfg.hd)
+            ekv = (ke, ve)
+        h = _decoder_layer(h, lp, window, positions, cfg, enc_kv=ekv,
+                           causal=causal)
+        return h, None
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if opt_enabled("remat_dots")
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+    x, _ = jax.lax.scan(body, x, (stack, jnp.asarray(windows)))
+    del enc_kv
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Public model functions
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params: Params, cfg: ArchConfig, batch: Dict) -> Tuple:
+    """Token embedding + optional frontend embeddings prepended."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cdt)
+    x = x * float(np.sqrt(cfg.d_model))
+    n_front = 0
+    if cfg.frontend == "vision" and "patches" in batch:
+        front = (batch["patches"].astype(cdt)
+                 @ params["frontend_proj"].astype(cdt))
+        x = jnp.concatenate([front, x], axis=1)
+        n_front = front.shape[1]
+    return x, n_front
+
+
+def _encode(params: Params, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """Audio encoder (seamless): bidirectional stack over frame embeddings."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(cdt) @ params["frontend_proj"].astype(cdt)
+    positions = jnp.arange(x.shape[1])[None]
+    windows = np.zeros(cfg.n_layers, np.int32)
+    x = _run_stack(x, params["encoder"], cfg, windows, positions,
+                   causal=False)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _lm_logits(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    logits = x @ head
+    return logical_constraint(logits, "batch", None, "vocab")
+
+
+def loss_fn(params: Params, batch: Dict, *, cfg: ArchConfig) -> jax.Array:
+    """One microbatch forward + CE loss. batch['tokens']: [B, S+1]."""
+    tokens = batch["tokens"][:, :-1]
+    labels = batch["tokens"][:, 1:]
+    mb = dict(batch, tokens=tokens)
+    x, n_front = _embed_inputs(params, cfg, mb)
+    if cfg.enc_dec:
+        enc_out = _encode(params, cfg, batch["frames"])
+    else:
+        enc_out = None
+    positions = jnp.arange(x.shape[1])[None]
+    windows = layer_windows(cfg)
+    x = _run_stack(x, params["layers"], cfg, windows, positions,
+                   causal=True, enc_out=enc_out)
+    if n_front:
+        x = x[:, n_front:]
+    logits = _lm_logits(params, cfg, x)
+    return cross_entropy_loss(logits, labels)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> Dict:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    g, hd = cfg.n_kv_heads, cfg.hd
+    cache = {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, g, hd), cdt),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, g, hd), cdt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if cfg.enc_dec and enc_len:
+        cache["xk"] = jnp.zeros((cfg.n_layers, batch, enc_len, g, hd), cdt)
+        cache["xv"] = jnp.zeros((cfg.n_layers, batch, enc_len, g, hd), cdt)
+    return cache
+
+
+def prefill(params: Params, batch: Dict, *, cfg: ArchConfig,
+            max_len: Optional[int] = None) -> Tuple[jax.Array, Dict]:
+    """Process the full prompt; returns (last-token logits [B, V], cache)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x, n_front = _embed_inputs(params, cfg, batch)
+    stotal = x.shape[1]
+    # frontend embeddings (VLM) occupy cache slots too
+    max_len = max(max_len or stotal, stotal)
+    positions = jnp.arange(stotal)[None]
+    windows = layer_windows(cfg)
+    enc_out = _encode(params, cfg, batch["frames"]) if cfg.enc_dec else None
+    g, hd = cfg.n_kv_heads, cfg.hd
+    r = cfg.n_heads // g
+
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def body(h, per_layer):
+        lp, window = per_layer
+        lp = jax.tree.map(lambda w: w.astype(cdt), lp)
+        hn = rms_norm(h, lp["norm1"], cfg.norm_eps)
+        q, k, v = _qkv(hn, lp, cfg)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        o = attn.chunked_attention(
+            q, k, v, window=window, causal=True,
+            q_chunk=attn.pick_chunk(stotal, 2048),
+            k_chunk=attn.pick_chunk(stotal, 1024))
+        o = o.reshape(b, stotal, cfg.n_heads * hd)
+        h = h + o @ lp["wo"]
+        ys = {"k": k, "v": v}
+        if enc_out is not None:
+            se = enc_out.shape[1]
+            ke = (enc_out @ lp["wk_x"]).reshape(b, se, g, hd)
+            ve = (enc_out @ lp["wv_x"]).reshape(b, se, g, hd)
+            hx = rms_norm(h, lp["norm_x"], cfg.norm_eps)
+            qx = (hx @ lp["wq_x"]).reshape(b, stotal, g, r, hd)
+            h = h + attn.cross_attention(qx, ke, ve).reshape(b, stotal, -1) \
+                @ lp["wo_x"]
+            ys.update({"xk": ke, "xv": ve})
+        hn = rms_norm(h, lp["norm2"], cfg.norm_eps)
+        h = h + (moe_ffn(hn, lp, cfg) if cfg.is_moe else _ffn(hn, lp, cfg))
+        return h, ys
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, caches = jax.lax.scan(body, x, (params["layers"],
+                                       jnp.asarray(layer_windows(cfg))))
+    logits = _lm_logits(params, cfg, x[:, -1:])[:, 0]
+
+    pad = max_len - stotal
+    cache = {
+        "k": jnp.pad(caches["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(caches["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "len": jnp.int32(stotal),
+    }
+    if "xk" in caches:
+        cache["xk"], cache["xv"] = caches["xk"], caches["xv"]
+    return logits, cache
+
+
+def decode_step(params: Params, cache: Dict, tokens: jax.Array,
+                *, cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    """One decode step. tokens: [B] int32. Returns (logits [B, V], cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b = tokens.shape[0]
+    pos = cache["len"]
+    x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(cdt)
+    x = x * float(np.sqrt(cfg.d_model))
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    g, hd = cfg.n_kv_heads, cfg.hd
+    r = cfg.n_heads // g
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(h, per_layer):
+        lp, window, kc, vc, xkv = per_layer
+        lp = jax.tree.map(lambda w: w.astype(cdt), lp)
+        hn = rms_norm(h, lp["norm1"], cfg.norm_eps)
+        q, k, v = _qkv(hn, lp, cfg)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        o = attn.decode_attention(q, kc, vc, cache_len=pos + 1,
+                                  window=window)
+        h = h + o.reshape(b, 1, cfg.n_heads * hd) @ lp["wo"]
+        if xkv is not None:
+            hx = rms_norm(h, lp["norm_x"], cfg.norm_eps)
+            qx = (hx @ lp["wq_x"]).reshape(b, 1, g, r, hd)
+            h = h + attn.cross_attention(qx, *xkv).reshape(b, 1, -1) \
+                @ lp["wo_x"]
+        hn = rms_norm(h, lp["norm2"], cfg.norm_eps)
+        h = h + (moe_ffn(hn, lp, cfg) if cfg.is_moe else _ffn(hn, lp, cfg))
+        return h, (kc, vc)
+
+    xkvs = ((cache["xk"], cache["xv"]) if "xk" in cache
+            else None)
+
+    def scan_body(h, xs):
+        if xkvs is None:
+            lp, window, kc, vc = xs
+            return body(h, (lp, window, kc, vc, None))
+        lp, window, kc, vc, xk, xv = xs
+        return body(h, (lp, window, kc, vc, (xk, xv)))
+
+    xs = ((params["layers"], windows, cache["k"], cache["v"])
+          if xkvs is None else
+          (params["layers"], windows, cache["k"], cache["v"], *xkvs))
+    x, (new_k, new_v) = jax.lax.scan(scan_body, x, xs)
+    logits = _lm_logits(params, cfg, x)[:, 0]
+    new_cache = dict(cache, k=new_k, v=new_v, len=pos + 1)
+    return logits, new_cache

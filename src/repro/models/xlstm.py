@@ -1,0 +1,349 @@
+"""xLSTM (sLSTM + mLSTM blocks) — the [ssm] architecture (xlstm-125m).
+
+- **mLSTM** (parallelizable): matrix memory C_t = f_t·C_{t-1} + i_t·v_t k_tᵀ,
+  read h_t = C_t q_t / max(|n_t·q_t|, 1).  This is the same scalar-decay dual
+  as mamba2's SSD, so training reuses ``mamba2.ssd`` (chunked, MXU-friendly):
+  decay = logσ(f-gate), input scale = exp(i-gate) (clipped), B=k, C=q, x=v.
+  The normalizer n runs through the same SSD with x=1.
+- **sLSTM** (every ``slstm_every``-th layer): scalar memory with exponential
+  gating and the stabilizer state m — inherently sequential (the paper's
+  point), implemented as ``lax.scan`` over time with recurrent gate inputs.
+
+d_ff = 0 in the public config: blocks are pure mixers with an internal
+projection factor of 2 (as in the xLSTM paper), no separate FFN.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import (ArchConfig, cross_entropy_loss, dense_init,
+                                 logical_constraint, rms_norm, split_keys)
+from repro.models.mamba2 import ssd, ssd_step
+
+Params = Dict[str, Any]
+GATE_CLIP = 8.0   # exp input-gate clip (stabilization, see module docstring)
+
+
+def _proj_dim(cfg: ArchConfig) -> int:
+    return 2 * cfg.d_model  # projection factor 2
+
+
+def layer_param_shapes(cfg: ArchConfig) -> Dict[str, tuple]:
+    d = cfg.d_model
+    di = _proj_dim(cfg)
+    h = cfg.n_heads
+    dh = di // h
+    return {
+        "norm": (d,),
+        "up_proj": (d, 2 * di),          # value stream + gate stream
+        "wq": (d, di), "wk": (d, di),
+        "w_igate": (d, h), "w_fgate": (d, h),
+        "b_igate": (h,), "b_fgate": (h,),
+        # sLSTM recurrent gate weights (block-diagonal per head)
+        "r_igate": (h, dh), "r_fgate": (h, dh), "r_zgate": (h, dh),
+        "w_ogate": (d, di),
+        "mix_norm": (di,),
+        "down_proj": (di, d),
+    }
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = split_keys(key, ["embed", "layers", "final_norm"])
+    shapes = layer_param_shapes(cfg)
+    lkeys = split_keys(keys["layers"], list(shapes))
+    layers = {}
+    for name, shape in shapes.items():
+        full = (cfg.n_layers,) + shape
+        if "norm" in name:
+            layers[name] = jnp.zeros(full, dtype)
+        elif name == "b_fgate":
+            layers[name] = jnp.full(full, 3.0, dtype)   # forget-bias init
+        elif name.startswith("b_"):
+            layers[name] = jnp.zeros(full, dtype)
+        else:
+            fan = shape[-2] if len(shape) >= 2 else shape[-1]
+            layers[name] = dense_init(lkeys[name], full, dtype, fan_in=fan)
+    return {
+        "embed": dense_init(keys["embed"], (cfg.vocab, cfg.d_model), dtype,
+                            fan_in=cfg.d_model),
+        "layers": layers,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def slstm_layers_mask(cfg: ArchConfig) -> np.ndarray:
+    if not cfg.slstm_every:
+        return np.zeros(cfg.n_layers, bool)
+    idx = np.arange(cfg.n_layers)
+    return (idx + 1) % cfg.slstm_every == 0
+
+
+# ---------------------------------------------------------------------------
+# Cells
+# ---------------------------------------------------------------------------
+
+def _mlstm_parallel(v, q, k, igate, fgate, cfg: ArchConfig,
+                    init_state=None):
+    """Chunk-parallel mLSTM via the SSD dual.
+
+    v: [B,S,H,Dh]; q,k: [B,S,H,Dh]; i/f gates: [B,S,H].
+    Returns (h [B,S,H,Dh], final_state dict).
+    """
+    b, s, h, dh = v.shape
+    a_log = jax.nn.log_sigmoid(fgate.astype(jnp.float32))
+    iscale = jnp.exp(jnp.clip(igate.astype(jnp.float32), -GATE_CLIP,
+                              GATE_CLIP)).astype(v.dtype)
+    x = v * iscale[..., None]
+    ones = jnp.ones((b, s, h, 1), v.dtype) * iscale[..., None]
+    # per-head B/C: flatten heads into the batch axis for grouped ssd
+    def flat(t):  # [B,S,H,X] -> [B*H, S, X] is wrong for ssd API; use vmap
+        return t
+
+    # ssd expects b/c shared across heads; ours are per-head → vmap over H.
+    def per_head(xh, ah, bh, ch, s0):
+        return ssd(xh[:, :, None], ah[:, :, None], bh, ch, chunk=128,
+                   init_state=s0)
+
+    vm = jax.vmap(per_head, in_axes=(2, 2, 2, 2, 1), out_axes=(2, 1))
+    s0_c = (jnp.zeros((b, h, 1, dh, dh), v.dtype) if init_state is None
+            else init_state["C"][:, :, None])
+    s0_n = (jnp.zeros((b, h, 1, 1, dh), v.dtype) if init_state is None
+            else init_state["n"][:, :, None, None])
+    num, st_c = vm(x, a_log, k, q, s0_c)
+    den, st_n = vm(ones, a_log, k, q, s0_n)
+    hval = num[..., 0, :] / jnp.maximum(jnp.abs(den[..., 0, :]), 1.0)
+    state = {"C": st_c[:, :, 0], "n": st_n[:, :, 0, 0]}
+    return hval.astype(v.dtype), state
+
+
+def _mlstm_step(v, q, k, igate, fgate, state):
+    """One-step mLSTM. v,q,k: [B,H,Dh]; gates: [B,H]."""
+    a_log = jax.nn.log_sigmoid(fgate.astype(jnp.float32))
+    iscale = jnp.exp(jnp.clip(igate.astype(jnp.float32), -GATE_CLIP,
+                              GATE_CLIP))
+    decay = jnp.exp(a_log)[..., None, None]
+    C = state["C"] * decay + jnp.einsum(
+        "bhd,bhe->bhde", (v * iscale[..., None]).astype(jnp.float32),
+        k.astype(jnp.float32))
+    n = state["n"] * jnp.exp(a_log)[..., None] + \
+        iscale[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhde,bhe->bhd", C, q.astype(jnp.float32))
+    den = jnp.einsum("bhe,bhe->bh", n, q.astype(jnp.float32))
+    hval = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    return hval.astype(v.dtype), {"C": C.astype(state["C"].dtype),
+                                  "n": n.astype(state["n"].dtype)}
+
+
+def _slstm_scan(v, z_pre, igate, fgate, lp, init=None):
+    """Sequential sLSTM with stabilizer. v unused (z is the input stream).
+
+    z_pre, per-step gate pre-activations: [B, S, H] (+recurrent terms added
+    inside).  Returns h: [B, S, H, Dh]."""
+    b, s, h = igate.shape
+    dh = z_pre.shape[-1] // h
+    zs = z_pre.reshape(b, s, h, dh)
+
+    def cell(carry, t):
+        c, n, m, hprev = carry
+        z_t, i_t, f_t = t
+        # recurrent contributions (block-diagonal per head)
+        i_t = i_t + jnp.einsum("bhd,hd->bh", hprev, lp["r_igate"])
+        f_t = f_t + jnp.einsum("bhd,hd->bh", hprev, lp["r_fgate"])
+        z_t = jnp.tanh(z_t + hprev * lp["r_zgate"][None])
+        log_f = jax.nn.log_sigmoid(f_t.astype(jnp.float32))
+        log_i = jnp.clip(i_t.astype(jnp.float32), -GATE_CLIP, GATE_CLIP)
+        m_new = jnp.maximum(log_f + m, log_i)
+        i_s = jnp.exp(log_i - m_new)[..., None]
+        f_s = jnp.exp(log_f + m - m_new)[..., None]
+        c = f_s * c + i_s * z_t
+        n = f_s * n + i_s
+        h_new = c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, h_new), h_new
+
+    if init is None:
+        c0 = jnp.zeros((b, h, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+        h0 = jnp.zeros((b, h, dh), jnp.float32)
+    else:
+        c0, n0, m0, h0 = init
+    (c, n, m, hl), hs = jax.lax.scan(
+        cell, (c0, n0, m0, h0),
+        (zs.transpose(1, 0, 2, 3).astype(jnp.float32),
+         igate.transpose(1, 0, 2), fgate.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2, 3), (c, n, m, hl)
+
+
+# ---------------------------------------------------------------------------
+# Block + model
+# ---------------------------------------------------------------------------
+
+def _gates_and_streams(x, lp, cfg: ArchConfig):
+    di = _proj_dim(cfg)
+    h = cfg.n_heads
+    dh = di // h
+    b, s, _ = x.shape
+    up = x @ lp["up_proj"]
+    val, gate = jnp.split(up, 2, axis=-1)
+    q = (x @ lp["wq"]).reshape(b, s, h, dh)
+    k = (x @ lp["wk"]).reshape(b, s, h, dh) / float(np.sqrt(dh))
+    ig = x @ lp["w_igate"] + lp["b_igate"]
+    fg = x @ lp["w_fgate"] + lp["b_fgate"]
+    return val.reshape(b, s, h, dh), gate, q, k, ig, fg
+
+
+def xlstm_block(x, lp, cfg: ArchConfig, is_slstm: bool,
+                state=None):
+    """One xLSTM block; state-carrying when ``state`` is not None (decode)."""
+    b, s, d = x.shape
+    di = _proj_dim(cfg)
+    hidden = rms_norm(x, lp["norm"], cfg.norm_eps)
+    v, gate, q, k, ig, fg = _gates_and_streams(hidden, lp, cfg)
+
+    if is_slstm:
+        hval, new_state = _slstm_scan(v, v.reshape(b, s, di), ig, fg, lp,
+                                      init=state)
+    else:
+        if state is None:
+            hval, new_state = _mlstm_parallel(v, q, k, ig, fg, cfg)
+        else:
+            hval, new_state = _mlstm_step(v[:, 0], q[:, 0], k[:, 0],
+                                          ig[:, 0], fg[:, 0], state)
+            hval = hval[:, None]
+    hval = hval.reshape(b, s, di).astype(x.dtype)
+    o = jax.nn.sigmoid(hidden @ lp["w_ogate"])
+    y = rms_norm(hval * o, lp["mix_norm"], cfg.norm_eps)
+    return x + y @ lp["down_proj"], new_state
+
+
+# ---------------------------------------------------------------------------
+# Model-level API (loss / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _forward(params: Params, cfg: ArchConfig, tokens: jax.Array,
+             cache: Optional[Dict] = None):
+    """Full forward. cache=None → parallel over S; else single-step decode."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    slstm_mask = jnp.asarray(slstm_layers_mask(cfg))
+    b = tokens.shape[0]
+    di = _proj_dim(cfg)
+    h = cfg.n_heads
+    dh = di // h
+
+    if cache is None:
+        def body(hcar, per_layer):
+            lp, is_s = per_layer
+            lp = jax.tree.map(lambda w: w.astype(cdt), lp)
+
+            def s_path(hc):
+                out, _ = xlstm_block(hc, lp, cfg, is_slstm=True)
+                return out
+
+            def m_path(hc):
+                out, _ = xlstm_block(hc, lp, cfg, is_slstm=False)
+                return out
+
+            hcar = jax.lax.cond(is_s, s_path, m_path, hcar)
+            return hcar.astype(cdt), None
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, (params["layers"], slstm_mask))
+        new_cache = None
+    else:
+        def body(hcar, per_layer):
+            lp, is_s, mC, mn, sc, sn, sm, sh = per_layer
+            lp = jax.tree.map(lambda w: w.astype(cdt), lp)
+
+            def s_path(args):
+                hc, states = args
+                out, (c2, n2, m2, h2) = xlstm_block(
+                    hc, lp, cfg, is_slstm=True,
+                    state=(states[2], states[3], states[4], states[5]))
+                return out, (states[0], states[1], c2, n2, m2, h2)
+
+            def m_path(args):
+                hc, states = args
+                out, st = xlstm_block(hc, lp, cfg, is_slstm=False,
+                                      state={"C": states[0], "n": states[1]})
+                return out, (st["C"], st["n"], states[2], states[3],
+                             states[4], states[5])
+
+            hcar, new_states = jax.lax.cond(
+                is_s, s_path, m_path, (hcar, (mC, mn, sc, sn, sm, sh)))
+            return hcar.astype(cdt), new_states
+
+        xs = (params["layers"], slstm_mask, cache["mC"], cache["mn"],
+              cache["sc"], cache["sn"], cache["sm"], cache["sh"])
+        x, states = jax.lax.scan(body, x, xs)
+        new_cache = dict(cache, mC=states[0], mn=states[1], sc=states[2],
+                         sn=states[3], sm=states[4], sh=states[5],
+                         len=cache["len"] + 1)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T.astype(x.dtype)
+    logits = logical_constraint(logits, "batch", None, "vocab")
+    return logits, new_cache
+
+
+def loss_fn(params: Params, batch: Dict, *, cfg: ArchConfig) -> jax.Array:
+    tokens = batch["tokens"][:, :-1]
+    labels = batch["tokens"][:, 1:]
+    logits, _ = _forward(params, cfg, tokens)
+    return cross_entropy_loss(logits, labels)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> Dict:
+    """Recurrent state (O(1) in sequence length — the sub-quadratic point)."""
+    del max_len, enc_len
+    di = _proj_dim(cfg)
+    h = cfg.n_heads
+    dh = di // h
+    L = cfg.n_layers
+    f32 = jnp.float32
+    return {
+        "mC": jnp.zeros((L, batch, h, dh, dh), f32),
+        "mn": jnp.zeros((L, batch, h, dh), f32),
+        "sc": jnp.zeros((L, batch, h, dh), f32),
+        "sn": jnp.zeros((L, batch, h, dh), f32),
+        "sm": jnp.full((L, batch, h), -1e30, f32),
+        "sh": jnp.zeros((L, batch, h, dh), f32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params: Params, batch: Dict, *, cfg: ArchConfig,
+            max_len: Optional[int] = None) -> Tuple[jax.Array, Dict]:
+    """Sequential state build-up via the decode path over the prompt.
+
+    For the dry-run shapes the prefill of a recurrent model is the parallel
+    forward + state extraction; for simplicity and because xlstm-125m decode
+    dominates its assigned cells, we run the parallel forward for logits and
+    a single-step replay for the state of the *last* token only (documented
+    simplification: state reflects the last token; serving tests use tiny
+    prompts where this is exercised step by step instead).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len or s)
+
+    def step(cache, tok):
+        logits, cache = _forward(params, cfg, tok[:, None], cache)
+        return cache, logits
+
+    cache, logits = jax.lax.scan(step, cache,
+                                 tokens.transpose(1, 0))
+    return logits[-1][:, 0], cache
+
+
+def decode_step(params: Params, cache: Dict, tokens: jax.Array,
+                *, cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    logits, cache = _forward(params, cfg, tokens[:, None], cache)
+    return logits[:, 0], cache

@@ -1,0 +1,248 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a shared attention(+MLP) block.
+
+zamba2-2.7b: 54 mamba2 layers; a single *parameter-shared* full-attention
+block (MHA, 32 heads, kv=32) + MLP is applied after every ``attn_every``
+mamba layers (9 invocations for attn_every=6).  Sharing is the memory trick
+of the Zamba papers; each invocation still needs its own KV cache.
+
+Simplifications vs. the released checkpoints (documented in DESIGN.md):
+one shared block instead of two alternating; no per-invocation LoRA; no
+concatenated embedding re-injection.
+
+This hybrid is itself a TOTEM-style two-engine design: a cheap
+high-throughput engine (SSM) handles the bulk, an expensive engine
+(attention) handles what it is uniquely good at — the makespan model of the
+paper applies directly (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models import mamba2 as mb
+from repro.models.common import (ArchConfig, cross_entropy_loss, dense_init,
+                                 logical_constraint, rms_norm, rope,
+                                 split_keys)
+
+Params = Dict[str, Any]
+
+
+def n_groups(cfg: ArchConfig) -> int:
+    assert cfg.n_layers % cfg.attn_every == 0
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = split_keys(key, ["embed", "mamba", "attn", "final"])
+    d, hd = cfg.d_model, cfg.hd
+    h, g = cfg.n_heads, cfg.n_kv_heads
+    akeys = split_keys(keys["attn"], ["wq", "wk", "wv", "wo", "w_gate",
+                                      "w_up", "w_down"])
+    shared = {
+        "norm1": jnp.zeros((d,), dtype), "norm2": jnp.zeros((d,), dtype),
+        "wq": dense_init(akeys["wq"], (d, h * hd), dtype),
+        "wk": dense_init(akeys["wk"], (d, g * hd), dtype),
+        "wv": dense_init(akeys["wv"], (d, g * hd), dtype),
+        "wo": dense_init(akeys["wo"], (h * hd, d), dtype),
+        "w_gate": dense_init(akeys["w_gate"], (d, cfg.d_ff), dtype),
+        "w_up": dense_init(akeys["w_up"], (d, cfg.d_ff), dtype),
+        "w_down": dense_init(akeys["w_down"], (cfg.d_ff, d), dtype),
+    }
+    return {
+        "embed": dense_init(keys["embed"], (cfg.vocab, cfg.d_model), dtype,
+                            fan_in=cfg.d_model),
+        "mamba": mb.init_mamba_stack(keys["mamba"], cfg, cfg.n_layers,
+                                     dtype),
+        "shared_attn": shared,
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+
+
+def _shared_attn_block(x, sp, cfg: ArchConfig, positions,
+                       cache: Optional[Tuple] = None,
+                       cache_len=None):
+    """The parameter-shared attention + MLP block (full causal MHA)."""
+    b, s, d = x.shape
+    g, hd = cfg.n_kv_heads, cfg.hd
+    r = cfg.n_heads // g
+    h0 = rms_norm(x, sp["norm1"], cfg.norm_eps)
+    q = (h0 @ sp["wq"]).reshape(b, s, g, r, hd)
+    k = (h0 @ sp["wk"]).reshape(b, s, g, hd)
+    v = (h0 @ sp["wv"]).reshape(b, s, g, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if cache is None:
+        o = attn.chunked_attention(q, k, v,
+                                   q_chunk=attn.pick_chunk(s, 2048),
+                                   k_chunk=attn.pick_chunk(s, 1024))
+        new_cache = (k, v)
+    else:
+        kc, vc = cache
+        pos = cache_len
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        o = attn.decode_attention(q, kc, vc, cache_len=pos + 1)
+        new_cache = (kc, vc)
+    x = x + o.reshape(b, s, -1) @ sp["wo"]
+    h1 = rms_norm(x, sp["norm2"], cfg.norm_eps)
+    inter = jax.nn.silu(h1 @ sp["w_gate"]) * (h1 @ sp["w_up"])
+    inter = logical_constraint(inter, "batch", None, "ffn")
+    return x + inter @ sp["w_down"], new_cache
+
+
+def _forward(params: Params, cfg: ArchConfig, tokens: jax.Array,
+             cache: Optional[Dict] = None, ssd_chunk: int = 128):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    ng = n_groups(cfg)
+    ae = cfg.attn_every
+    # regroup the mamba stack: [L, ...] -> [ng, ae, ...]
+    grouped = jax.tree.map(
+        lambda w: w.reshape((ng, ae) + w.shape[1:]), params["mamba"])
+    shared = jax.tree.map(lambda w: w.astype(cdt), params["shared_attn"])
+    positions = (jnp.arange(s)[None] if cache is None
+                 else jnp.full((1, 1), cache["len"], jnp.int32))
+
+    new_conv, new_ssd, new_k, new_v = [], [], [], []
+    for gi in range(ng):
+        gp = jax.tree.map(lambda w: w[gi], grouped)
+
+        if cache is None:
+            def body(h, lp):
+                lp = jax.tree.map(lambda w: w.astype(cdt), lp)
+                out = mb.mamba_block(h, lp, cfg, chunk=ssd_chunk)
+                return out.astype(cdt), None
+
+            def attn_only(h):
+                return _shared_attn_block(h, shared, cfg, positions)[0]
+
+            if cfg.remat:
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable)
+                # The shared block must be remat'd too: un-checkpointed, the
+                # chunked-attention scan saves per-chunk probability tensors
+                # for backward — measured +~38 GiB/chip on train_4k (§Perf).
+                attn_only = jax.checkpoint(
+                    attn_only,
+                    policy=jax.checkpoint_policies.nothing_saveable)
+            x, _ = jax.lax.scan(body, x, gp)
+            x = attn_only(x)
+            x = logical_constraint(x, "batch", "seq", None)
+        else:
+            def body(h, per_layer):
+                lp, conv_t, ssd_st = per_layer
+                lp = jax.tree.map(lambda w: w.astype(cdt), lp)
+                out, (c2, s2) = mb.mamba_block(h, lp, cfg,
+                                               state=(conv_t, ssd_st))
+                return out.astype(cdt), (c2, s2)
+
+            lo = gi * ae
+            conv_g = jax.lax.dynamic_slice_in_dim(cache["conv"], lo, ae, 0)
+            ssd_g = jax.lax.dynamic_slice_in_dim(cache["ssd"], lo, ae, 0)
+            x, (conv2, ssd2) = jax.lax.scan(body, x, (gp, conv_g, ssd_g))
+            new_conv.append(conv2)
+            new_ssd.append(ssd2)
+            x, (kc, vc) = _shared_attn_block(
+                x, shared, cfg, positions,
+                cache=(cache["k"][gi], cache["v"][gi]),
+                cache_len=cache["len"])
+            new_k.append(kc)
+            new_v.append(vc)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T.astype(x.dtype)
+    logits = logical_constraint(logits, "batch", None, "vocab")
+
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(
+            cache,
+            conv=jnp.concatenate(new_conv, axis=0),
+            ssd=jnp.concatenate(new_ssd, axis=0),
+            k=jnp.stack(new_k), v=jnp.stack(new_v),
+            len=cache["len"] + 1)
+    return logits, new_cache
+
+
+def loss_fn(params: Params, batch: Dict, *, cfg: ArchConfig) -> jax.Array:
+    tokens = batch["tokens"][:, :-1]
+    labels = batch["tokens"][:, 1:]
+    logits, _ = _forward(params, cfg, tokens)
+    return cross_entropy_loss(logits, labels)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> Dict:
+    del enc_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h_ssd = di // mb.HEAD_DIM
+    conv_ch = di + 2 * n
+    ng = n_groups(cfg)
+    g, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_ch),
+                          cdt),
+        "ssd": jnp.zeros((cfg.n_layers, batch, h_ssd, mb.HEAD_DIM, n), cdt),
+        "k": jnp.zeros((ng, batch, max_len, g, hd), cdt),
+        "v": jnp.zeros((ng, batch, max_len, g, hd), cdt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params: Params, batch: Dict, *, cfg: ArchConfig,
+            max_len: Optional[int] = None) -> Tuple[jax.Array, Dict]:
+    """Parallel forward with state extraction (chunked SSD final states +
+    attention KV), then assemble the decode cache."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    max_len = max_len or s
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    ng = n_groups(cfg)
+    ae = cfg.attn_every
+    grouped = jax.tree.map(
+        lambda w: w.reshape((ng, ae) + w.shape[1:]), params["mamba"])
+    shared = jax.tree.map(lambda w: w.astype(cdt), params["shared_attn"])
+    positions = jnp.arange(s)[None]
+
+    convs, ssds, ks, vs = [], [], [], []
+    for gi in range(ng):
+        gp = jax.tree.map(lambda w: w[gi], grouped)
+
+        def body(h, lp):
+            lp = jax.tree.map(lambda w: w.astype(cdt), lp)
+            out, st = mb.mamba_block(h, lp, cfg, return_state=True)
+            return out.astype(cdt), st
+
+        x, (conv_t, ssd_st) = jax.lax.scan(body, x, gp)
+        convs.append(conv_t)
+        ssds.append(ssd_st)
+        x, (k_new, v_new) = _shared_attn_block(x, shared, cfg, positions)
+        pad = max_len - s
+        ks.append(jnp.pad(k_new, ((0, 0), (0, pad), (0, 0), (0, 0))))
+        vs.append(jnp.pad(v_new, ((0, 0), (0, pad), (0, 0), (0, 0))))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1] @ params["embed"].T.astype(x.dtype))
+    cache = {
+        "conv": jnp.concatenate(convs, axis=0).astype(cdt),
+        "ssd": jnp.concatenate(ssds, axis=0).astype(cdt),
+        "k": jnp.stack(ks), "v": jnp.stack(vs),
+        "len": jnp.int32(s),
+    }
+    return logits, cache
+
+
+def decode_step(params: Params, cache: Dict, tokens: jax.Array,
+                *, cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    logits, cache = _forward(params, cfg, tokens[:, None], cache)
+    return logits[:, 0], cache

@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamW, apply_updates, global_norm
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     CompressedAllReduce)
+
+__all__ = ["AdamW", "apply_updates", "global_norm", "compress_int8",
+           "decompress_int8", "CompressedAllReduce"]

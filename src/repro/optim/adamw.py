@@ -1,0 +1,76 @@
+"""AdamW with global-norm clipping, built for sharded pytrees.
+
+Optimizer moments inherit the parameter PartitionSpecs (FSDP-sharded params
+→ ZeRO-style sharded optimizer state for free).  All ops are elementwise, so
+no resharding is introduced by the update.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree.map(jnp.zeros_like, params))
+
+    def _lr(self, step):
+        warm = jnp.minimum(1.0, (step + 1) / max(self.warmup_steps, 1))
+        return self.learning_rate * warm
+
+    def update(self, grads, state: AdamWState,
+               params) -> Tuple[Any, AdamWState]:
+        if self.clip_norm is not None:
+            g_norm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm
+                                / jnp.maximum(g_norm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * jnp.square(g),
+                          state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(m, n, p):
+            mhat = m / bc1
+            nhat = n / bc2
+            return -lr * (mhat / (jnp.sqrt(nhat) + self.eps)
+                          + self.weight_decay * p)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params,
+                        updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))

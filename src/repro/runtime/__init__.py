@@ -1,0 +1,4 @@
+from repro.runtime.watchdog import StepWatchdog
+from repro.runtime.failures import run_with_restarts, FaultInjector
+
+__all__ = ["StepWatchdog", "run_with_restarts", "FaultInjector"]

@@ -1,0 +1,84 @@
+"""Unit tests for the roofline toolchain: HLO collective parsing with loop
+multipliers, and the analytic calculator's napkin-math invariants."""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from benchmarks import calculator, hlo_analysis  # noqa: E402
+from repro import configs  # noqa: E402
+from repro.models import api  # noqa: E402
+
+HLO = """
+ENTRY %main {
+  %ar0 = f32[128,256]{1,0} all-reduce(%x), replica_groups=[2,4]<=[8], metadata={op_name="jit(f)/psum"}
+}
+%body {
+  %ag = f32[64,512]{1,0} all-gather(%y), replica_groups=[2,4]<=[8], dimensions={1}, metadata={op_name="jit(f)/while/body/gather"}
+  %rs = bf16[32,32]{1,0} reduce-scatter(%z), replica_groups=[8,1]<=[8], metadata={op_name="jit(f)/while/body/while/body/rs"}
+}
+"""
+
+
+class TestHloParsing:
+    def test_types_and_operand_semantics(self):
+        cb = hlo_analysis.collective_bytes(HLO, [1, 1, 1])
+        assert cb["all-reduce"] == 128 * 256 * 4
+        # all-gather operand = output / group_size (4)
+        assert cb["all-gather"] == 64 * 512 * 4 / 4
+        # reduce-scatter operand = output × group_size (1)
+        assert cb["reduce-scatter"] == 32 * 32 * 2 * 1
+
+    def test_depth_multipliers(self):
+        cb = hlo_analysis.collective_bytes(HLO, [1, 10, 100])
+        assert cb["all-gather"] == 64 * 512 * 4 / 4 * 10      # depth 1
+        assert cb["reduce-scatter"] == 32 * 32 * 2 * 100      # depth 2
+        assert cb["all-reduce"] == 128 * 256 * 4              # depth 0
+
+    def test_depth_beyond_list_reuses_last(self):
+        cb = hlo_analysis.collective_bytes(HLO, [1, 7])
+        assert cb["reduce-scatter"] == 32 * 32 * 2 * 7
+
+
+class TestCalculator:
+    def test_param_count_matches_known_sizes(self):
+        n = calculator.count_params(configs.get("tinyllama-1.1b"))
+        assert 1.0e9 < n["total"] < 1.25e9         # "1.1B"
+        n = calculator.count_params(configs.get("deepseek-67b"))
+        assert 6.3e10 < n["total"] < 7.1e10        # "67B"
+
+    def test_moe_active_params(self):
+        n = calculator.count_params(configs.get("qwen3-moe-235b-a22b"))
+        assert 2.2e11 < n["total"] < 2.6e11        # "235B"
+        assert 1.6e10 < n["active"] < 3.0e10       # "a22b"
+
+    def test_train_roofline_terms_positive_and_dominated(self):
+        cfg = configs.get("deepseek-67b")
+        r = calculator.analyze(cfg, api.SHAPES["train_4k"], 256)
+        assert r.compute_s > 0 and r.memory_s > 0 and r.collective_s > 0
+        assert r.dominant == "compute"             # big dense training
+        assert 0.3 < r.useful_ratio <= 1.0
+        assert 0 < r.mfu_bound <= 1.0
+
+    def test_decode_is_memory_bound(self):
+        cfg = configs.get("deepseek-67b")
+        r = calculator.analyze(cfg, api.SHAPES["decode_32k"], 256)
+        assert r.dominant == "memory"              # KV-cache streaming
+
+    def test_scaling_with_chips(self):
+        cfg = configs.get("tinyllama-1.1b")
+        r1 = calculator.analyze(cfg, api.SHAPES["train_4k"], 256)
+        r2 = calculator.analyze(cfg, api.SHAPES["train_4k"], 512)
+        assert abs(r1.compute_s / r2.compute_s - 2.0) < 1e-6
+
+
+def test_perf_model_paper_figures():
+    """Pin the paper's headline model predictions (Fig. 2)."""
+    from repro.core import perf_model as pm
+    # alpha→0 with beta→0: speedup → 1/alpha asymptote
+    assert pm.speedup(0.5, 0.0, 1e9, pm.PAPER_C) == pytest.approx(2.0)
+    # paper §3.3: with beta=1.0 (worst case, e.g. a cut bipartite graph) a
+    # slowdown is predicted only for alpha > ~0.7 (analytically 2/3)
+    assert pm.speedup(0.5, 1.0, 1e9, pm.PAPER_C) > 1.0
+    assert pm.speedup(0.75, 1.0, 1e9, pm.PAPER_C) < 1.0

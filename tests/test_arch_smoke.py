@@ -1,0 +1,78 @@
+"""Per-architecture smoke tests (spec f): reduced config of the same family,
+one forward/train step on CPU, asserting output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import api
+from repro.optim.adamw import AdamW
+
+SMOKE_TRAIN = api.ShapeSpec("smoke_train", "train", 32, 4)
+
+
+@pytest.mark.parametrize("arch_id", configs.all_ids())
+def test_smoke_forward_and_train_step(arch_id):
+    cfg = configs.get_smoke(arch_id)
+    assert cfg.family == configs.get(arch_id).family
+    model = api.build(cfg)
+    params = model.init(jax.random.key(0))
+    batch = api.synth_batch(cfg, SMOKE_TRAIN)
+
+    loss = model.loss(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+
+    opt = AdamW(warmup_steps=1)
+    step = jax.jit(api.make_train_step(model, opt, microbatches=1))
+    params2, _, metrics = step(params, opt.init(params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params2):
+        arr = np.asarray(leaf)
+        assert not np.any(np.isnan(arr)), path
+
+
+@pytest.mark.parametrize("arch_id", configs.all_ids())
+def test_smoke_serve_path(arch_id):
+    cfg = configs.get_smoke(arch_id)
+    model = api.build(cfg)
+    params = model.init(jax.random.key(1))
+    batch = api.synth_batch(cfg, api.ShapeSpec("p", "prefill", 16, 2))
+    logits, cache = model.prefill(params, batch, max_len=20)
+    assert logits.shape == (2, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    logits2, cache2 = model.decode_step(params, cache,
+                                        jnp.zeros((2,), jnp.int32))
+    assert logits2.shape == (2, cfg.vocab)
+    assert np.isfinite(np.asarray(logits2)).all()
+    assert int(cache2["len"]) == int(cache["len"]) + 1
+
+
+@pytest.mark.parametrize("arch_id", configs.all_ids())
+def test_full_config_matches_spec(arch_id):
+    """Pin the exact public configuration values."""
+    spec = {
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+        "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+    }[arch_id]
+    cfg = configs.get(arch_id)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab)
+    assert got == spec
+    if arch_id == "olmoe-1b-7b":
+        assert (cfg.moe_experts, cfg.moe_top_k) == (64, 8)
+    if arch_id == "qwen3-moe-235b-a22b":
+        assert (cfg.moe_experts, cfg.moe_top_k) == (128, 8)
+    if arch_id == "zamba2-2.7b":
+        assert cfg.ssm_state == 64
+    if arch_id == "gemma3-4b":
+        assert (cfg.local_window, cfg.local_global_ratio) == (1024, 5)

@@ -1,0 +1,126 @@
+"""Core engine behaviour: partitioning invariants + algorithm correctness."""
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core import partition as PT
+from repro.core.bsp import BSPEngine
+from repro.algorithms import (
+    bfs, bfs_reference, pagerank, pagerank_reference, sssp, sssp_reference,
+    connected_components, cc_reference, betweenness_centrality, bc_reference)
+from repro.algorithms.cc import symmetrize
+
+
+@pytest.fixture(scope="module", params=["rmat", "uniform"])
+def small_graph(request):
+    if request.param == "rmat":
+        return G.rmat(8, edge_factor=8, seed=3)
+    return G.uniform(8, edge_factor=8, seed=3)
+
+
+@pytest.fixture(scope="module", params=[1, 2, 3])
+def num_parts(request):
+    return request.param
+
+
+@pytest.fixture(scope="module", params=[PT.RAND, PT.HIGH, PT.LOW])
+def strategy(request):
+    return request.param
+
+
+def _engine(g, num_parts, strategy, **kw):
+    pg = PT.partition(g, num_parts, strategy, **kw)
+    return BSPEngine(pg)
+
+
+class TestPartitionInvariants:
+    def test_every_vertex_assigned_once(self, small_graph, num_parts,
+                                        strategy):
+        pg = PT.partition(small_graph, num_parts, strategy)
+        seen = np.concatenate(pg.assignment.l2g)
+        assert sorted(seen) == list(range(small_graph.num_vertices))
+
+    def test_edge_conservation(self, small_graph, num_parts, strategy):
+        pg = PT.partition(small_graph, num_parts, strategy)
+        assert int(pg.fwd.num_edges.sum()) == small_graph.num_edges
+        assert int(pg.fwd.edge_mask.sum()) == small_graph.num_edges
+
+    def test_alpha_matches_requested_fraction(self, small_graph):
+        for frac in (0.5, 0.7, 0.9):
+            pg = PT.partition(small_graph, 2, PT.HIGH,
+                              cpu_edge_fraction=frac)
+            assert abs(pg.alpha[0] - frac) < 0.05
+
+    def test_beta_reduction_shrinks_beta(self, small_graph, strategy):
+        pg = PT.partition(small_graph, 2, strategy)
+        assert pg.beta_with_reduction <= pg.beta_no_reduction + 1e-12
+
+    def test_reduction_better_on_scale_free(self):
+        """Paper Fig. 4: reduction helps much more on skewed graphs."""
+        sf = PT.partition(G.rmat(10, 16, seed=1), 2, PT.RAND)
+        un = PT.partition(G.uniform(10, 16, seed=1), 2, PT.RAND)
+        gain_sf = sf.beta_no_reduction / max(sf.beta_with_reduction, 1e-9)
+        gain_un = un.beta_no_reduction / max(un.beta_with_reduction, 1e-9)
+        assert gain_sf > gain_un
+
+    def test_high_strategy_puts_high_degree_on_p0(self, small_graph):
+        pg = PT.partition(small_graph, 2, PT.HIGH, cpu_edge_fraction=0.5)
+        deg = small_graph.out_degrees()
+        d0 = deg[pg.assignment.l2g[0]]
+        d1 = deg[pg.assignment.l2g[1]]
+        if len(d0) and len(d1):
+            assert d0.min() >= d1.max()
+
+    def test_outbox_slots_sorted_and_valid(self, small_graph, num_parts):
+        pg = PT.partition(small_graph, num_parts, PT.RAND)
+        for p in range(num_parts):
+            for q in range(num_parts):
+                n = int(pg.fwd.outbox_mask[p, q].sum())
+                ids = pg.fwd.outbox_dst[p, q, :n]
+                assert (np.diff(ids) > 0).all()  # unique + sorted
+                assert (ids < pg.assignment.part_sizes[q]).all()
+
+
+class TestAlgorithms:
+    def test_bfs_matches_reference(self, small_graph, num_parts, strategy):
+        eng = _engine(small_graph, num_parts, strategy)
+        got, _ = bfs(eng, source=0)
+        want = bfs_reference(small_graph, 0)
+        np.testing.assert_array_equal(got, want)
+
+    def test_pagerank_matches_reference(self, small_graph, num_parts,
+                                        strategy):
+        eng = _engine(small_graph, num_parts, strategy)
+        got = pagerank(eng, num_iterations=15)
+        want = pagerank_reference(small_graph, num_iterations=15)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-7)
+
+    def test_sssp_matches_reference(self, small_graph, num_parts, strategy):
+        g = small_graph.with_uniform_weights(seed=7)
+        eng = _engine(g, num_parts, strategy)
+        got, _ = sssp(eng, source=0)
+        want = sssp_reference(g, 0)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_cc_matches_reference(self, small_graph, num_parts, strategy):
+        g = symmetrize(small_graph)
+        eng = _engine(g, num_parts, strategy)
+        got, _ = connected_components(eng)
+        want = cc_reference(g)
+        np.testing.assert_array_equal(got, want)
+
+    def test_bc_matches_reference(self, small_graph, num_parts, strategy):
+        eng = _engine(small_graph, num_parts, strategy, include_reverse=True)
+        got, _ = betweenness_centrality(eng, source=0)
+        want = bc_reference(small_graph, 0)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_memory_footprint_accounting():
+    g = G.rmat(8, 8, seed=2)
+    pg = PT.partition(g, 2, PT.LOW)
+    fp = PT.memory_footprint_bytes(pg)
+    for p in (0, 1):
+        assert fp[p]["total"] == (fp[p]["graph"] + fp[p]["outbox"]
+                                  + fp[p]["inbox"] + fp[p]["state"])
+        assert fp[p]["graph"] > 0

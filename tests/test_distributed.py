@@ -1,0 +1,35 @@
+"""Multi-device integration tests — run in subprocesses so the forced device
+count never leaks into this process's jax runtime."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(ndev: int, module: str, *args, timeout=900):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={ndev}",
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH",
+                                                            ""))
+    return subprocess.run([sys.executable, "-m", module, *args],
+                          capture_output=True, text=True, env=env,
+                          timeout=timeout)
+
+
+def test_bsp_engine_distributed_matches_local():
+    r = _run(8, "repro.launch.selftest")
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "SELFTEST OK" in r.stdout
+
+
+def test_train_driver_on_multi_device_mesh():
+    """The end-to-end driver runs sharded over 4 devices."""
+    r = _run(4, "repro.launch.train", "--arch", "tinyllama-1.1b", "--smoke",
+             "--steps", "6", "--batch", "4", "--seq", "32",
+             "--ckpt-dir", "/tmp/ckpt_dist_test")
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "done: final loss" in r.stdout

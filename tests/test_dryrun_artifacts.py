@@ -1,0 +1,80 @@
+"""Integrity of the multi-pod dry-run artifacts (deliverable e).
+
+These tests validate the *recorded* sweep (experiments/dryrun/*.json) rather
+than recompiling 82 cells: every (arch × shape × mesh) cell must be ok —
+either compiled with sane analyses or a spec-mandated skip.  If artifacts
+are missing the tests skip with the command to generate them.
+"""
+import glob
+import json
+from pathlib import Path
+
+import pytest
+
+from repro import configs
+from repro.models import api
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+GEN_CMD = "PYTHONPATH=src:. python -m repro.launch.dryrun --all --mesh both"
+
+
+def _load():
+    recs = {}
+    for f in glob.glob(str(DRYRUN / "*.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+RECS = _load()
+pytestmark = pytest.mark.skipif(not RECS, reason=f"run: {GEN_CMD}")
+
+
+def _cells():
+    out = []
+    for arch in configs.all_ids():
+        for shape in api.SHAPES:
+            for mesh in ("single", "multi"):
+                out.append((arch, shape, mesh))
+    for mesh in ("single", "multi"):
+        out.append(("totem-rmat", "pagerank_superstep", mesh))
+    return out
+
+
+@pytest.mark.parametrize("arch,shape,mesh", _cells())
+def test_cell_present_and_ok(arch, shape, mesh):
+    rec = RECS.get((arch, shape, mesh))
+    assert rec is not None, f"missing cell; run: {GEN_CMD}"
+    assert rec.get("ok"), rec.get("error", "")[-500:]
+    if rec.get("skipped"):
+        # only the spec-mandated long_500k skip is allowed
+        assert shape == "long_500k"
+        assert not configs.get(arch).sub_quadratic
+        return
+    ma = rec["memory_analysis"]
+    assert ma["temp_bytes"] > 0
+    assert rec["cost_analysis_raw"]["flops"] > 0
+    if arch != "totem-rmat":
+        rf = rec["roofline"]
+        assert rf["compute_s"] > 0 and rf["memory_s"] > 0
+        assert rf["dominant"] in ("compute", "memory", "collective")
+
+
+def test_sub_quadratic_archs_run_long_500k():
+    for arch in ("xlstm-125m", "zamba2-2.7b", "gemma3-4b"):
+        rec = RECS.get((arch, "long_500k", "single"))
+        assert rec and rec.get("ok") and not rec.get("skipped")
+
+
+def test_decode_cells_are_memory_bound():
+    """Serving decode = KV/state streaming → memory must dominate."""
+    for (arch, shape, mesh), rec in RECS.items():
+        if shape == "decode_32k" and mesh == "single" \
+                and "roofline" in rec and not rec.get("skipped"):
+            assert rec["roofline"]["dominant"] == "memory", arch
+
+
+def test_train_cells_are_compute_bound():
+    for (arch, shape, mesh), rec in RECS.items():
+        if shape == "train_4k" and mesh == "single" and "roofline" in rec:
+            assert rec["roofline"]["dominant"] == "compute", arch

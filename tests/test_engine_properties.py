@@ -1,0 +1,64 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as G
+from repro.core import partition as PT
+from repro.core.bsp import BSPEngine
+from repro.algorithms import (bfs, bfs_reference, pagerank,
+                              pagerank_reference)
+
+
+def random_graph(draw):
+    n = draw(st.integers(8, 80))
+    m = draw(st.integers(1, 6)) * n
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=m).astype(np.int64)
+    dst = rng.integers(0, n, size=m).astype(np.int64)
+    return G.from_edge_list(src, dst, n)
+
+
+graphs = st.composite(lambda draw: random_graph(draw))()
+
+
+@settings(max_examples=12, deadline=None)
+@given(g=graphs, parts=st.integers(1, 3),
+       strategy=st.sampled_from(PT.STRATEGIES))
+def test_bfs_engine_equals_oracle_on_random_graphs(g, parts, strategy):
+    eng = BSPEngine(PT.partition(g, parts, strategy))
+    got, steps = bfs(eng, source=0)
+    want = bfs_reference(g, 0)
+    np.testing.assert_array_equal(got, want)
+    # level-monotonicity: supersteps == max finite level (or 1 if isolated)
+    finite = want[np.isfinite(want)]
+    assert steps >= finite.max()
+
+
+@settings(max_examples=10, deadline=None)
+@given(g=graphs, parts=st.integers(1, 3))
+def test_pagerank_mass_and_oracle(g, parts):
+    eng = BSPEngine(PT.partition(g, parts, PT.RAND))
+    got = pagerank(eng, num_iterations=8)
+    want = pagerank_reference(g, num_iterations=8)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-7)
+    # rank mass is bounded by 1 (dangling mass leaks, never grows)
+    assert got.sum() <= 1.0 + 1e-4
+    assert (got >= 0).all()
+
+
+@settings(max_examples=12, deadline=None)
+@given(g=graphs, parts=st.integers(1, 4),
+       strategy=st.sampled_from(PT.STRATEGIES),
+       seed=st.integers(0, 100))
+def test_partition_conservation_properties(g, parts, strategy, seed):
+    pg = PT.partition(g, parts, strategy, seed=seed)
+    # every vertex exactly once
+    seen = np.concatenate(pg.assignment.l2g)
+    assert sorted(seen.tolist()) == list(range(g.num_vertices))
+    # every edge exactly once
+    assert int(pg.fwd.num_edges.sum()) == g.num_edges
+    # reduction can only reduce boundary traffic
+    assert pg.beta_with_reduction <= pg.beta_no_reduction + 1e-12
+    # alpha sums to 1
+    assert abs(pg.alpha.sum() - 1.0) < 1e-9 or g.num_edges == 0
