@@ -1,0 +1,20 @@
+# Convenience targets; PYTHONPATH=src is the repo's only install step.
+PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
+
+.PHONY: test bench bench-check
+
+test:            ## tier-1 suite
+	$(PY) -m pytest -x -q
+
+bench:           ## reference-vs-fused superstep timings -> BENCH_superstep.json
+	$(PY) benchmarks/superstep_bench.py
+
+# Optional CI gate: compare a fresh run against the previous baseline
+# (first run seeds the baseline instead of failing).
+bench-check: bench
+	@if [ -f BENCH_superstep.prev.json ]; then \
+	  $(PY) scripts/bench_check.py BENCH_superstep.json BENCH_superstep.prev.json; \
+	else \
+	  cp BENCH_superstep.json BENCH_superstep.prev.json; \
+	  echo "bench_check: seeded baseline BENCH_superstep.prev.json"; \
+	fi

@@ -30,12 +30,12 @@ def run(scale: int = 14, parts: int = 4):
     dims = eng.dims_for(edges)
 
     full_step = jax.jit(functools.partial(
-        _superstep, dims, program, edges, eng._exchange, jnp.all))
+        _superstep, dims, program, edges, eng._exchange, jnp.all, None))
 
     def compute_only(state, step):
         # identical program with the exchange replaced by a zero-copy no-op
         return _superstep(dims, program, edges, lambda ob: ob * 0.0,
-                          jnp.all, state, step)
+                          jnp.all, None, state, step)
 
     compute_step = jax.jit(compute_only)
 

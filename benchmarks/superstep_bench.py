@@ -1,0 +1,172 @@
+"""Reference vs fused BSP superstep timings → BENCH_superstep.json.
+
+Times one jitted superstep of the reference path (gather → [Pl, e_max]
+messages → scatter-reduce) against the fused Pallas path for a sum-combine
+program (PageRank) and a min-combine program (BFS), across RMAT scales and
+all three partitioning strategies (RAND/HIGH/LOW).
+
+Also verifies the fused path's core claim **structurally**: the compiled HLO
+of the fused superstep must contain no non-parameter op producing an
+``f32[Pl, e_max]`` (or ``f32[Pl, e_pad]``) value — i.e. the edge-message
+array is never materialized in HBM.  The reference superstep must contain at
+least one (that's the array being eliminated).  BFS and PageRank take no
+``f32[Pl, e_max]``-shaped *inputs* either, so the check is exact for them.
+
+Runs in interpret mode on CPU (the container default); on a real TPU the
+same script times the compiled kernels.
+
+Usage (from the repo root):
+  python benchmarks/superstep_bench.py [--scales 10 11] [--parts 4]
+      [--out BENCH_superstep.json]
+
+``scripts/bench_check.py`` diffs the JSON against a previous run and fails
+on >20% fused-superstep regression.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import re
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT))
+sys.path.insert(0, str(_ROOT / "src"))
+
+from benchmarks.common import timeit  # noqa: E402
+from repro.core import graph as G  # noqa: E402
+from repro.core import partition as PT  # noqa: E402
+from repro.core.bsp import BSPEngine  # noqa: E402
+from repro.kernels.ops import fused_span_limit  # noqa: E402
+from repro.algorithms.bfs import BFS_PROGRAM  # noqa: E402
+from repro.algorithms.pagerank import (initial_state,  # noqa: E402
+                                       make_pagerank_program)
+
+_SKIP_OPS = ("parameter(", " copy(", "bitcast(", "constant(")
+
+
+def message_array_lines(hlo: str, pl_count: int, e_sizes) -> list:
+    """HLO lines where a non-parameter op produces an f32[Pl, e_*] value."""
+    pats = [re.compile(rf"f32\[{pl_count},{e}\]") for e in set(e_sizes)]
+    hits = []
+    for line in hlo.splitlines():
+        lhs = line.split(" = ", 1)
+        if len(lhs) != 2 or any(tok in lhs[1] for tok in _SKIP_OPS):
+            continue
+        head = lhs[1].split("(", 1)[0]   # output shape + op name
+        if any(p.search(head) for p in pats):
+            hits.append(line.strip())
+    return hits
+
+
+def _superstep_fn(eng: BSPEngine, program):
+    edges = eng.edges_for(program)
+    step_fn = eng._step_fn(program, edges, eng._exchange, jnp.all)
+    return jax.jit(lambda s, i: step_fn(s, i))
+
+
+def bench_cell(pg, scale: int, parts: int, strategy: str, alg: str,
+               block_e: int) -> dict:
+    ref_eng = BSPEngine(pg)
+    fus_eng = BSPEngine(pg, fused=True, block_e=block_e)
+    if alg == "pagerank":
+        program = make_pagerank_program(pg.num_vertices)
+        state = initial_state(pg)
+    else:
+        program = BFS_PROGRAM
+        level0 = np.full((parts, pg.v_max), np.inf, dtype=np.float32)
+        level0[0, 0] = 0.0
+        state = {"level": jnp.asarray(level0)}
+
+    blk = fus_eng._fwd_blk
+    e_sizes = (pg.fwd.e_max, blk.e_pad)
+    rec = dict(scale=scale, parts=parts, strategy=strategy, algorithm=alg,
+               combine=program.combine, e_max=pg.fwd.e_max, e_pad=blk.e_pad,
+               span=blk.span, span_req=blk.span_req, block_e=block_e,
+               num_blocks=blk.num_blocks, v_max=pg.v_max,
+               beta=pg.beta_with_reduction,
+               # False → span exceeded max_span/VMEM budget and this cell's
+               # "fused" engine statically fell back to the reference chain.
+               fused_active=blk.span <= fused_span_limit(
+                   block_e, program.combine))
+
+    step0 = jnp.int32(0)
+    for name, eng in (("ref", ref_eng), ("fused", fus_eng)):
+        fn = _superstep_fn(eng, program)
+        lowered = fn.lower(state, step0)
+        compiled = lowered.compile()
+        hlo = compiled.as_text()
+        rec[f"{name}_hlo_msg_arrays"] = len(
+            message_array_lines(hlo, parts, e_sizes))
+        try:
+            rec[f"{name}_temp_bytes"] = int(
+                compiled.memory_analysis().temp_size_in_bytes)
+        except Exception:
+            rec[f"{name}_temp_bytes"] = None
+        rec[f"{name}_ms"] = timeit(fn, state, step0, warmup=1, iters=5) * 1e3
+
+    rec["speedup"] = rec["ref_ms"] / max(rec["fused_ms"], 1e-12)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scales", type=int, nargs="+", default=[10, 11])
+    ap.add_argument("--parts", type=int, default=4)
+    ap.add_argument("--edge-factor", type=int, default=8)
+    # 256 keeps [block_e, span] inside the VMEM budget (ops.fused_span_limit)
+    # for the spans these scales produce, so every cell measures the kernel.
+    ap.add_argument("--block-e", type=int, default=256)
+    ap.add_argument("--out", default=str(
+        Path(__file__).resolve().parents[1] / "BENCH_superstep.json"))
+    ap.add_argument("--no-assert", action="store_true",
+                    help="record HLO counts without failing on violations")
+    args = ap.parse_args(argv)
+
+    results = []
+    failures = []
+    for scale in args.scales:
+        g = G.rmat(scale, args.edge_factor, seed=1)
+        for strategy in PT.STRATEGIES:
+            pg = PT.partition(g, args.parts, strategy)
+            for alg in ("pagerank", "bfs"):
+                rec = bench_cell(pg, scale, args.parts, strategy, alg,
+                                 args.block_e)
+                results.append(rec)
+                print(f"scale={scale} {strategy:>4} {alg:>8}: "
+                      f"ref={rec['ref_ms']:.2f}ms fused={rec['fused_ms']:.2f}ms "
+                      f"({rec['speedup']:.2f}x) span={rec['span']} "
+                      f"active={rec['fused_active']} "
+                      f"msg_arrays ref={rec['ref_hlo_msg_arrays']} "
+                      f"fused={rec['fused_hlo_msg_arrays']}", flush=True)
+                # Structural claim: when the kernel is active it never
+                # materializes the message array; the reference always does
+                # (it's the array being eliminated).
+                if rec["fused_active"] and rec["fused_hlo_msg_arrays"] != 0:
+                    failures.append(f"fused HLO materializes [Pl, e_max] f32 "
+                                    f"arrays in {rec}")
+                if rec["ref_hlo_msg_arrays"] == 0:
+                    failures.append(f"reference HLO unexpectedly clean "
+                                    f"(check the detector) in {rec}")
+
+    out = dict(backend=jax.default_backend(),
+               interpret=jax.default_backend() != "tpu",
+               block_e=args.block_e, parts=args.parts,
+               edge_factor=args.edge_factor, results=results)
+    Path(args.out).write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {args.out} ({len(results)} cells)")
+    if failures and not args.no_assert:
+        for f in failures:
+            print("FAIL:", f, file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

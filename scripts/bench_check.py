@@ -1,0 +1,76 @@
+"""Gate on superstep-benchmark regressions.
+
+Diffs a fresh ``BENCH_superstep.json`` (benchmarks/superstep_bench.py)
+against a previous run and fails when any matching cell's fused superstep
+time regressed by more than ``--threshold`` (default 20%).  Intended as an
+optional make/CI target:
+
+  python benchmarks/superstep_bench.py --out BENCH_superstep.json
+  python scripts/bench_check.py BENCH_superstep.json BENCH_superstep.prev.json
+
+Cells are matched on (scale, parts, strategy, algorithm, block_e); cells
+present on only one side are reported but don't fail the check (benchmarks
+grow over time).  Exit codes: 0 ok, 1 regression, 2 usage/IO error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def _key(rec: dict):
+    return (rec["scale"], rec["parts"], rec["strategy"], rec["algorithm"],
+            rec.get("block_e"))
+
+
+def load(path: str) -> dict:
+    try:
+        data = json.loads(Path(path).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_check: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    return {_key(r): r for r in data.get("results", [])}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh BENCH_superstep.json")
+    ap.add_argument("previous", help="baseline BENCH_superstep.json")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max allowed fractional fused_ms regression")
+    ap.add_argument("--field", default="fused_ms",
+                    help="which per-cell timing to gate on")
+    args = ap.parse_args(argv)
+
+    cur, prev = load(args.current), load(args.previous)
+    regressions, checked = [], 0
+    for key, rec in sorted(cur.items()):
+        base = prev.get(key)
+        if base is None or args.field not in base or args.field not in rec:
+            print(f"  new/unmatched cell (not gated): {key}")
+            continue
+        checked += 1
+        ratio = rec[args.field] / max(base[args.field], 1e-12)
+        status = "OK"
+        if ratio > 1.0 + args.threshold:
+            status = "REGRESSION"
+            regressions.append((key, ratio))
+        print(f"  {key}: {args.field} {base[args.field]:.2f} -> "
+              f"{rec[args.field]:.2f} ms ({ratio:.2f}x) {status}")
+
+    dropped = set(prev) - set(cur)
+    for key in sorted(dropped):
+        print(f"  cell disappeared (not gated): {key}")
+
+    if regressions:
+        print(f"bench_check: {len(regressions)}/{checked} cells regressed "
+              f">{args.threshold:.0%} on {args.field}", file=sys.stderr)
+        return 1
+    print(f"bench_check: {checked} cells within {args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

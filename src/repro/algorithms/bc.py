@@ -22,7 +22,8 @@ from typing import Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bsp import MIN, SUM, BSPEngine, VertexProgram, gather_src
+from repro.core.bsp import (MIN, SUM, BSPEngine, EdgeMessage, VertexProgram,
+                            gather_src)
 from repro.core.graph import CSRGraph
 
 
@@ -45,8 +46,16 @@ def _fwd_apply(state, acc, step):
     return state, ~jnp.any(newly)
 
 
+def _fwd_edge_msg(vals, weight, step, consts):
+    del weight, consts
+    return jnp.where(vals["dist"] == step, vals["sigma"], 0.0)
+
+
 FORWARD_PROGRAM = VertexProgram(combine=SUM, edge_fn=_fwd_edge,
-                                apply_fn=_fwd_apply)
+                                apply_fn=_fwd_apply,
+                                edge_msg=EdgeMessage(
+                                    gather=("dist", "sigma"),
+                                    fn=_fwd_edge_msg))
 
 
 # --------------------------- backward cycle --------------------------------
@@ -73,8 +82,21 @@ def _bwd_apply(state, acc, step):
     return state, next_level < 1.0
 
 
+def _bwd_edge_msg(vals, weight, step, consts):
+    del weight
+    level = consts["max_level"] - 1.0 - step
+    sending = (vals["dist"] == level + 1.0) & (vals["sigma"] > 0)
+    return jnp.where(sending,
+                     (1.0 + vals["delta"]) / jnp.maximum(vals["sigma"], 1.0),
+                     0.0)
+
+
 BACKWARD_PROGRAM = VertexProgram(combine=SUM, edge_fn=_bwd_edge,
-                                 apply_fn=_bwd_apply, use_reverse=True)
+                                 apply_fn=_bwd_apply, use_reverse=True,
+                                 edge_msg=EdgeMessage(
+                                     gather=("dist", "sigma", "delta"),
+                                     fn=_bwd_edge_msg,
+                                     consts=("max_level",)))
 
 
 def betweenness_centrality(engine: BSPEngine,

@@ -14,7 +14,8 @@ from typing import Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bsp import MIN, BSPEngine, VertexProgram, gather_src
+from repro.core.bsp import (MIN, BSPEngine, EdgeMessage, VertexProgram,
+                            gather_src)
 from repro.core.graph import CSRGraph
 from repro.core.partition import PartitionedGraph
 
@@ -28,6 +29,13 @@ def _edge_fn(state, src, weight, step):
     return jnp.where(level == step.astype(jnp.float32), level + 1.0, INF)
 
 
+def _edge_msg_fn(vals, weight, step, consts):
+    del weight, consts
+    level = vals["level"]
+    # np.inf (not the jnp INF const): Pallas kernels may not capture arrays.
+    return jnp.where(level == step, level + 1.0, np.inf)
+
+
 def _apply_fn(state, acc, step):
     del step
     level = state["level"]
@@ -38,7 +46,9 @@ def _apply_fn(state, acc, step):
 
 
 BFS_PROGRAM = VertexProgram(combine=MIN, edge_fn=_edge_fn,
-                            apply_fn=_apply_fn)
+                            apply_fn=_apply_fn,
+                            edge_msg=EdgeMessage(gather=("level",),
+                                                 fn=_edge_msg_fn))
 
 
 def bfs(engine: BSPEngine, source: int) -> Tuple[np.ndarray, int]:

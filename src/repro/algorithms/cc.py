@@ -11,7 +11,8 @@ from typing import Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bsp import MIN, BSPEngine, VertexProgram, gather_src
+from repro.core.bsp import (MIN, BSPEngine, EdgeMessage, VertexProgram,
+                            gather_src)
 from repro.core.graph import CSRGraph, from_edge_list
 
 INF = jnp.float32(jnp.inf)
@@ -40,8 +41,16 @@ def _apply_fn(state, acc, step):
             ~jnp.any(improved))
 
 
+def _edge_msg_fn(vals, weight, step, consts):
+    del weight, step, consts
+    # np.inf (not the jnp INF const): Pallas kernels may not capture arrays.
+    return jnp.where(vals["active"] > 0, vals["label"], np.inf)
+
+
 CC_PROGRAM = VertexProgram(combine=MIN, edge_fn=_edge_fn,
-                           apply_fn=_apply_fn)
+                           apply_fn=_apply_fn,
+                           edge_msg=EdgeMessage(gather=("label", "active"),
+                                                fn=_edge_msg_fn))
 
 
 def connected_components(engine: BSPEngine) -> Tuple[np.ndarray, int]:

@@ -18,7 +18,8 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bsp import SUM, BSPEngine, VertexProgram, gather_src
+from repro.core.bsp import (SUM, BSPEngine, EdgeMessage, VertexProgram,
+                            gather_src)
 
 DAMPING = 0.85
 
@@ -26,6 +27,11 @@ DAMPING = 0.85
 def _edge_fn(state, src, weight, step):
     del weight, step
     return gather_src(state["rank"] * state["inv_deg"], src)
+
+
+def _edge_msg_fn(vals, weight, step, consts):
+    del weight, step, consts
+    return vals["rank"] * vals["inv_deg"]
 
 
 def make_pagerank_program(num_vertices: int, damping: float = DAMPING,
@@ -38,7 +44,9 @@ def make_pagerank_program(num_vertices: int, damping: float = DAMPING,
         return dict(state, rank=rank), jnp.bool_(True)
 
     return VertexProgram(combine=SUM, edge_fn=_edge_fn, apply_fn=apply_fn,
-                         max_steps=max_steps)
+                         max_steps=max_steps,
+                         edge_msg=EdgeMessage(gather=("rank", "inv_deg"),
+                                              fn=_edge_msg_fn))
 
 
 def initial_state(pg, damping: float = DAMPING) -> dict:

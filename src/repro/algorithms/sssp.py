@@ -15,7 +15,8 @@ from typing import Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bsp import MIN, BSPEngine, VertexProgram, gather_src
+from repro.core.bsp import (MIN, BSPEngine, EdgeMessage, VertexProgram,
+                            gather_src)
 from repro.core.graph import CSRGraph
 
 INF = jnp.float32(jnp.inf)
@@ -37,8 +38,17 @@ def _apply_fn(state, acc, step):
     return {"dist": new_dist, "active": improved}, finished
 
 
+def _edge_msg_fn(vals, weight, step, consts):
+    del step, consts
+    # np.inf (not the jnp INF const): Pallas kernels may not capture arrays.
+    return jnp.where(vals["active"] > 0, vals["dist"] + weight, np.inf)
+
+
 SSSP_PROGRAM = VertexProgram(combine=MIN, edge_fn=_edge_fn,
-                             apply_fn=_apply_fn)
+                             apply_fn=_apply_fn,
+                             edge_msg=EdgeMessage(
+                                 gather=("dist", "active"),
+                                 fn=_edge_msg_fn, use_weight=True))
 
 
 def sssp(engine: BSPEngine, source: int) -> Tuple[np.ndarray, int]:

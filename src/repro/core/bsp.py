@@ -32,16 +32,37 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.partition import EdgeArrays, PartitionedGraph
+from repro.core.compat import shard_map
+from repro.core.partition import (BlockMetadata, EdgeArrays, PartitionedGraph,
+                                  build_block_metadata)
 
 Array = jax.Array
 State = Any  # pytree of [Pl, v_max]-leading arrays + scalars
 
 SUM = "sum"
 MIN = "min"
-_IDENTITY = {SUM: 0.0, MIN: jnp.inf}
 _SEGMENT_OP = {SUM: jax.ops.segment_sum, MIN: jax.ops.segment_min}
 _COMBINE = {SUM: jnp.add, MIN: jnp.minimum}
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeMessage:
+    """Elementwise edge-message form of ``edge_fn`` the fused kernel inlines.
+
+    ``fn(vals, weight, step, consts) -> msgs`` where ``vals`` maps each key
+    in ``gather`` to that state array's value at the edge's *source* vertex,
+    ``weight`` is the per-edge weight (present iff ``use_weight``), ``step``
+    is the superstep as float32, and ``consts`` maps each key in ``consts``
+    to a per-partition scalar state entry (e.g. BC's ``max_level``).  The
+    function must be elementwise/broadcast-safe: the kernel calls it on
+    [block_e]-shaped values, the fallback on [Pl, e_max]-shaped ones, and it
+    must compute exactly what ``edge_fn`` computes per edge.
+    """
+
+    gather: Tuple[str, ...]
+    fn: Callable[..., Array]
+    consts: Tuple[str, ...] = ()
+    use_weight: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +76,8 @@ class VertexProgram:
     part of ``alg_compute`` + ``alg_scatter``'s state update; ``acc`` is the
     fully-reduced [Pl, v_max] accumulator (local + remote contributions).
     ``finished`` is this shard's vote to terminate.
+    ``edge_msg`` — optional :class:`EdgeMessage` equivalent of ``edge_fn``;
+    programs that provide it are eligible for the fused superstep path.
     """
 
     combine: str
@@ -62,6 +85,7 @@ class VertexProgram:
     apply_fn: Callable[[State, Array, Array], Tuple[State, Array]]
     max_steps: int = 1 << 30
     use_reverse: bool = False
+    edge_msg: Optional[EdgeMessage] = None
 
 
 def gather_src(x: Array, src: Array) -> Array:
@@ -81,22 +105,76 @@ class _Dims:
         return self.v_max + 1 + self.num_parts * self.o_max
 
 
+@dataclasses.dataclass(frozen=True)
+class FusedConfig:
+    """Static geometry of one direction's fused compute phase."""
+
+    span: int            # lane-aligned block span bound (measured)
+    block_e: int
+    v_pad: int           # v_max rounded up to gather_chunk
+    max_span: int = 4096
+    gather_chunk: int = 256
+    interpret: Optional[bool] = None
+
+
+def _compute_reference(dims: _Dims, program: VertexProgram, edges: dict,
+                       state: State, step: Array) -> Array:
+    """Reference compute: gather → [Pl, e_max] messages → scatter-reduce."""
+    pl = edges["src"].shape[0]
+    msgs = program.edge_fn(state, edges["src"], edges.get("weight"), step)
+    offs = jnp.arange(pl, dtype=jnp.int32)[:, None] * dims.seg
+    ids = (edges["dst_ext"] + offs).ravel()
+    acc = _SEGMENT_OP[program.combine](msgs.ravel(), ids,
+                                       num_segments=pl * dims.seg)
+    return acc.reshape(pl, dims.seg)
+
+
+def _compute_fused(dims: _Dims, program: VertexProgram, edges: dict,
+                   cfg: FusedConfig, state: State, step: Array) -> Array:
+    """Fused compute: one Pallas pass per edge block, no [Pl, e_max] HBM
+    message array (kernels/fused_superstep.py)."""
+    from repro.kernels.ops import fused_superstep_op
+
+    spec = program.edge_msg
+    pl = edges["src"].shape[0]
+    vstate = jnp.stack([state[k].astype(jnp.float32) for k in spec.gather],
+                       axis=1)                            # [Pl, K, v_max]
+    pad = cfg.v_pad - vstate.shape[2]
+    if pad:
+        vstate = jnp.pad(vstate, ((0, 0), (0, 0), (0, pad)))
+    cols = [jnp.broadcast_to(step.astype(jnp.float32), (pl,))]
+    cols += [state[k].astype(jnp.float32) for k in spec.consts]
+    scal = jnp.stack(cols, axis=1)                        # [Pl, 1 + consts]
+
+    def msg_fn(vals, weight, scals):
+        vals_d = dict(zip(spec.gather, vals))
+        consts_d = dict(zip(spec.consts, scals[1:]))
+        return spec.fn(vals_d, weight, scals[0], consts_d)
+
+    weight = edges.get("weight_blk") if spec.use_weight else None
+    return fused_superstep_op(
+        msg_fn, vstate, weight, scal, edges["blk_src"], edges["blk_local"],
+        edges["blk_mask"], edges["blk_base"], edges["dst_ext"],
+        num_segments=dims.seg, combine=program.combine, span=cfg.span,
+        block_e=cfg.block_e, max_span=cfg.max_span,
+        gather_chunk=cfg.gather_chunk, interpret=cfg.interpret)
+
+
 def _superstep(dims: _Dims, program: VertexProgram, edges: dict,
                exchange: Callable[[Array], Array],
                all_finished: Callable[[Array], Array],
+               fused_cfg: Optional[FusedConfig],
                state: State, step: Array) -> Tuple[State, Array]:
     """One BSP superstep over the local shard of partitions."""
     combine = program.combine
-    ident = _IDENTITY[combine]
     seg_op = _SEGMENT_OP[combine]
     pl = edges["src"].shape[0]  # local partition count
 
     # -- compute: per-edge messages, reduced over extended destinations -----
-    msgs = program.edge_fn(state, edges["src"], edges.get("weight"), step)
-    offs = jnp.arange(pl, dtype=jnp.int32)[:, None] * dims.seg
-    ids = (edges["dst_ext"] + offs).ravel()
-    acc = seg_op(msgs.ravel(), ids, num_segments=pl * dims.seg)
-    acc = acc.reshape(pl, dims.seg)
+    if fused_cfg is not None and program.edge_msg is not None:
+        acc = _compute_fused(dims, program, edges, fused_cfg, state, step)
+    else:
+        acc = _compute_reference(dims, program, edges, state, step)
     local_acc = acc[:, : dims.v_max]
     outbox = acc[:, dims.v_max + 1:].reshape(pl, dims.num_parts, dims.o_max)
 
@@ -114,26 +192,62 @@ def _superstep(dims: _Dims, program: VertexProgram, edges: dict,
 
     # -- apply + vote --------------------------------------------------------
     new_state, finished = program.apply_fn(state, total, step)
-    del ident
     return new_state, all_finished(finished)
 
 
-def _edges_dict(ea: EdgeArrays) -> dict:
+def _edges_dict(ea: EdgeArrays, blk: Optional[BlockMetadata] = None) -> dict:
     d = dict(src=jnp.asarray(ea.src), dst_ext=jnp.asarray(ea.dst_ext),
              inbox_dst=jnp.asarray(ea.inbox_dst))
     if ea.weight is not None:
         d["weight"] = jnp.asarray(ea.weight)
+    if blk is not None:
+        # Block metadata rides in the edges dict so it shards with the
+        # partition axis under the distributed engine.
+        d["blk_src"] = jnp.asarray(blk.src)
+        d["blk_local"] = jnp.asarray(blk.local)
+        d["blk_mask"] = jnp.asarray(blk.mask)
+        d["blk_base"] = jnp.asarray(blk.base)
+        if blk.weight is not None:
+            d["weight_blk"] = jnp.asarray(blk.weight)
     return d
 
 
 class BSPEngine:
-    """Single-device engine: all P partitions stacked on axis 0."""
+    """Single-device engine: all P partitions stacked on axis 0.
 
-    def __init__(self, pg: PartitionedGraph):
+    ``fused=True`` dispatches the compute phase to the fused Pallas path for
+    programs that carry an :class:`EdgeMessage` form; the reference path is
+    used otherwise, and automatically whenever a direction's measured block
+    span exceeds ``max_span`` (degree-skewed / gappy destination data — see
+    ``BlockMetadata.span_histogram``).
+    """
+
+    def __init__(self, pg: PartitionedGraph, *, fused: bool = False,
+                 block_e: int = 1024, max_span: int = 4096,
+                 gather_chunk: int = 256,
+                 interpret: Optional[bool] = None):
         self.pg = pg
         self.dims = _Dims(pg.num_parts, pg.v_max, pg.fwd.e_max, pg.fwd.o_max)
-        self._fwd = _edges_dict(pg.fwd)
-        self._rev = _edges_dict(pg.rev) if pg.rev is not None else None
+        self.fused = fused
+        self._fwd_blk = self._rev_blk = None
+        if fused:
+            self._fwd_blk = build_block_metadata(pg.fwd, block_e=block_e)
+            if pg.rev is not None:
+                self._rev_blk = build_block_metadata(pg.rev, block_e=block_e)
+        self._fwd = _edges_dict(pg.fwd, self._fwd_blk)
+        self._rev = (_edges_dict(pg.rev, self._rev_blk)
+                     if pg.rev is not None else None)
+
+        def _cfg(blk):
+            if blk is None:
+                return None
+            v_pad = -(-pg.v_max // gather_chunk) * gather_chunk
+            return FusedConfig(span=blk.span, block_e=blk.block_e,
+                               v_pad=v_pad, max_span=max_span,
+                               gather_chunk=gather_chunk, interpret=interpret)
+
+        self._fwd_cfg = _cfg(self._fwd_blk)
+        self._rev_cfg = _cfg(self._rev_blk)
         self.out_deg = jnp.asarray(pg.out_deg)
         self.vertex_mask = jnp.asarray(pg.vertex_mask)
 
@@ -152,17 +266,27 @@ class BSPEngine:
             return rev
         return self._fwd
 
+    def fused_cfg_for(self, program: VertexProgram) -> Optional[FusedConfig]:
+        """Static fused-path config, or None → reference compute."""
+        if not self.fused or program.edge_msg is None:
+            return None
+        return self._rev_cfg if program.use_reverse else self._fwd_cfg
+
     def dims_for(self, edges: dict) -> _Dims:
         return _Dims(self.dims.num_parts, self.dims.v_max,
                      edges["src"].shape[1], edges["inbox_dst"].shape[2])
+
+    def _step_fn(self, program: VertexProgram, edges: dict,
+                 exchange: Callable, all_finished: Callable) -> Callable:
+        return functools.partial(_superstep, self.dims_for(edges), program,
+                                 edges, exchange, all_finished,
+                                 self.fused_cfg_for(program))
 
     @functools.partial(jax.jit, static_argnums=(0, 1))
     def run(self, program: VertexProgram, state: State) -> Tuple[State, Array]:
         """Run supersteps until all partitions vote finish (lax.while_loop)."""
         edges = self.edges_for(program)
-        dims = self.dims_for(edges)
-        step_fn = functools.partial(_superstep, dims, program, edges,
-                                    self._exchange, jnp.all)
+        step_fn = self._step_fn(program, edges, self._exchange, jnp.all)
 
         def body(carry):
             state, step, _ = carry
@@ -182,9 +306,7 @@ class BSPEngine:
                   state: State) -> State:
         """Fixed-iteration algorithms (PageRank)."""
         edges = self.edges_for(program)
-        dims = self.dims_for(edges)
-        step_fn = functools.partial(_superstep, dims, program, edges,
-                                    self._exchange, jnp.all)
+        step_fn = self._step_fn(program, edges, self._exchange, jnp.all)
 
         def body(i, state):
             state, _ = step_fn(state, i)
@@ -201,8 +323,9 @@ class DistributedBSPEngine(BSPEngine):
     outbox/inbox copy.  The termination vote is a global AND (psum).
     """
 
-    def __init__(self, pg: PartitionedGraph, mesh: Mesh, axis: str = "parts"):
-        super().__init__(pg)
+    def __init__(self, pg: PartitionedGraph, mesh: Mesh, axis: str = "parts",
+                 **kwargs):
+        super().__init__(pg, **kwargs)
         if pg.num_parts % mesh.shape[axis]:
             raise ValueError("num_parts must divide mesh axis size")
         self.mesh = mesh
@@ -235,7 +358,8 @@ class DistributedBSPEngine(BSPEngine):
         def local_fn(state, edges):
             step_fn = functools.partial(_superstep, dims, program, edges,
                                         self._dist_exchange,
-                                        self._dist_finished)
+                                        self._dist_finished,
+                                        self.fused_cfg_for(program))
 
             def body(carry):
                 st, step, _ = carry
@@ -250,7 +374,7 @@ class DistributedBSPEngine(BSPEngine):
                 cond, body, (state, jnp.int32(0), jnp.bool_(False)))
             return st, steps
 
-        sharded = jax.shard_map(
+        sharded = shard_map(
             local_fn, mesh=self.mesh,
             in_specs=(jax.tree.map(lambda _: spec, state),
                       jax.tree.map(lambda _: spec, edges)),

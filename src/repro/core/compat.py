@@ -1,0 +1,26 @@
+"""Version-compat shims for JAX APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``
+(and its ``check_rep`` kwarg was renamed ``check_vma``).  The installed JAX in
+a given container may be on either side of that move; everything in this repo
+goes through this shim so the engine code stays on the new spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` if present, else the experimental module.
+
+    The legacy API spells ``check_vma`` as ``check_rep``; both toggles disable
+    the same replication/varying-manual-axes check, so we forward the flag.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

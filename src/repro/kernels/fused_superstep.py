@@ -1,0 +1,142 @@
+"""Fused BSP superstep compute phase — gather + edge message + segment
+reduce in one Pallas kernel (paper §3.4, §4.3.1).
+
+The reference compute phase is three HBM-bound passes: gather per-edge source
+state (``take_along_axis``), materialize the ``[Pl, e_max]`` message array,
+then scatter-reduce it over extended destination ids.  Edges are sorted by
+destination at partition time, so — exactly as in ``segment_reduce.py`` — a
+block of ``be`` consecutive edges reduces into a contiguous ``span`` of
+segment ids.  This kernel runs the whole chain per (partition, edge-block)
+grid cell without ever leaving VMEM:
+
+  1. **gather** — the partition's ``[K, v_pad]`` stacked vertex state is
+     VMEM-resident; per-edge source values are extracted with a chunked
+     masked-max one-hot (``where(src == iota, state, -inf)`` + max).  A
+     select/reduce rather than an MXU contraction because graph state
+     legitimately contains ``+inf`` (BFS/SSSP/CC/BC distances), and
+     ``0 * inf = nan`` would poison a multiply-accumulate gather.  State must
+     not contain ``-inf`` (no algorithm uses it).
+  2. **edge message** — the algorithm's elementwise ``edge_msg`` function is
+     inlined on the gathered ``[be, K]`` values (plus optional edge weight
+     and per-partition scalars); padding edges are masked to the combine
+     identity.
+  3. **reduce** — messages contract against the block's one-hot local-offset
+     matrix on the **MXU** (``sum``) or a masked VPU min (``min``), yielding
+     ``[span]`` partials per block.
+
+The ``[be]`` messages exist only between steps 2 and 3 in VMEM; the kernel's
+HBM output is the ``[Pl, nb, span]`` partials array (merged by a tiny static
+segment reduce in ops.py — phase 2 of the two-phase scheme).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_state(vstate_ref, src, *, gather_chunk: int):
+    """Per-edge source-state gather from the VMEM state block.
+
+    vstate_ref: [1, K, v_pad] ref; src: [be] int32.  Returns [be, K] f32.
+    Chunked over v_pad so the one-hot select never materializes a full
+    [be, v_pad] matrix in VMEM.
+    """
+    k = vstate_ref.shape[1]
+    v_pad = vstate_ref.shape[2]
+    be = src.shape[0]
+
+    def body(c, acc):
+        off = c * gather_chunk
+        chunk = vstate_ref[0, :, pl.ds(off, gather_chunk)]      # [K, chunk]
+        hit = (src[:, None] == off +
+               jax.lax.broadcasted_iota(jnp.int32, (1, gather_chunk), 1))
+        vals = jnp.where(hit[:, None, :], chunk[None, :, :], -jnp.inf)
+        return jnp.maximum(acc, jnp.max(vals, axis=2))
+
+    init = jnp.full((be, k), -jnp.inf, jnp.float32)
+    return jax.lax.fori_loop(0, v_pad // gather_chunk, body, init)
+
+
+def _fused_kernel(scal_ref, vstate_ref, src_ref, local_ref, mask_ref, *rest,
+                  msg_fn, combine: str, span: int, gather_chunk: int,
+                  n_consts: int, has_weight: bool):
+    if has_weight:
+        weight_ref, o_ref = rest
+    else:
+        weight_ref, o_ref = None, rest[0]
+
+    src = src_ref[0]                                     # [be] int32
+    gathered = _gather_state(vstate_ref, src, gather_chunk=gather_chunk)
+    vals = tuple(gathered[:, i] for i in range(gathered.shape[1]))
+    step = scal_ref[0, 0]
+    consts = tuple(scal_ref[0, 1 + i] for i in range(n_consts))
+    weight = weight_ref[0] if has_weight else None
+
+    msgs = msg_fn(vals, weight, (step,) + consts).astype(jnp.float32)
+    ident = 0.0 if combine == "sum" else jnp.inf
+    msgs = jnp.where(mask_ref[0] > 0, msgs, ident)       # padding → identity
+
+    local = local_ref[0]                                 # [be] in [0, span)
+    hit = (local[:, None] ==
+           jax.lax.broadcasted_iota(jnp.int32, (1, span), 1))
+    if combine == "sum":
+        onehot = hit.astype(jnp.float32)                 # [be, span]
+        o_ref[...] = jax.lax.dot_general(
+            msgs[None, :], onehot, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[None]
+    else:
+        picked = jnp.where(hit, msgs[:, None], jnp.inf)
+        o_ref[...] = jnp.min(picked, axis=0)[None, None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("msg_fn", "combine", "span", "block_e",
+                                    "gather_chunk", "interpret"))
+def fused_superstep_blocks(vstate: jax.Array, scal: jax.Array,
+                           src: jax.Array, local: jax.Array,
+                           mask: jax.Array, weight, *, msg_fn,
+                           combine: str = "sum", span: int,
+                           block_e: int = 1024, gather_chunk: int = 256,
+                           interpret: bool = False) -> jax.Array:
+    """Phase-1 fused partials.
+
+    vstate: [Pl, K, v_pad] f32 (v_pad % gather_chunk == 0); scal: [Pl, S] f32
+    with scal[:, 0] = superstep and scal[:, 1:] per-partition consts;
+    src/local/mask (int32) and weight (f32 or None): [Pl, e_pad] with
+    e_pad % block_e == 0.  ``msg_fn(vals_tuple, weight, scal_tuple) -> [be]``
+    must be elementwise/broadcast-safe.  Returns [Pl, e_pad/block_e, span].
+    """
+    pl_count, _, v_pad = vstate.shape
+    e_pad = src.shape[1]
+    assert e_pad % block_e == 0 and v_pad % gather_chunk == 0
+    nb = e_pad // block_e
+    n_scal = scal.shape[1]
+    has_weight = weight is not None
+
+    kernel = functools.partial(
+        _fused_kernel, msg_fn=msg_fn, combine=combine, span=span,
+        gather_chunk=gather_chunk, n_consts=n_scal - 1,
+        has_weight=has_weight)
+
+    edge_spec = pl.BlockSpec((1, block_e), lambda p, b: (p, b))
+    in_specs = [
+        pl.BlockSpec((1, n_scal), lambda p, b: (p, 0)),
+        pl.BlockSpec((1, vstate.shape[1], v_pad), lambda p, b: (p, 0, 0)),
+        edge_spec, edge_spec, edge_spec,
+    ]
+    args = [scal, vstate, src, local, mask]
+    if has_weight:
+        in_specs.append(edge_spec)
+        args.append(weight)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(pl_count, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, span), lambda p, b: (p, b, 0)),
+        out_shape=jax.ShapeDtypeStruct((pl_count, nb, span), jnp.float32),
+        interpret=interpret,
+    )(*args)

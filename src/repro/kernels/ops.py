@@ -74,15 +74,18 @@ def csr_to_ell(g: CSRGraph, combine: str = "sum",
     ident = 0.0 if combine == "sum" else np.inf
     col = np.full((n, kmax), n, dtype=np.int32)
     val = np.full((n, kmax), ident, dtype=np.float32)
-    w = gg.weights if gg.weights is not None else np.ones(gg.num_edges,
-                                                          dtype=np.float32)
-    fill = 1.0 if combine == "sum" else w
-    for v_ in range(n):
-        lo, hi = gg.row_ptr[v_], gg.row_ptr[v_ + 1]
-        col[v_, : hi - lo] = gg.col[lo:hi]
-        val[v_, : hi - lo] = (np.ones(hi - lo) if combine == "sum"
-                              else w[lo:hi])
-    del fill
+    # Vectorized ELL pack: each edge's (row, slot) from its rank within the
+    # CSR row, then one fancy-indexed scatter instead of an O(V) Python loop.
+    rows = np.repeat(np.arange(n, dtype=np.int64), deg)
+    slots = np.arange(gg.num_edges, dtype=np.int64) - \
+        np.repeat(gg.row_ptr[:-1], deg)
+    col[rows, slots] = gg.col
+    if combine == "sum":
+        val[rows, slots] = 1.0
+    else:
+        w = gg.weights if gg.weights is not None else np.ones(
+            gg.num_edges, dtype=np.float32)
+        val[rows, slots] = w
     return col, val, kmax
 
 
@@ -182,3 +185,90 @@ def segment_reduce_op(msgs: jax.Array, seg_ids: np.ndarray,
     final = op(partials.reshape(-1), jnp.asarray(out_ids),
                num_segments=num_segments + 1)
     return final[:num_segments]
+
+
+# ---------------------------------------------------------------------------
+# fused superstep compute phase (TOTEM gather + message + reduction)
+# ---------------------------------------------------------------------------
+
+# VMEM byte budget for the kernel's dominant [block_e, span] intermediates
+# (one f32 one-hot for sum; a bool hit + f32 select pair for min).  A TPU
+# core has ~16 MiB of VMEM; half is left for the state block, edge blocks,
+# gather scratch, and output partials.
+_VMEM_BLOCK_BUDGET = 8 << 20
+
+
+def fused_span_limit(block_e: int, combine: str = "sum",
+                     max_span: int = 4096) -> int:
+    """Largest block span the fused kernel will compile for.
+
+    The caller's ``max_span`` bounds reassociation span; on top of that the
+    [block_e, span] intermediates must fit the VMEM budget — ``min`` combines
+    materialize two such arrays, halving the limit.  Spans above this fall
+    back to the reference path (see ``fused_superstep_op``).
+    """
+    copies = 2 if combine == "min" else 1
+    return min(max_span, _VMEM_BLOCK_BUDGET // (4 * block_e * copies))
+
+
+def fused_superstep_op(msg_fn, vstate: jax.Array, weight, scal: jax.Array,
+                       src: jax.Array, local: jax.Array, mask: jax.Array,
+                       base: jax.Array, dst_ext: jax.Array, *,
+                       num_segments: int, combine: str = "sum", span: int,
+                       block_e: int = 1024, max_span: int = 4096,
+                       gather_chunk: int = 256,
+                       interpret: bool | None = None) -> jax.Array:
+    """Fused compute phase: per-partition accumulator [Pl, num_segments].
+
+    Inputs follow ``partition.build_block_metadata``: ``vstate`` is the
+    stacked [Pl, K, v_pad] gathered-state matrix, ``scal`` [Pl, S] carries
+    (step, *per-partition consts), ``src``/``local``/``mask`` are the
+    [Pl, e_pad] block arrays, ``base`` [Pl, nb] the per-block segment bases,
+    and ``span``/``block_e`` their static geometry.  ``msg_fn(vals, weight,
+    scals) -> msgs`` is elementwise/broadcast-safe, so the same callable runs
+    on [be]-shaped values inside the kernel and on [Pl, e_max]-shaped values
+    in the fallback.
+
+    Falls back to the reference gather → message → ``jax.ops.segment_*``
+    chain when the measured block span exceeds ``fused_span_limit`` — either
+    ``max_span`` (adversarially gappy destinations) or the VMEM budget for
+    the kernel's [block_e, span] intermediates.  Correctness never depends
+    on the kernel, the same contract as ``segment_reduce_op``.
+    """
+    from repro.kernels import fused_superstep as _fused
+
+    if interpret is None:
+        interpret = _interpret_default()
+    pl_count = vstate.shape[0]
+    ident = 0.0 if combine == "sum" else jnp.inf
+    seg_op = jax.ops.segment_sum if combine == "sum" else jax.ops.segment_min
+
+    if span > fused_span_limit(block_e, combine, max_span):
+        # Reference path expressed through the elementwise form.
+        e_max = dst_ext.shape[1]
+        vals = tuple(
+            jnp.take_along_axis(vstate[:, k_, :], src[:, :e_max], axis=1)
+            for k_ in range(vstate.shape[1]))
+        scals = tuple(scal[:, j:j + 1] for j in range(scal.shape[1]))
+        w = weight[:, :e_max] if weight is not None else None
+        msgs = msg_fn(vals, w, scals).astype(jnp.float32)
+        msgs = jnp.where(mask[:, :e_max] > 0, msgs, ident)
+        offs = jnp.arange(pl_count, dtype=jnp.int32)[:, None] * num_segments
+        acc = seg_op(msgs.ravel(), (dst_ext + offs).ravel(),
+                     num_segments=pl_count * num_segments)
+        return acc.reshape(pl_count, num_segments)
+
+    partials = _fused.fused_superstep_blocks(
+        vstate, scal, src, local, mask, weight, msg_fn=msg_fn,
+        combine=combine, span=span, block_e=block_e,
+        gather_chunk=gather_chunk, interpret=interpret)  # [Pl, nb, span]
+
+    # phase 2: merge block partials (blocks may share boundary segments);
+    # ids past the segment space (base + span overhang) drop into a sink.
+    ids = jnp.minimum(base[:, :, None] + jnp.arange(span, dtype=jnp.int32),
+                      num_segments)
+    offs = (jnp.arange(pl_count, dtype=jnp.int32) *
+            (num_segments + 1))[:, None, None]
+    acc = seg_op(partials.ravel(), (ids + offs).ravel(),
+                 num_segments=pl_count * (num_segments + 1))
+    return acc.reshape(pl_count, num_segments + 1)[:, :num_segments]

@@ -268,8 +268,8 @@ def run_graph_cell(shape_name: str, mesh_name: str, rec: dict) -> dict:
         def fin(x):
             return jax.lax.psum(jnp.int32(0), "parts") == 0
 
-        state, _ = _superstep(dims, program, edges, exchange, fin, state,
-                              jnp.int32(0))
+        state, _ = _superstep(dims, program, edges, exchange, fin, None,
+                              state, jnp.int32(0))
         return state
 
     P = jax.sharding.PartitionSpec
@@ -278,11 +278,12 @@ def run_graph_cell(shape_name: str, mesh_name: str, rec: dict) -> dict:
     edges = {"src": sds((n_dev, e_max), jnp.int32),
              "dst_ext": sds((n_dev, e_max), jnp.int32),
              "inbox_dst": sds((n_dev, n_dev, o_max), jnp.int32)}
-    fn = jax.shard_map(local_fn, mesh=mesh,
-                       in_specs=(jax.tree.map(lambda _: P("parts"), state),
-                                 jax.tree.map(lambda _: P("parts"), edges)),
-                       out_specs=jax.tree.map(lambda _: P("parts"), state),
-                       check_vma=False)
+    from repro.core.compat import shard_map
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=(jax.tree.map(lambda _: P("parts"), state),
+                             jax.tree.map(lambda _: P("parts"), edges)),
+                   out_specs=jax.tree.map(lambda _: P("parts"), state),
+                   check_vma=False)
     jitted = jax.jit(fn)
     lowered = jitted.lower(state, edges)
     rec["lower_s"] = round(time.time() - t0, 2)

@@ -48,6 +48,16 @@ def main() -> int:
     pr_dist = pagerank_distributed(dist, num_iterations=10)
     np.testing.assert_allclose(pr_local, pr_dist, rtol=1e-5, atol=1e-8)
     print("PageRank distributed == local")
+
+    # Fused superstep path (Pallas kernel) sharded over the mesh: the
+    # compat shard_map shim + fused compute must compose.
+    fused = DistributedBSPEngine(pg, mesh, fused=True)
+    state, _ = fused.run(BFS_PROGRAM, {"level": jnp.asarray(level0)})
+    lv_fused = pg.gather_global(np.asarray(state["level"]))
+    np.testing.assert_array_equal(lv_local, lv_fused)
+    pr_fused = pagerank_distributed(fused, num_iterations=10)
+    np.testing.assert_allclose(pr_local, pr_fused, rtol=1e-5, atol=1e-8)
+    print("Fused superstep distributed == local")
     print("SELFTEST OK")
     return 0
 

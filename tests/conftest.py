@@ -1,0 +1,26 @@
+"""Shared test fixtures/shims.
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt).  Modules
+that mix property-based and plain tests import the decorators from here so a
+bare environment skips only the ``@given`` tests instead of the whole module
+(pure property modules use ``pytest.importorskip`` at module level instead).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                        # bare env: stub the decorators
+    class _Strategies:
+        """Swallows strategy construction (evaluated at module import)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed (requirements-dev.txt)")(f)

@@ -1,5 +1,7 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import graph as G

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, st  # hypothesis or skip-stub shim
 
 from repro.core import graph as G
 from repro.core.hybrid import degree_split, hybrid_pagerank
