@@ -17,10 +17,13 @@ same script times the compiled kernels.
 
 Usage (from the repo root):
   python benchmarks/superstep_bench.py [--scales 10 11] [--parts 4]
-      [--out BENCH_superstep.json]
+      [--quick] [--hybrid] [--seed 1] [--out BENCH_superstep.json]
 
-``scripts/bench_check.py`` diffs the JSON against a previous run and fails
-on >20% fused-superstep regression.
+``--quick`` keeps only the smallest scale (the CI bench job's ~5-minute
+budget); ``--hybrid`` also times the degree-split two-engine backend per
+cell; ``--seed`` pins the RMAT topology so cells are comparable across runs.
+``scripts/bench_check.py`` diffs the JSON against a baseline and fails on
+>20% fused-superstep regression.
 """
 from __future__ import annotations
 
@@ -66,13 +69,13 @@ def message_array_lines(hlo: str, pl_count: int, e_sizes) -> list:
 
 
 def _superstep_fn(eng: BSPEngine, program):
-    edges = eng.edges_for(program)
+    edges = eng._edges_or_none(program)
     step_fn = eng._step_fn(program, edges, eng._exchange, jnp.all)
     return jax.jit(lambda s, i: step_fn(s, i))
 
 
 def bench_cell(pg, scale: int, parts: int, strategy: str, alg: str,
-               block_e: int) -> dict:
+               block_e: int, hybrid: bool = False) -> dict:
     ref_eng = BSPEngine(pg)
     fus_eng = BSPEngine(pg, fused=True, block_e=block_e)
     if alg == "pagerank":
@@ -96,8 +99,16 @@ def bench_cell(pg, scale: int, parts: int, strategy: str, alg: str,
                fused_active=blk.span <= fused_span_limit(
                    block_e, program.combine))
 
+    engines = [("ref", ref_eng), ("fused", fus_eng)]
+    if hybrid:
+        hyb_eng = BSPEngine(pg, backend="hybrid")
+        engines.append(("hybrid", hyb_eng))
+        plan = hyb_eng.hybrid_plan()
+        rec["hybrid_k_dense"] = plan["k_dense"]
+        rec["hybrid_mode"] = plan["mode"]
+
     step0 = jnp.int32(0)
-    for name, eng in (("ref", ref_eng), ("fused", fus_eng)):
+    for name, eng in engines:
         fn = _superstep_fn(eng, program)
         lowered = fn.lower(state, step0)
         compiled = lowered.compile()
@@ -127,17 +138,25 @@ def main(argv=None) -> int:
         Path(__file__).resolve().parents[1] / "BENCH_superstep.json"))
     ap.add_argument("--no-assert", action="store_true",
                     help="record HLO counts without failing on violations")
+    ap.add_argument("--quick", action="store_true",
+                    help="smallest scale only (keeps the CI job under ~5min)")
+    ap.add_argument("--hybrid", action="store_true",
+                    help="also time the hybrid degree-split backend")
+    ap.add_argument("--seed", type=int, default=1,
+                    help="RMAT topology seed (pinned for reproducible cells)")
     args = ap.parse_args(argv)
+    if args.quick:
+        args.scales = [min(args.scales)]
 
     results = []
     failures = []
     for scale in args.scales:
-        g = G.rmat(scale, args.edge_factor, seed=1)
+        g = G.rmat(scale, args.edge_factor, seed=args.seed)
         for strategy in PT.STRATEGIES:
             pg = PT.partition(g, args.parts, strategy)
             for alg in ("pagerank", "bfs"):
                 rec = bench_cell(pg, scale, args.parts, strategy, alg,
-                                 args.block_e)
+                                 args.block_e, hybrid=args.hybrid)
                 results.append(rec)
                 print(f"scale={scale} {strategy:>4} {alg:>8}: "
                       f"ref={rec['ref_ms']:.2f}ms fused={rec['fused_ms']:.2f}ms "
@@ -158,7 +177,7 @@ def main(argv=None) -> int:
     out = dict(backend=jax.default_backend(),
                interpret=jax.default_backend() != "tpu",
                block_e=args.block_e, parts=args.parts,
-               edge_factor=args.edge_factor, results=results)
+               edge_factor=args.edge_factor, seed=args.seed, results=results)
     Path(args.out).write_text(json.dumps(out, indent=2) + "\n")
     print(f"wrote {args.out} ({len(results)} cells)")
     if failures and not args.no_assert:

@@ -10,9 +10,12 @@ validates against the numpy oracle.
 import numpy as np
 
 from repro.core import graph as G
-from repro.core.hybrid import degree_split, hybrid_pagerank
+from repro.core import partition as PT
+from repro.core.bsp import BSPEngine
+from repro.core.hybrid import auto_degree_split, degree_split, hybrid_pagerank
 from repro.core.perf_model import mxu_crossover_density
 from repro.algorithms import pagerank_reference
+from repro.algorithms.pagerank import pagerank
 
 g = G.rmat(scale=12, edge_factor=16, seed=3)
 print(f"graph: |V|={g.num_vertices:,} |E|={g.num_edges:,}")
@@ -27,4 +30,18 @@ for k_dense in (0, 256, 1024):
           f"edges at density {hg.dense_density:.3f} | predicted makespan "
           f"{pred['makespan']*1e6:.2f}us (dense {pred['t_dense']*1e6:.2f} + "
           f"sparse {pred['t_sparse']*1e6:.2f}) | max err vs oracle {err:.2e}")
+
+# The perf model picks the split itself (paper Eq. 4's role) ...
+hg = auto_degree_split(g)
+print(f"auto:  model chose K={hg.k_dense} ({hg.mode}) over "
+      f"{[r['k_dense'] for r in hg.model_table]}")
+
+# ... and the same split is a first-class BSPEngine backend, so every
+# VertexProgram (not just PageRank) can run through it.
+eng = BSPEngine(PT.partition(g, 4, PT.HIGH), backend="hybrid")
+ranks = pagerank(eng, num_iterations=15)
+err = np.abs(ranks - pagerank_reference(g, 15)).max()
+plan = eng.hybrid_plan()
+print(f"BSPEngine(backend='hybrid'): K={plan['k_dense']} ({plan['mode']}), "
+      f"max err vs oracle {err:.2e}")
 print("OK")

@@ -1,21 +1,27 @@
 """Gate on superstep-benchmark regressions.
 
 Diffs a fresh ``BENCH_superstep.json`` (benchmarks/superstep_bench.py)
-against a previous run and fails when any matching cell's fused superstep
-time regressed by more than ``--threshold`` (default 20%).  Intended as an
-optional make/CI target:
+against a baseline run and fails when any matching cell's fused superstep
+time regressed by more than ``--threshold`` (default 20%).  The make/CI
+entry point:
 
-  python benchmarks/superstep_bench.py --out BENCH_superstep.json
-  python scripts/bench_check.py BENCH_superstep.json BENCH_superstep.prev.json
+  python benchmarks/superstep_bench.py --quick --out BENCH_superstep.json
+  python scripts/bench_check.py BENCH_superstep.json \
+      --baseline BENCH_superstep.prev.json --seed-missing
 
-Cells are matched on (scale, parts, strategy, algorithm, block_e); cells
-present on only one side are reported but don't fail the check (benchmarks
-grow over time).  Exit codes: 0 ok, 1 regression, 2 usage/IO error.
+``--baseline`` names the comparison file (no hardcoding, so CI can point at
+a cache-restored path); ``--seed-missing`` copies the current run into the
+baseline slot and passes when no baseline exists yet (first run on a fresh
+cache/checkout).  Cells are matched on (scale, parts, strategy, algorithm,
+block_e); cells present on only one side are reported but don't fail the
+check (benchmarks grow over time).  Exit codes: 0 ok, 1 regression, 2
+usage/IO error.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import shutil
 import sys
 from pathlib import Path
 
@@ -36,15 +42,34 @@ def load(path: str) -> dict:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("current", help="fresh BENCH_superstep.json")
-    ap.add_argument("previous", help="baseline BENCH_superstep.json")
+    ap.add_argument("current", nargs="?", default="BENCH_superstep.json",
+                    help="fresh BENCH_superstep.json")
+    ap.add_argument("--baseline", default="BENCH_superstep.prev.json",
+                    help="baseline BENCH_superstep.json to compare against")
+    ap.add_argument("--seed-missing", action="store_true",
+                    help="seed the baseline from the current run (and pass) "
+                         "when the baseline file does not exist")
     ap.add_argument("--threshold", type=float, default=0.20,
-                    help="max allowed fractional fused_ms regression")
+                    help="max allowed fractional regression")
     ap.add_argument("--field", default="fused_ms",
                     help="which per-cell timing to gate on")
     args = ap.parse_args(argv)
 
-    cur, prev = load(args.current), load(args.previous)
+    if not Path(args.baseline).exists():
+        if args.seed_missing:
+            if not Path(args.current).exists():
+                print(f"bench_check: {args.current} missing, cannot seed",
+                      file=sys.stderr)
+                return 2
+            shutil.copyfile(args.current, args.baseline)
+            print(f"bench_check: seeded baseline {args.baseline} from "
+                  f"{args.current}")
+            return 0
+        print(f"bench_check: baseline {args.baseline} missing "
+              f"(run with --seed-missing to create it)", file=sys.stderr)
+        return 2
+
+    cur, prev = load(args.current), load(args.baseline)
     regressions, checked = [], 0
     for key, rec in sorted(cur.items()):
         base = prev.get(key)

@@ -45,6 +45,10 @@ def _apply_fn(state, acc, step):
     return {"level": new_level}, finished
 
 
+# Weightless min combine → the hybrid backend runs BFS under the pure-min
+# semiring (the message already carries level+1), with the frontier-density
+# push/pull direction switch as the traversal showcase: sparse frontiers take
+# the push segment-min, dense frontiers the frontier-oblivious SpMV pull.
 BFS_PROGRAM = VertexProgram(combine=MIN, edge_fn=_edge_fn,
                             apply_fn=_apply_fn,
                             edge_msg=EdgeMessage(gather=("level",),

@@ -47,6 +47,8 @@ def _edge_msg_fn(vals, weight, step, consts):
     return jnp.where(vals["active"] > 0, vals["label"], np.inf)
 
 
+# Weightless min combine → the hybrid backend runs label propagation under
+# the pure-min semiring (no per-edge add at all on the ELL path).
 CC_PROGRAM = VertexProgram(combine=MIN, edge_fn=_edge_fn,
                            apply_fn=_apply_fn,
                            edge_msg=EdgeMessage(gather=("label", "active"),

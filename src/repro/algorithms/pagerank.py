@@ -43,6 +43,8 @@ def make_pagerank_program(num_vertices: int, damping: float = DAMPING,
         rank = jnp.where(state["mask"], rank, 0.0)
         return dict(state, rank=rank), jnp.bool_(True)
 
+    # Weightless sum combine → the hybrid backend runs PR under plus_times:
+    # the dense block's multi-edge counts ride in the adjacency values.
     return VertexProgram(combine=SUM, edge_fn=_edge_fn, apply_fn=apply_fn,
                          max_steps=max_steps,
                          edge_msg=EdgeMessage(gather=("rank", "inv_deg"),

@@ -44,11 +44,15 @@ def _edge_msg_fn(vals, weight, step, consts):
     return jnp.where(vals["active"] > 0, vals["dist"] + weight, np.inf)
 
 
+# weight_op="add" declares msg = f(src) + w — the min_plus semiring — which
+# makes SSSP eligible for the hybrid degree-split backend (relaxation as a
+# tropical SpMV over the dense block + ELL remainder).
 SSSP_PROGRAM = VertexProgram(combine=MIN, edge_fn=_edge_fn,
                              apply_fn=_apply_fn,
                              edge_msg=EdgeMessage(
                                  gather=("dist", "active"),
-                                 fn=_edge_msg_fn, use_weight=True))
+                                 fn=_edge_msg_fn, use_weight=True,
+                                 weight_op="add"))
 
 
 def sssp(engine: BSPEngine, source: int) -> Tuple[np.ndarray, int]:

@@ -57,12 +57,21 @@ class EdgeMessage:
     function must be elementwise/broadcast-safe: the kernel calls it on
     [block_e]-shaped values, the fallback on [Pl, e_max]-shaped ones, and it
     must compute exactly what ``edge_fn`` computes per edge.
+
+    ``weight_op`` declares how the weight enters the message, so SpMV-style
+    backends can factor it out of the per-source part:
+    ``fn(vals, w, ...) == fn(vals, ident, ...) ⊗ w`` with (⊗, ident) =
+    ``("add", 0)`` for min-combines or ``("mul", 1)`` for sum-combines.
+    Required (and only meaningful) when ``use_weight`` — it makes the program
+    eligible for the hybrid degree-split backend, which runs the edge as a
+    semiring SpMV (min_plus / plus_times) instead of per-edge messages.
     """
 
     gather: Tuple[str, ...]
     fn: Callable[..., Array]
     consts: Tuple[str, ...] = ()
     use_weight: bool = False
+    weight_op: Optional[str] = None   # None | "add" | "mul"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +124,86 @@ class FusedConfig:
     max_span: int = 4096
     gather_chunk: int = 256
     interpret: Optional[bool] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class _HybridData:
+    """Device arrays + static geometry of one hybrid degree-split direction.
+
+    ``slot``/``hid`` translate between the engine's [P, v_max] partition
+    layout and the split's degree-ranked global id space (sink = n for
+    padding slots).  ``push_*`` are the edge-parallel arrays of the push
+    direction; None disables the direction switch (sum combines, or
+    ``direction_switch=False``).
+    """
+
+    semiring: str
+    k_dense: int
+    num_vertices: int
+    # numpy on purpose: these become per-trace constants (see _hybrid_for).
+    dense: np.ndarray               # [K, K] ⊗ values (⊕-identity non-edges)
+    ell_col: np.ndarray             # [n, kmax]
+    ell_val: np.ndarray             # [n, kmax]
+    slot: np.ndarray                # [n] hybrid id -> p * v_max + local id
+    hid: np.ndarray                 # [P, v_max] slot -> hybrid id (n = sink)
+    push_src: Optional[np.ndarray]  # [E] hybrid-space edge sources
+    push_dst: Optional[np.ndarray]  # [E] hybrid-space edge destinations
+    push_w: Optional[np.ndarray]    # [E] weights (min_plus) or None
+    pull_threshold: float
+    interpret: Optional[bool]
+
+
+def _superstep_hybrid(program: VertexProgram, hd: _HybridData,
+                      all_finished: Callable[[Array], Array],
+                      state: State, step: Array) -> Tuple[State, Array]:
+    """One BSP superstep through the degree-split two-engine backend.
+
+    The compute phase is a semiring SpMV over the *whole* graph in hybrid
+    (degree-ranked) id space — dense H×H block on the MXU path, ELL remainder
+    on the VPU path (core/hybrid.py).  There is no outbox/inbox: an on-chip
+    split has no partition boundary to communicate across, exactly the
+    paper's single-node hybrid setting (§6).  For min combines a
+    frontier-density switch picks the push direction (gather + segment-min —
+    cheap when few vertices send) or the pull direction (frontier-oblivious
+    SpMV), the direction-optimized traversal of Sallinen et al.
+    """
+    from repro.core.hybrid import add_identity, hybrid_spmv
+
+    spec = program.edge_msg
+    ident = add_identity(hd.semiring)
+    vals = {k: state[k].astype(jnp.float32).reshape(-1)[hd.slot]
+            for k in spec.gather}
+    # Per-partition scalar consts are replicated across partitions in the
+    # single-device engines; the global compute reads partition 0's copy.
+    consts = {c: state[c][0].astype(jnp.float32) for c in spec.consts}
+    w_ident = None
+    if spec.use_weight:
+        w_ident = jnp.float32(0.0 if spec.weight_op == "add" else 1.0)
+    x = spec.fn(vals, w_ident, step.astype(jnp.float32),
+                consts).astype(jnp.float32)
+
+    def pull(x):
+        return hybrid_spmv(hd.dense, hd.ell_col, hd.ell_val, x,
+                           semiring=hd.semiring, k_dense=hd.k_dense,
+                           interpret=hd.interpret)
+
+    if hd.push_src is not None:
+        def push(x):
+            msgs = x[hd.push_src]
+            if hd.push_w is not None:
+                msgs = msgs + hd.push_w
+            return jax.ops.segment_min(msgs, hd.push_dst,
+                                       num_segments=hd.num_vertices)
+
+        density = jnp.mean((x != ident).astype(jnp.float32))
+        y = jax.lax.cond(density < hd.pull_threshold, push, pull, x)
+    else:
+        y = pull(x)
+
+    y_ext = jnp.concatenate([y, jnp.full((1,), ident, y.dtype)])
+    acc = y_ext[hd.hid]                     # back to [P, v_max] layout
+    new_state, finished = program.apply_fn(state, acc, step)
+    return new_state, all_finished(finished)
 
 
 def _compute_reference(dims: _Dims, program: VertexProgram, edges: dict,
@@ -212,25 +301,53 @@ def _edges_dict(ea: EdgeArrays, blk: Optional[BlockMetadata] = None) -> dict:
     return d
 
 
+REFERENCE = "reference"
+FUSED = "fused"
+HYBRID = "hybrid"
+BACKENDS = (REFERENCE, FUSED, HYBRID)
+
+
 class BSPEngine:
     """Single-device engine: all P partitions stacked on axis 0.
 
-    ``fused=True`` dispatches the compute phase to the fused Pallas path for
-    programs that carry an :class:`EdgeMessage` form; the reference path is
-    used otherwise, and automatically whenever a direction's measured block
-    span exceeds ``max_span`` (degree-skewed / gappy destination data — see
-    ``BlockMetadata.span_histogram``).
+    Three selectable execution backends for the compute phase:
+
+    - ``backend="reference"`` — gather → [Pl, e_max] messages →
+      segment-reduce (always available; the correctness oracle).
+    - ``backend="fused"`` — the fused Pallas superstep kernel for programs
+      that carry an :class:`EdgeMessage` form; falls back to reference
+      whenever a direction's measured block span exceeds ``max_span``
+      (degree-skewed / gappy destination data — see
+      ``BlockMetadata.span_histogram``).  ``fused=True`` is the back-compat
+      spelling.
+    - ``backend="hybrid"`` — the degree-split two-engine step (dense H×H MXU
+      block + ELL remainder, core/hybrid.py) run as a whole-graph semiring
+      SpMV; ``hybrid_k_dense=None`` lets the performance model pick the
+      split (argmin predicted makespan — the paper's Eq. 4 role), and for
+      min combines a frontier-density ``pull_threshold`` switches push/pull
+      direction per superstep.  Requires ``pg.source``; programs without an
+      eligible EdgeMessage run the reference path.
     """
 
-    def __init__(self, pg: PartitionedGraph, *, fused: bool = False,
-                 block_e: int = 1024, max_span: int = 4096,
-                 gather_chunk: int = 256,
-                 interpret: Optional[bool] = None):
+    def __init__(self, pg: PartitionedGraph, *, backend: Optional[str] = None,
+                 fused: bool = False, block_e: int = 1024,
+                 max_span: int = 4096, gather_chunk: int = 256,
+                 interpret: Optional[bool] = None,
+                 hybrid_k_dense: Optional[int] = None,
+                 pull_threshold: float = 0.05,
+                 direction_switch: bool = True):
+        if backend is None:
+            backend = FUSED if fused else REFERENCE
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; pick one of "
+                             f"{BACKENDS}")
         self.pg = pg
+        self.backend = backend
         self.dims = _Dims(pg.num_parts, pg.v_max, pg.fwd.e_max, pg.fwd.o_max)
-        self.fused = fused
+        self.fused = backend == FUSED
+        self.interpret = interpret
         self._fwd_blk = self._rev_blk = None
-        if fused:
+        if self.fused:
             self._fwd_blk = build_block_metadata(pg.fwd, block_e=block_e)
             if pg.rev is not None:
                 self._rev_blk = build_block_metadata(pg.rev, block_e=block_e)
@@ -250,6 +367,115 @@ class BSPEngine:
         self._rev_cfg = _cfg(self._rev_blk)
         self.out_deg = jnp.asarray(pg.out_deg)
         self.vertex_mask = jnp.asarray(pg.vertex_mask)
+
+        self._pull_threshold = pull_threshold
+        self._direction_switch = direction_switch
+        self._hybrid_cache: dict = {}
+        self._hybrid_plan: Optional[dict] = None
+        if backend == HYBRID:
+            if pg.source is None:
+                raise ValueError(
+                    "hybrid backend needs PartitionedGraph.source; "
+                    "re-partition with core.partition.partition()")
+            self._hybrid_plan = self._plan_hybrid(hybrid_k_dense, block_e)
+
+    # ---------------------- hybrid backend plumbing ------------------------
+
+    def _plan_hybrid(self, k_dense: Optional[int], block_e: int) -> dict:
+        """Pick |H| from the perf model (paper Eq. 4 role), or honour an
+        explicit ``hybrid_k_dense``; candidates come from the block-span
+        histograms' degree-skew signal."""
+        from repro.core import perf_model
+        from repro.core.hybrid import edge_max_ranks
+
+        g = self.pg.source
+        blk = self._fwd_blk or build_block_metadata(self.pg.fwd,
+                                                    block_e=block_e)
+        skew = blk.degree_skew()
+        candidates = perf_model.k_dense_candidates(g.num_vertices,
+                                                   skewed=skew > 0.0)
+        ranks = edge_max_ranks(g)
+        if k_dense is None:
+            k_dense, table = perf_model.choose_k_dense(ranks, g.num_edges,
+                                                       candidates)
+        else:
+            table = perf_model.rank_k_dense(
+                ranks, g.num_edges, sorted(set(candidates) | {k_dense}))
+        chosen = next(r for r in table if r["k_dense"] == k_dense)
+        return dict(k_dense=k_dense, candidates=list(candidates), skew=skew,
+                    mode=perf_model.split_mode(k_dense, g.num_vertices,
+                                               chosen["e_sparse"]),
+                    table=table)
+
+    def hybrid_plan(self) -> Optional[dict]:
+        """The perf-model split decision (k_dense, mode, ranked table), or
+        None when the engine is not the hybrid backend."""
+        return self._hybrid_plan
+
+    def _hybrid_semiring(self, program: VertexProgram) -> Optional[str]:
+        """Semiring the hybrid backend would run ``program`` under, or None
+        when the program is ineligible (no EdgeMessage, or the weight enters
+        the message non-separably)."""
+        spec = program.edge_msg
+        if spec is None:
+            return None
+        if spec.use_weight:
+            if program.combine == MIN and spec.weight_op == "add":
+                return "min_plus"
+            if program.combine == SUM and spec.weight_op == "mul":
+                return "plus_times"
+            return None
+        return "plus_times" if program.combine == SUM else "min"
+
+    def _uses_hybrid(self, program: VertexProgram) -> bool:
+        return (self.backend == HYBRID
+                and self._hybrid_semiring(program) is not None)
+
+    def _hybrid_for(self, program: VertexProgram) -> _HybridData:
+        """Build (and cache) one direction's degree-split device data."""
+        from repro.core.graph import CSRGraph
+        from repro.core.hybrid import degree_split
+
+        semiring = self._hybrid_semiring(program)
+        key = (semiring, program.use_reverse)
+        if key in self._hybrid_cache:
+            return self._hybrid_cache[key]
+
+        g = self.pg.source
+        if program.use_reverse:
+            g = g.reverse()
+        if not program.edge_msg.use_weight and g.weights is not None:
+            # The program ignores weights; strip them so the semiring packs
+            # multiplicity counts / zero-cost hops instead.
+            g = CSRGraph(g.row_ptr, g.col, None)
+        hg = degree_split(g, self._hybrid_plan["k_dense"], semiring=semiring)
+
+        asg = self.pg.assignment
+        n = g.num_vertices
+        slot = (asg.part_of[hg.perm].astype(np.int64) * self.pg.v_max
+                + asg.local_id[hg.perm]).astype(np.int32)
+        hid = np.full((self.pg.num_parts, self.pg.v_max), n, dtype=np.int32)
+        for p, l2g in enumerate(asg.l2g):
+            hid[p, : len(l2g)] = hg.inv_perm[l2g]
+
+        push_src = push_dst = push_w = None
+        if program.combine == MIN and self._direction_switch:
+            push_src = hg.inv_perm[g.edge_sources()].astype(np.int32)
+            push_dst = hg.inv_perm[g.col].astype(np.int32)
+            if semiring == "min_plus" and g.weights is not None:
+                push_w = g.weights.astype(np.float32)
+
+        # Cache *numpy* arrays: _superstep_hybrid runs at jit-trace time, and
+        # device arrays created inside one trace must not leak into the next
+        # (numpy operands become per-trace constants instead).
+        hd = _HybridData(
+            semiring=semiring, k_dense=hg.k_dense, num_vertices=n,
+            dense=hg.dense_block, ell_col=hg.ell_col, ell_val=hg.ell_val,
+            slot=slot, hid=hid,
+            push_src=push_src, push_dst=push_dst, push_w=push_w,
+            pull_threshold=self._pull_threshold, interpret=self.interpret)
+        self._hybrid_cache[key] = hd
+        return hd
 
     # Local exchange: outbox[p, q] -> inbox[q, p] is a transpose.
     @staticmethod
@@ -276,16 +502,25 @@ class BSPEngine:
         return _Dims(self.dims.num_parts, self.dims.v_max,
                      edges["src"].shape[1], edges["inbox_dst"].shape[2])
 
-    def _step_fn(self, program: VertexProgram, edges: dict,
+    def _step_fn(self, program: VertexProgram, edges: Optional[dict],
                  exchange: Callable, all_finished: Callable) -> Callable:
+        if self._uses_hybrid(program):
+            return functools.partial(_superstep_hybrid, program,
+                                     self._hybrid_for(program), all_finished)
         return functools.partial(_superstep, self.dims_for(edges), program,
                                  edges, exchange, all_finished,
                                  self.fused_cfg_for(program))
 
+    def _edges_or_none(self, program: VertexProgram) -> Optional[dict]:
+        """Edge arrays for the program, or None when the hybrid backend
+        serves it (hybrid builds its own reverse direction, so BC runs even
+        without ``include_reverse`` partitioning)."""
+        return None if self._uses_hybrid(program) else self.edges_for(program)
+
     @functools.partial(jax.jit, static_argnums=(0, 1))
     def run(self, program: VertexProgram, state: State) -> Tuple[State, Array]:
         """Run supersteps until all partitions vote finish (lax.while_loop)."""
-        edges = self.edges_for(program)
+        edges = self._edges_or_none(program)
         step_fn = self._step_fn(program, edges, self._exchange, jnp.all)
 
         def body(carry):
@@ -305,7 +540,7 @@ class BSPEngine:
     def run_fixed(self, program: VertexProgram, num_steps: int,
                   state: State) -> State:
         """Fixed-iteration algorithms (PageRank)."""
-        edges = self.edges_for(program)
+        edges = self._edges_or_none(program)
         step_fn = self._step_fn(program, edges, self._exchange, jnp.all)
 
         def body(i, state):
@@ -326,6 +561,10 @@ class DistributedBSPEngine(BSPEngine):
     def __init__(self, pg: PartitionedGraph, mesh: Mesh, axis: str = "parts",
                  **kwargs):
         super().__init__(pg, **kwargs)
+        if self.backend == HYBRID:
+            raise NotImplementedError(
+                "the hybrid degree-split backend is single-device (on-chip "
+                "two-engine step); shard with backend='fused' instead")
         if pg.num_parts % mesh.shape[axis]:
             raise ValueError("num_parts must divide mesh axis size")
         self.mesh = mesh

@@ -14,13 +14,22 @@ same duality:
 are ranked by (in+out) degree, the top-K become the dense block H, and every
 edge inside H×H moves to the dense engine; the rest stays sparse.
 
-The perf model (perf_model.hybrid_makespan_tpu) predicts when the split wins,
-the same role Eq. 4 plays in the paper.
+Generalized semirings (one per TOTEM reduction class, §3.4) make the split a
+backend for *every* vertex program, not just SpMV-style PageRank:
+
+  - ``plus_times`` — y[v] = Σ x[u]·w(u,v)        (PageRank, BC)
+  - ``min_plus``   — y[v] = min x[u]+w(u,v)      (BFS, SSSP)
+  - ``min``        — y[v] = min x[u]             (CC label propagation)
+
+``auto_degree_split`` drives |H| from the performance model: candidate splits
+are ranked by ``perf_model.hybrid_makespan_tpu`` (the role Eq. 4 plays in the
+paper) and the argmin wins — which may be 0 (pure sparse) or the whole graph
+(pure dense); ``HybridGraph.mode`` reports which engine(s) actually run.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +38,16 @@ import numpy as np
 from repro.core.graph import CSRGraph, from_edge_list
 from repro.core import perf_model
 from repro.kernels import ops as kops
+from repro.kernels.ell_spmv import SEMIRINGS
+
+PLUS_TIMES = "plus_times"
+MIN_PLUS = "min_plus"
+MIN_SR = "min"
+
+
+def add_identity(semiring: str) -> float:
+    """⊕-identity of a semiring (0 for sum, +inf for min)."""
+    return SEMIRINGS[semiring][2]
 
 
 @dataclasses.dataclass
@@ -40,12 +59,14 @@ class HybridGraph:
     k_dense: int                 # |H| (0 → pure sparse)
     perm: np.ndarray             # new id -> old id (degree-descending)
     inv_perm: np.ndarray         # old id -> new id
-    dense_block: np.ndarray      # [K, K] f32 adjacency (H×H edges)
+    dense_block: np.ndarray      # [K, K] f32 (⊗ values; ⊕-identity non-edges)
     ell_col: np.ndarray          # [V, kmax] int32 (pull: in-neighbours)
     ell_val: np.ndarray          # [V, kmax] f32
     out_deg: np.ndarray          # [V] f32 in new id space (true out-degree)
     dense_edges: int             # edges handled by the MXU path
     sparse_edges: int            # edges handled by the ELL path
+    semiring: str = PLUS_TIMES
+    model_table: Optional[List[dict]] = None  # perf-model ranking (auto split)
 
     @property
     def dense_density(self) -> float:
@@ -55,35 +76,130 @@ class HybridGraph:
     def dense_fraction(self) -> float:
         return self.dense_edges / max(self.num_edges, 1)
 
+    @property
+    def mode(self) -> str:
+        """Which engine(s) this split runs: dense, sparse, or hybrid."""
+        return perf_model.split_mode(self.k_dense, self.num_vertices,
+                                     self.sparse_edges)
+
     def predicted_makespan(self, num_chips: int = 1) -> dict:
         return perf_model.hybrid_makespan_tpu(
             self.dense_edges, self.dense_density, self.sparse_edges,
             boundary_slots=0, num_chips=num_chips)
 
 
-def degree_split(g: CSRGraph, k_dense: int) -> HybridGraph:
-    """Split ``g``: top-``k_dense`` degree vertices → dense block."""
+def _degree_perm(g: CSRGraph):
+    """Degree-descending vertex ranking (new -> old) and its inverse."""
     total_deg = g.out_degrees() + g.in_degrees()
     perm = np.argsort(-total_deg, kind="stable")       # new -> old
     inv = np.empty_like(perm)
     inv[perm] = np.arange(len(perm))
+    return perm, inv
+
+
+def edge_max_ranks(g: CSRGraph) -> np.ndarray:
+    """Per-edge max(rank(src), rank(dst)) under the degree ranking.
+
+    ``e_dense(k) = #{edges with max rank < k}`` — the perf model's input for
+    ranking candidate splits (symmetric under graph reversal, so one table
+    serves both edge directions).
+    """
+    _, inv = _degree_perm(g)
+    return np.maximum(inv[g.edge_sources()], inv[g.col])
+
+
+def degree_split(g: CSRGraph, k_dense: int,
+                 semiring: str = PLUS_TIMES) -> HybridGraph:
+    """Split ``g``: top-``k_dense`` degree vertices → dense block.
+
+    Edge ⊗ values follow the semiring (kernels/ops.csr_to_ell): weights where
+    the graph has them, multiplicity counts (``plus_times``) or zero-cost
+    hops (``min_plus``) otherwise.  Multi-edges accumulate with ⊕ in the
+    dense block, matching the reference engine's per-edge reduction.
+    """
+    if semiring not in SEMIRINGS:
+        raise ValueError(f"unknown semiring {semiring!r}")
+    perm, inv = _degree_perm(g)
     src = inv[g.edge_sources()]
     dst = inv[g.col]
+    if semiring == PLUS_TIMES:
+        w = (g.weights if g.weights is not None
+             else np.ones(g.num_edges, dtype=np.float32))
+    elif semiring == MIN_PLUS:
+        w = (g.weights if g.weights is not None
+             else np.zeros(g.num_edges, dtype=np.float32))
+    else:  # pure min: edge values are irrelevant, hop cost 0
+        w = np.zeros(g.num_edges, dtype=np.float32)
 
     in_h = (src < k_dense) & (dst < k_dense)
-    dense = np.zeros((k_dense, k_dense), dtype=np.float32)
+    dense = np.full((k_dense, k_dense), add_identity(semiring),
+                    dtype=np.float32)
     if k_dense:
-        np.add.at(dense, (src[in_h], dst[in_h]), 1.0)
+        if semiring == PLUS_TIMES:
+            np.add.at(dense, (src[in_h], dst[in_h]), w[in_h])
+        else:
+            np.minimum.at(dense, (src[in_h], dst[in_h]), w[in_h])
 
     rest = ~in_h
-    g_rest = from_edge_list(src[rest], dst[rest], g.num_vertices)
-    col, val, _ = kops.csr_to_ell(g_rest, combine="sum", transpose=True)
+    # Attach explicit per-edge values (w holds the per-semiring defaults) so
+    # the ELL packing always matches the dense block, independent of
+    # csr_to_ell's unweighted fallbacks; pure-min values are never read.
+    rest_w = w[rest] if semiring != MIN_SR else None
+    g_rest = from_edge_list(src[rest], dst[rest], g.num_vertices,
+                            weights=rest_w)
+    col, val, _ = kops.csr_to_ell(g_rest, semiring=semiring, transpose=True)
 
     deg = g.out_degrees().astype(np.float32)[perm]
     return HybridGraph(
         num_vertices=g.num_vertices, num_edges=g.num_edges, k_dense=k_dense,
         perm=perm, inv_perm=inv, dense_block=dense, ell_col=col, ell_val=val,
-        out_deg=deg, dense_edges=int(in_h.sum()), sparse_edges=int(rest.sum()))
+        out_deg=deg, dense_edges=int(in_h.sum()), sparse_edges=int(rest.sum()),
+        semiring=semiring)
+
+
+def auto_degree_split(g: CSRGraph, semiring: str = PLUS_TIMES,
+                      candidates=None, skewed: bool = True,
+                      num_chips: int = 1) -> HybridGraph:
+    """Degree split with |H| chosen by the performance model (Eq. 4 role).
+
+    Ranks ``candidates`` (default: ``perf_model.k_dense_candidates``; pass
+    ``skewed=False`` when the partition block-span histograms show no
+    high-degree concentration) by predicted makespan and splits at the
+    argmin.  The ranking table rides on the result for introspection.
+    """
+    if candidates is None:
+        candidates = perf_model.k_dense_candidates(g.num_vertices,
+                                                   skewed=skewed)
+    k, table = perf_model.choose_k_dense(edge_max_ranks(g), g.num_edges,
+                                         candidates, num_chips=num_chips)
+    hg = degree_split(g, k, semiring=semiring)
+    hg.model_table = table
+    return hg
+
+
+def hybrid_spmv(dense: jax.Array, ell_col: jax.Array, ell_val: jax.Array,
+                x: jax.Array, *, semiring: str, k_dense: int,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """One generalized two-engine step: y[v] = ⊕ over in-edges x[u] ⊗ w.
+
+    The dense H×H block runs on the MXU path (plus_times) or its tropical
+    twin (min_plus/min); the remainder streams through the ELL kernel.  ``x``
+    is the per-source value vector in hybrid (degree-ranked) id space.
+    """
+    ident = add_identity(semiring)
+    xs = jnp.concatenate([x, jnp.full((1,), ident, x.dtype)])
+    y = kops.ell_spmv_op(ell_col, ell_val, xs, semiring=semiring,
+                         interpret=interpret)
+    if k_dense:
+        if semiring == PLUS_TIMES:
+            yh = kops.dense_spmv_op(x[None, :k_dense], dense,
+                                    interpret=interpret)[0]
+            y = y.at[:k_dense].add(yh)
+        else:
+            yh = kops.dense_spmv_minplus_op(x[None, :k_dense], dense,
+                                            interpret=interpret)[0]
+            y = y.at[:k_dense].min(yh)
+    return y
 
 
 def hybrid_pagerank(hg: HybridGraph, num_iterations: int = 20,
@@ -93,8 +209,9 @@ def hybrid_pagerank(hg: HybridGraph, num_iterations: int = 20,
 
     Returns ranks in the *original* vertex id order.
     """
+    if hg.semiring != PLUS_TIMES:
+        raise ValueError("hybrid_pagerank needs a plus_times split")
     n = hg.num_vertices
-    k = hg.k_dense
     dense = jnp.asarray(hg.dense_block)
     col = jnp.asarray(hg.ell_col)
     val = jnp.asarray(hg.ell_val)
@@ -105,15 +222,8 @@ def hybrid_pagerank(hg: HybridGraph, num_iterations: int = 20,
     @jax.jit
     def step(rank):
         contrib = rank * inv_deg
-        # sparse path: pull-reduce over the ELL remainder
-        x = jnp.concatenate([contrib, jnp.zeros((1,), contrib.dtype)])
-        y = kops.ell_spmv_op(col, val, x, combine="sum",
-                             interpret=interpret)
-        # dense path: MXU GEMM over the high-degree block
-        if k:
-            yh = kops.dense_spmv_op(contrib[None, :k], dense,
-                                    interpret=interpret)[0]
-            y = y.at[:k].add(yh)
+        y = hybrid_spmv(dense, col, val, contrib, semiring=PLUS_TIMES,
+                        k_dense=hg.k_dense, interpret=interpret)
         return delta + damping * y
 
     rank = jnp.full((n,), 1.0 / n, dtype=jnp.float32)

@@ -37,6 +37,10 @@ HIGH = "high"
 LOW = "low"
 STRATEGIES = (RAND, HIGH, LOW)
 
+# Bin edges for BlockMetadata.span_histogram / degree_skew (one shared tuple
+# so the skew signal can't drift from the histogram buckets).
+SPAN_HIST_BINS = (1, 129, 513, 1025, 2049, 4097, 1 << 30)
+
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
@@ -95,6 +99,10 @@ class PartitionedGraph:
     alpha: np.ndarray                # [P] share of edges per partition
     beta_no_reduction: float         # boundary edges / |E|
     beta_with_reduction: float       # outbox slots / |E|  (paper §3.4)
+    # The un-partitioned graph, kept for backends that re-derive their own
+    # layout from it (the hybrid degree-split engine).  None for
+    # PartitionedGraphs built before this field existed.
+    source: Optional[CSRGraph] = None
 
     @property
     def seg_count(self) -> int:
@@ -275,6 +283,7 @@ def partition(g: CSRGraph, num_parts: int, strategy: str = RAND,
         alpha=fwd.num_edges / total_e,
         beta_no_reduction=boundary / total_e,
         beta_with_reduction=slots / total_e,
+        source=g,
     )
 
 
@@ -314,8 +323,7 @@ class BlockMetadata:
     def e_pad(self) -> int:
         return self.src.shape[1]
 
-    def span_histogram(self, bins: Sequence[int] = (1, 129, 513, 1025, 2049,
-                                                    4097, 1 << 30)
+    def span_histogram(self, bins: Sequence[int] = SPAN_HIST_BINS
                        ) -> np.ndarray:
         """Per-partition histogram of block spans.
 
@@ -331,6 +339,20 @@ class BlockMetadata:
     def fused_ok(self, max_span: int) -> bool:
         """True when every block fits the kernel's span bound."""
         return self.span <= max_span
+
+    def degree_skew(self, min_span: int = 513) -> float:
+        """Fraction of span-histogram mass at spans ≥ ``min_span``.
+
+        The hybrid planner's skew signal: blocks whose destinations span a
+        wide segment range come from high-degree vertices concentrating many
+        distinct neighbours — the graphs where a top-K dense split pays.
+        ``min_span`` must be one of ``SPAN_HIST_BINS``.
+        """
+        if min_span not in SPAN_HIST_BINS:
+            raise ValueError(f"min_span must be a bin edge, got {min_span}")
+        hist = self.span_histogram(SPAN_HIST_BINS)
+        total = max(int(hist.sum()), 1)
+        return float(hist[:, SPAN_HIST_BINS.index(min_span):].sum()) / total
 
 
 def build_block_metadata(ea: EdgeArrays, *, block_e: int = 1024,

@@ -150,6 +150,80 @@ def hybrid_makespan_tpu(e_dense: float, dense_density: float,
                 makespan=t_comm + t_dense + t_sparse)
 
 
+# ---------------------------------------------------------------------------
+# Degree-split selection (the paper's Eq. 4 role: the model picks the split)
+# ---------------------------------------------------------------------------
+
+# Largest dense block the planner will consider: the f32 H×H block plus the
+# VMEM-resident value slice must fit comfortably in VMEM (k² · 4B ≤ VMEM/4).
+K_DENSE_CAP = int((TPU_VMEM_BYTES / 4 / 4) ** 0.5) // 128 * 128
+
+
+def k_dense_candidates(num_vertices: int, skewed: bool = True,
+                       lane: int = 128) -> list:
+    """Candidate dense-block sizes |H| for the degree split.
+
+    A lane-aligned power-of-two ladder up to ``K_DENSE_CAP`` (VMEM bound) or
+    the vertex count, plus 0 (pure sparse) and the full graph when it fits
+    (pure dense).  ``skewed=False`` — no high-degree concentration in the
+    block-span histograms (partition.BlockMetadata.span_histogram) — prunes
+    the ladder to {0, one lane tile}: without skew no top-K block is dense
+    enough for the MXU path to pay.
+    """
+    if not skewed:
+        return [0, min(lane, K_DENSE_CAP)] if num_vertices >= lane else [0]
+    cap = min(K_DENSE_CAP, num_vertices)
+    cands = [0]
+    k = lane
+    while k < cap:
+        cands.append(k)
+        k *= 2
+    cands.append(cap)
+    return cands
+
+
+def rank_k_dense(edge_max_rank: np.ndarray, num_edges: int, candidates,
+                 num_chips: int = 1, bytes_per_edge: float = 8.0,
+                 msg_bytes: float = 4.0) -> list:
+    """Predict the two-engine makespan for each candidate |H| (Eq. 2 recast).
+
+    ``edge_max_rank[e] = max(rank(src_e), rank(dst_e))`` under the
+    degree-descending vertex ranking, so ``e_dense(k)`` — edges inside the
+    H×H block — is a single ``searchsorted``.  Returns one record per
+    candidate with the makespan terms from :func:`hybrid_makespan_tpu`.
+    """
+    ranks = np.sort(np.asarray(edge_max_rank))
+    table = []
+    for k in candidates:
+        e_dense = int(np.searchsorted(ranks, k, side="left"))
+        e_sparse = int(num_edges) - e_dense
+        density = e_dense / max(int(k) * int(k), 1)
+        pred = hybrid_makespan_tpu(e_dense, density, e_sparse,
+                                   boundary_slots=0, num_chips=num_chips,
+                                   bytes_per_edge=bytes_per_edge,
+                                   msg_bytes=msg_bytes)
+        table.append(dict(k_dense=int(k), e_dense=e_dense, e_sparse=e_sparse,
+                          density=density, **pred))
+    return table
+
+
+def choose_k_dense(edge_max_rank: np.ndarray, num_edges: int, candidates,
+                   **kwargs):
+    """Pick |H| = argmin of predicted makespan; returns (k, ranked table)."""
+    table = rank_k_dense(edge_max_rank, num_edges, candidates, **kwargs)
+    best = min(table, key=lambda rec: rec["makespan"])
+    return best["k_dense"], table
+
+
+def split_mode(k_dense: int, num_vertices: int, e_sparse: int) -> str:
+    """Classify a chosen split: the engine runs dense, sparse, or both."""
+    if k_dense == 0:
+        return "sparse"
+    if e_sparse == 0 or k_dense >= num_vertices:
+        return "dense"
+    return "hybrid"
+
+
 def predicted_vs_measured(pred: np.ndarray, meas: np.ndarray) -> dict:
     """Pearson correlation + average error — paper Table 3 metrics."""
     pred = np.asarray(pred, dtype=np.float64)

@@ -18,6 +18,13 @@ tile stays resident in VMEM while partial products accumulate (revolving
 accumulator), and Pallas grid pipelining double-buffers the HBM→VMEM streams
 of ``a`` — the TPU analogue of the paper's mapped-memory streaming (§8).
 Tiles are 128-aligned for the 128×128 systolic array.
+
+``dense_spmv_minplus`` is the tropical (min, +) twin for the traversal
+algorithms (BFS/SSSP/CC): ``y[m, n] = min_k x[m, k] + a[k, n]`` with the same
+grid/tiling, except the reduction runs on the VPU (the MXU only contracts
+(+, ×)) — the dense block still wins on locality: ``a``'s tiles stream
+HBM→VMEM once and ``x`` stays resident, vs. a random gather per edge.
+Non-edges hold +inf, the ⊕-identity.
 """
 from __future__ import annotations
 
@@ -55,6 +62,46 @@ def dense_spmv(x: jax.Array, a: jax.Array, *, block_n: int = 256,
     grid = (n // block_n, k // block_k)
     return pl.pallas_call(
         _dense_spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, block_k), lambda j, kk: (0, kk)),
+            pl.BlockSpec((block_k, block_n), lambda j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda j, kk: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, a)
+
+
+def _dense_minplus_kernel(x_ref, a_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, jnp.inf)
+
+    # VPU min-reduction over the contraction tile; the [m, bk, bn] candidate
+    # cube stays in registers/VMEM for the small m this path uses.
+    cand = jnp.min(x_ref[...][:, :, None] + a_ref[...][None, :, :], axis=1)
+    o_ref[...] = jnp.minimum(o_ref[...], cand)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_k", "interpret"))
+def dense_spmv_minplus(x: jax.Array, a: jax.Array, *, block_n: int = 256,
+                       block_k: int = 256,
+                       interpret: bool = False) -> jax.Array:
+    """``y[m, n] = min_k x[m, k] + a[k, n]`` with explicit VMEM tiling.
+
+    Same contract as :func:`dense_spmv` (ops.py pads to block multiples);
+    padding entries of ``x``/``a`` must hold +inf.
+    """
+    m, k = x.shape
+    k2, n = a.shape
+    assert k == k2, (x.shape, a.shape)
+    assert n % block_n == 0 and k % block_k == 0, (
+        "ops.dense_spmv_minplus_op pads to block multiples")
+    grid = (n // block_n, k // block_k)
+    return pl.pallas_call(
+        _dense_minplus_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((m, block_k), lambda j, kk: (0, kk)),

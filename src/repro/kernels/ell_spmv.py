@@ -8,12 +8,17 @@ DMA — the latency-hiding role the GPU's hardware multithreading plays in the
 paper) and keeps the source-value vector ``x`` VMEM-resident across the whole
 grid, the analogue of the paper's cache-resident summary data structure.
 
-Two combine modes cover the TOTEM algorithms (paper §3.4 reduction classes):
-  - ``sum``: y[v] = Σ_k x[col[v,k]] · val[v,k]        (PageRank)
-  - ``min``: y[v] = min_k x[col[v,k]] + val[v,k]      (BFS/SSSP/CC)
+Three semirings cover the TOTEM algorithms (paper §3.4 reduction classes):
+  - ``plus_times``: y[v] = Σ_k x[col[v,k]] · val[v,k]      (PageRank, BC)
+  - ``min_plus``:   y[v] = min_k x[col[v,k]] + val[v,k]    (BFS, SSSP)
+  - ``min``:        y[v] = min_k x[col[v,k]]               (CC label prop)
 
-Sentinel slots (col == x_len-1, the padded sink) carry val = 0 / +inf so they
-are identity under the respective combine.
+``min`` is ``min_plus`` with all-zero values, but gets its own kernel so the
+pure-propagation algorithms skip the add on the VPU.  Sentinel slots
+(col == x_len-1, the padded sink) carry the ⊗-identity value (1/0/ignored)
+and x's sink entry carries the ⊕-identity (0/+inf), so padding never
+contributes.  ``combine="sum"|"min"`` remains as a back-compat alias for
+``plus_times``/``min_plus``.
 
 TPU note: the row gather ``x[col_block]`` lowers to Mosaic's 32-bit dynamic
 VMEM gather on v4+; on older targets the fallback is a one-hot matmul
@@ -36,7 +41,7 @@ def _ell_kernel_sum(col_ref, val_ref, x_ref, o_ref):
     o_ref[...] = jnp.sum(gathered * vals, axis=1)
 
 
-def _ell_kernel_min(col_ref, val_ref, x_ref, o_ref):
+def _ell_kernel_min_plus(col_ref, val_ref, x_ref, o_ref):
     cols = col_ref[...]
     vals = val_ref[...]
     x = x_ref[...]
@@ -44,11 +49,37 @@ def _ell_kernel_min(col_ref, val_ref, x_ref, o_ref):
     o_ref[...] = jnp.min(gathered + vals, axis=1)
 
 
+def _ell_kernel_min(col_ref, val_ref, x_ref, o_ref):
+    del val_ref                              # pure propagation: no ⊗
+    cols = col_ref[...]
+    x = x_ref[...]
+    o_ref[...] = jnp.min(jnp.take(x, cols, axis=0), axis=1)
+
+
+# semiring → (kernel, ⊕ name, ⊕ identity, ⊗ identity for sentinel slots)
+SEMIRINGS = {
+    "plus_times": (_ell_kernel_sum, "sum", 0.0, 1.0),
+    "min_plus": (_ell_kernel_min_plus, "min", float("inf"), 0.0),
+    "min": (_ell_kernel_min, "min", float("inf"), 0.0),
+}
+_COMBINE_ALIAS = {"sum": "plus_times", "min": "min_plus"}
+
+
+def resolve_semiring(combine: str | None, semiring: str | None) -> str:
+    """Map the legacy ``combine`` name / explicit ``semiring`` to a key."""
+    if semiring is not None:
+        if semiring not in SEMIRINGS:
+            raise ValueError(f"unknown semiring {semiring!r}")
+        return semiring
+    return _COMBINE_ALIAS[combine or "sum"]
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("combine", "block_v", "interpret"))
+                   static_argnames=("combine", "semiring", "block_v",
+                                    "interpret"))
 def ell_spmv(col: jax.Array, val: jax.Array, x: jax.Array, *,
-             combine: str = "sum", block_v: int = 512,
-             interpret: bool = False) -> jax.Array:
+             combine: str | None = None, semiring: str | None = None,
+             block_v: int = 512, interpret: bool = False) -> jax.Array:
     """ELL SpMV over a row-blocked grid.
 
     col: [V, K] int32 neighbour ids into ``x``; val: [V, K]; x: [x_len].
@@ -57,7 +88,7 @@ def ell_spmv(col: jax.Array, val: jax.Array, x: jax.Array, *,
     v, k = col.shape
     assert val.shape == (v, k)
     assert v % block_v == 0, "ops.ell_spmv_op pads to block multiples"
-    kernel = _ell_kernel_sum if combine == "sum" else _ell_kernel_min
+    kernel = SEMIRINGS[resolve_semiring(combine, semiring)][0]
     grid = (v // block_v,)
     return pl.pallas_call(
         kernel,

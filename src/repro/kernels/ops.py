@@ -54,54 +54,89 @@ def dense_spmv_op(x: jax.Array, a: jax.Array, *, block: int = 256,
     return y[:, :n]
 
 
+def dense_spmv_minplus_op(x: jax.Array, a: jax.Array, *, block: int = 256,
+                          interpret: bool | None = None) -> jax.Array:
+    """y[m, n] = min_k x[m, k] + a[k, n]; pads K and N with +inf."""
+    if interpret is None:
+        interpret = _interpret_default()
+    m, k = x.shape
+    _, n = a.shape
+    bk = min(block, max(128, 1 << (k - 1).bit_length()))
+    bn = min(block, max(128, 1 << (n - 1).bit_length()))
+    xp = _pad_to(x, bk, 1, value=jnp.inf)
+    ap = _pad_to(_pad_to(a, bk, 0, value=jnp.inf), bn, 1, value=jnp.inf)
+    y = _dense.dense_spmv_minplus(xp, ap, block_n=bn, block_k=bk,
+                                  interpret=interpret)
+    return y[:, :n]
+
+
 # ---------------------------------------------------------------------------
 # ELL SpMV
 # ---------------------------------------------------------------------------
 
-def csr_to_ell(g: CSRGraph, combine: str = "sum",
+def csr_to_ell(g: CSRGraph, combine: str | None = None,
+               semiring: str | None = None,
                transpose: bool = True) -> Tuple[np.ndarray, np.ndarray, int]:
     """Pack a CSR graph into ELLPACK (numpy preprocessing).
 
     ``transpose=True`` packs *in*-edges per vertex (pull form: y[v] reduces
     over in-neighbours), which is the natural SpMV orientation.  Sentinel
-    slots point at index ``num_vertices`` (callers append an identity slot to
-    x) with identity values.
+    slots point at index ``num_vertices`` (callers append a ⊕-identity slot
+    to x) with ⊗-identity values.
+
+    Two value policies, kept separate for back-compat:
+
+    - legacy ``combine=``: exactly the pre-semiring packing — ``"sum"`` →
+      1.0 per edge (multiplicity counts, weights ignored), ``"min"`` →
+      weights (1.0 unweighted).
+    - explicit ``semiring=``: ``plus_times`` → weight (1 unweighted),
+      ``min_plus`` → weight (0 unweighted: the message carries the
+      distance, the edge adds nothing), ``min`` → 0 (values unused by the
+      kernel).  The hybrid engine passes explicit weights, so the
+      unweighted fallbacks only matter for direct callers.
     """
+    sr = _ell.resolve_semiring(combine, semiring)
+    legacy = semiring is None
     gg = g.reverse() if transpose else g
     deg = gg.out_degrees()
     kmax = max(int(deg.max()) if len(deg) else 1, 1)
     n = gg.num_vertices
-    ident = 0.0 if combine == "sum" else np.inf
+    mul_ident = _ell.SEMIRINGS[sr][3]
     col = np.full((n, kmax), n, dtype=np.int32)
-    val = np.full((n, kmax), ident, dtype=np.float32)
+    val = np.full((n, kmax), mul_ident, dtype=np.float32)
     # Vectorized ELL pack: each edge's (row, slot) from its rank within the
     # CSR row, then one fancy-indexed scatter instead of an O(V) Python loop.
     rows = np.repeat(np.arange(n, dtype=np.int64), deg)
     slots = np.arange(gg.num_edges, dtype=np.int64) - \
         np.repeat(gg.row_ptr[:-1], deg)
     col[rows, slots] = gg.col
-    if combine == "sum":
+    if sr == "plus_times" and legacy:
         val[rows, slots] = 1.0
+    elif sr == "min" and not legacy:
+        val[rows, slots] = 0.0
+    elif gg.weights is not None:
+        val[rows, slots] = gg.weights
     else:
-        w = gg.weights if gg.weights is not None else np.ones(
-            gg.num_edges, dtype=np.float32)
-        val[rows, slots] = w
+        unweighted = 1.0 if sr == "plus_times" or legacy else 0.0
+        val[rows, slots] = unweighted
     return col, val, kmax
 
 
 def ell_spmv_op(col: jax.Array, val: jax.Array, x: jax.Array, *,
-                combine: str = "sum", block_v: int = 512,
+                combine: str | None = None, semiring: str | None = None,
+                block_v: int = 512,
                 interpret: bool | None = None) -> jax.Array:
     """ELL SpMV for arbitrary V; pads rows to the block size."""
     if interpret is None:
         interpret = _interpret_default()
+    sr = _ell.resolve_semiring(combine, semiring)
     v = col.shape[0]
     bv = min(block_v, max(8, 1 << (v - 1).bit_length()))
-    ident = 0.0 if combine == "sum" else jnp.inf
-    sentinel = x.shape[0] - 1  # callers append the identity slot
+    mul_ident = _ell.SEMIRINGS[sr][3]
+    sentinel = x.shape[0] - 1  # callers append the ⊕-identity slot
     colp = _pad_to(col, bv, 0, value=sentinel)
-    valp = _pad_to(val, bv, 0, value=ident)
-    y = _ell.ell_spmv(colp, valp, x, combine=combine, block_v=bv,
+    valp = _pad_to(val, bv, 0, value=mul_ident)
+    y = _ell.ell_spmv(colp, valp, x, semiring=sr, block_v=bv,
                       interpret=interpret)
     return y[:v]
 

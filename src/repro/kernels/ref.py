@@ -10,11 +10,21 @@ def dense_spmv_ref(x: jax.Array, a: jax.Array) -> jax.Array:
     return jnp.dot(x, a, preferred_element_type=jnp.float32)
 
 
+def dense_spmv_minplus_ref(x: jax.Array, a: jax.Array) -> jax.Array:
+    """y[m, n] = min_k x[m, k] + a[k, n] (tropical matmul)."""
+    return jnp.min(x[:, :, None] + a[None, :, :], axis=1)
+
+
 def ell_spmv_ref(col: jax.Array, val: jax.Array, x: jax.Array,
-                 combine: str = "sum") -> jax.Array:
+                 combine: str | None = None,
+                 semiring: str | None = None) -> jax.Array:
+    from repro.kernels.ell_spmv import resolve_semiring
+    sr = resolve_semiring(combine, semiring)
     gathered = jnp.take(x, col, axis=0)
-    if combine == "sum":
+    if sr == "plus_times":
         return jnp.sum(gathered * val, axis=1).astype(jnp.float32)
+    if sr == "min":
+        return jnp.min(gathered, axis=1).astype(jnp.float32)
     return jnp.min(gathered + val, axis=1).astype(jnp.float32)
 
 

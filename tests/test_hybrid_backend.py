@@ -1,0 +1,209 @@
+"""Hybrid degree-split backend == reference path, for every algorithm.
+
+``BSPEngine(backend="hybrid")`` must be a pure execution-path substitution:
+``min``-combine algorithms (BFS, SSSP, CC) are compared *exactly* — min is
+order-insensitive — while ``sum``-combine algorithms (PageRank, BC) are
+compared to f32 tolerances, since the dense-block/ELL split reassociates the
+sums.  Also covers the perf-model split choice (chosen |H| must be the
+argmin of predicted makespan), the push/pull direction switch, and the
+reference fallback for ineligible programs.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core import partition as PT
+from repro.core import perf_model
+from repro.core.bsp import BSPEngine
+from repro.core.hybrid import auto_degree_split, edge_max_ranks
+from repro.algorithms.bfs import BFS_PROGRAM, bfs
+from repro.algorithms.sssp import sssp
+from repro.algorithms.pagerank import pagerank
+from repro.algorithms.cc import connected_components, symmetrize
+from repro.algorithms.bc import betweenness_centrality
+
+INTERP = dict(interpret=True)
+SCALE = 10
+PARTS = 4
+
+
+@pytest.fixture(scope="module", params=PT.STRATEGIES)
+def engines(request):
+    """(reference, hybrid) engine pair per partitioning strategy."""
+    g = G.rmat(SCALE, 4, seed=13).with_uniform_weights(seed=1)
+    pg = PT.partition(g, PARTS, request.param, include_reverse=True)
+    return (BSPEngine(pg, **INTERP),
+            BSPEngine(pg, backend="hybrid", **INTERP))
+
+
+@pytest.fixture(scope="module", params=PT.STRATEGIES)
+def cc_engines(request):
+    g = symmetrize(G.rmat(SCALE, 4, seed=13))
+    pg = PT.partition(g, PARTS, request.param)
+    return (BSPEngine(pg, **INTERP),
+            BSPEngine(pg, backend="hybrid", **INTERP))
+
+
+def test_bfs_parity(engines):
+    ref, hyb = engines
+    lr, sr = bfs(ref, 0)
+    lh, sh = bfs(hyb, 0)
+    np.testing.assert_array_equal(lr, lh)   # min combine: exact
+    assert sr == sh
+
+
+def test_sssp_parity(engines):
+    ref, hyb = engines
+    dr, _ = sssp(ref, 0)
+    dh, _ = sssp(hyb, 0)
+    np.testing.assert_array_equal(dr, dh)   # min combine: exact
+
+
+def test_pagerank_parity(engines):
+    ref, hyb = engines
+    pr = pagerank(ref, num_iterations=10)
+    ph = pagerank(hyb, num_iterations=10)
+    np.testing.assert_allclose(pr, ph, rtol=1e-5, atol=1e-8)
+
+
+def test_bc_parity(engines):
+    ref, hyb = engines
+    br, sr = betweenness_centrality(ref, 0)
+    bh, sh = betweenness_centrality(hyb, 0)
+    assert sr == sh
+    np.testing.assert_allclose(br, bh, rtol=1e-4, atol=1e-4)
+
+
+def test_cc_parity(cc_engines):
+    ref, hyb = cc_engines
+    cr, _ = connected_components(ref)
+    ch, _ = connected_components(hyb)
+    np.testing.assert_array_equal(cr, ch)   # min combine: exact
+
+
+def test_bc_runs_without_include_reverse():
+    """Hybrid builds its own reverse split, so BC needs no pg.rev."""
+    g = G.rmat(SCALE, 4, seed=13)
+    ref = BSPEngine(PT.partition(g, PARTS, PT.RAND, include_reverse=True),
+                    **INTERP)
+    hyb = BSPEngine(PT.partition(g, PARTS, PT.RAND), backend="hybrid",
+                    **INTERP)
+    br, _ = betweenness_centrality(ref, 0)
+    bh, _ = betweenness_centrality(hyb, 0)
+    np.testing.assert_allclose(br, bh, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# split decision: the perf model picks |H| (paper Eq. 4 role)
+# ---------------------------------------------------------------------------
+
+def test_chosen_k_dense_is_argmin_of_predicted_makespan():
+    g = G.rmat(SCALE, 4, seed=13)
+    cands = perf_model.k_dense_candidates(g.num_vertices)
+    k, table = perf_model.choose_k_dense(edge_max_ranks(g), g.num_edges,
+                                         cands)
+    makespans = {rec["k_dense"]: rec["makespan"] for rec in table}
+    assert set(makespans) == set(cands)
+    assert k == min(makespans, key=makespans.get)
+
+
+def test_engine_plan_matches_model_argmin():
+    g = G.rmat(SCALE, 4, seed=13)
+    eng = BSPEngine(PT.partition(g, PARTS, PT.HIGH), backend="hybrid",
+                    **INTERP)
+    plan = eng.hybrid_plan()
+    best = min(plan["table"], key=lambda rec: rec["makespan"])
+    assert plan["k_dense"] == best["k_dense"]
+    assert plan["mode"] in ("sparse", "dense", "hybrid")
+
+
+def test_auto_degree_split_attaches_table():
+    g = G.rmat(SCALE, 4, seed=13)
+    hg = auto_degree_split(g)
+    assert hg.model_table is not None
+    best = min(hg.model_table, key=lambda rec: rec["makespan"])
+    assert hg.k_dense == best["k_dense"]
+
+
+def test_split_mode_classification():
+    assert perf_model.split_mode(0, 1024, e_sparse=10) == "sparse"
+    assert perf_model.split_mode(1024, 1024, e_sparse=0) == "dense"
+    assert perf_model.split_mode(256, 1024, e_sparse=10) == "hybrid"
+
+
+def test_unskewed_candidates_are_pruned():
+    full = perf_model.k_dense_candidates(1 << 12, skewed=True)
+    pruned = perf_model.k_dense_candidates(1 << 12, skewed=False)
+    assert len(pruned) < len(full) and pruned[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# execution-path selection
+# ---------------------------------------------------------------------------
+
+def test_explicit_k_dense_covers_pure_sparse_and_hybrid():
+    g = G.rmat(SCALE, 4, seed=13)
+    pg = PT.partition(g, PARTS, PT.RAND)
+    lr, _ = bfs(BSPEngine(pg, **INTERP), 0)
+    for k in (0, 256):
+        lh, _ = bfs(BSPEngine(pg, backend="hybrid", hybrid_k_dense=k,
+                              **INTERP), 0)
+        np.testing.assert_array_equal(lr, lh)
+
+
+def test_push_and_pull_directions_agree():
+    """Forcing always-push vs always-pull changes nothing (min is exact)."""
+    g = G.rmat(SCALE, 4, seed=13)
+    pg = PT.partition(g, PARTS, PT.RAND)
+    # pull_threshold=0 → density < 0 never true → always pull;
+    # pull_threshold=1.1 → always push.
+    l_pull, s_pull = bfs(BSPEngine(pg, backend="hybrid", pull_threshold=0.0,
+                                   **INTERP), 0)
+    l_push, s_push = bfs(BSPEngine(pg, backend="hybrid", pull_threshold=1.1,
+                                   **INTERP), 0)
+    np.testing.assert_array_equal(l_pull, l_push)
+    assert s_pull == s_push
+
+
+def test_program_without_edge_msg_falls_back_to_reference():
+    g = G.rmat(9, 4, seed=7)
+    pg = PT.partition(g, 2, PT.RAND)
+    eng = BSPEngine(pg, backend="hybrid", **INTERP)
+    plain = dataclasses.replace(BFS_PROGRAM, edge_msg=None)
+    assert not eng._uses_hybrid(plain)
+    lr, _ = bfs(BSPEngine(pg, **INTERP), 0)
+
+    import jax.numpy as jnp
+    level0 = np.full((2, pg.v_max), np.inf, dtype=np.float32)
+    level0[int(pg.assignment.part_of[0]), int(pg.assignment.local_id[0])] = 0.0
+    state, _ = eng.run(plain, {"level": jnp.asarray(level0)})
+    np.testing.assert_array_equal(
+        lr, pg.gather_global(np.asarray(state["level"])))
+
+
+def test_hybrid_backend_requires_source():
+    g = G.rmat(8, 4, seed=7)
+    pg = PT.partition(g, 2, PT.RAND)
+    pg = dataclasses.replace(pg, source=None)
+    with pytest.raises(ValueError, match="source"):
+        BSPEngine(pg, backend="hybrid", **INTERP)
+
+
+def test_unknown_backend_rejected():
+    g = G.rmat(8, 4, seed=7)
+    pg = PT.partition(g, 2, PT.RAND)
+    with pytest.raises(ValueError, match="backend"):
+        BSPEngine(pg, backend="mxu-only", **INTERP)
+
+
+def test_weighted_graph_does_not_leak_into_unweighted_programs():
+    """PageRank on a weighted graph must ignore the weights (the reference
+    engine's sum counts edges; the plus_times split must count, not sum w)."""
+    g = G.rmat(SCALE, 4, seed=13)
+    gw = g.with_uniform_weights(seed=3)
+    pg = PT.partition(gw, PARTS, PT.RAND)
+    pr = pagerank(BSPEngine(pg, **INTERP), num_iterations=5)
+    ph = pagerank(BSPEngine(pg, backend="hybrid", **INTERP), num_iterations=5)
+    np.testing.assert_allclose(pr, ph, rtol=1e-5, atol=1e-8)
