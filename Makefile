@@ -7,7 +7,7 @@ BASELINE := BENCH_superstep.prev.json
 # real TPU runs: make bench-check BENCH_THRESHOLD=0.20).
 BENCH_THRESHOLD ?= 0.75
 
-.PHONY: test lint bench bench-quick bench-gate bench-check ci
+.PHONY: test lint bench bench-quick bench-dist bench-gate bench-check ci
 
 test:            ## tier-1 suite
 	$(PY) -m pytest -x -q
@@ -24,6 +24,10 @@ bench:           ## reference-vs-fused superstep timings -> BENCH_superstep.json
 
 bench-quick:     ## smallest scale only (the CI bench job)
 	$(PY) benchmarks/superstep_bench.py --quick
+
+bench-dist:      ## multi-device column (8 forced host devices, quick scale)
+	$(PY) benchmarks/superstep_bench.py --quick --distributed --devices 8 \
+	  --out BENCH_superstep_dist.json
 
 bench-gate:      ## diff BENCH_superstep.json vs the baseline (seeds if absent)
 	$(PY) scripts/bench_check.py BENCH_superstep.json \

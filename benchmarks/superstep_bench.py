@@ -17,13 +17,23 @@ same script times the compiled kernels.
 
 Usage (from the repo root):
   python benchmarks/superstep_bench.py [--scales 10 11] [--parts 4]
-      [--quick] [--hybrid] [--seed 1] [--out BENCH_superstep.json]
+      [--quick] [--hybrid] [--distributed] [--devices 8] [--seed 1]
+      [--out BENCH_superstep.json]
 
 ``--quick`` keeps only the smallest scale (the CI bench job's ~5-minute
 budget); ``--hybrid`` also times the degree-split two-engine backend per
 cell; ``--seed`` pins the RMAT topology so cells are comparable across runs.
+``--distributed`` adds a multi-device column: the bench re-executes itself
+in a subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+when the runtime has fewer than ``--devices`` devices, then times one
+superstep of the sharded fused engine against the sharded *hybrid* engine
+(per-shard degree split + aggregated-outbox exchange) and records the
+per-superstep exchanged bytes: the full ``[pl, P, o_max]`` tensor the
+fused/reference exchange ships vs the compact used-slot blocks of the
+hybrid exchange, next to the β·|E|·4 aggregation bound (paper §3.4).
 ``scripts/bench_check.py`` diffs the JSON against a baseline and fails on
->20% fused-superstep regression.
+>20% fused-superstep regression — and deterministically on any >20% growth
+in exchanged bytes or fused temp bytes.
 """
 from __future__ import annotations
 
@@ -74,18 +84,21 @@ def _superstep_fn(eng: BSPEngine, program):
     return jax.jit(lambda s, i: step_fn(s, i))
 
 
+def _program_and_state(pg, parts: int, alg: str):
+    """The benchmarked program + initial state, shared by the single-device
+    and distributed cells so their timings stay comparable."""
+    if alg == "pagerank":
+        return make_pagerank_program(pg.num_vertices), initial_state(pg)
+    level0 = np.full((parts, pg.v_max), np.inf, dtype=np.float32)
+    level0[0, 0] = 0.0
+    return BFS_PROGRAM, {"level": jnp.asarray(level0)}
+
+
 def bench_cell(pg, scale: int, parts: int, strategy: str, alg: str,
                block_e: int, hybrid: bool = False) -> dict:
     ref_eng = BSPEngine(pg)
     fus_eng = BSPEngine(pg, fused=True, block_e=block_e)
-    if alg == "pagerank":
-        program = make_pagerank_program(pg.num_vertices)
-        state = initial_state(pg)
-    else:
-        program = BFS_PROGRAM
-        level0 = np.full((parts, pg.v_max), np.inf, dtype=np.float32)
-        level0[0, 0] = 0.0
-        state = {"level": jnp.asarray(level0)}
+    program, state = _program_and_state(pg, parts, alg)
 
     blk = fus_eng._fwd_blk
     e_sizes = (pg.fwd.e_max, blk.e_pad)
@@ -126,6 +139,57 @@ def bench_cell(pg, scale: int, parts: int, strategy: str, alg: str,
     return rec
 
 
+def bench_distributed_cell(pg, scale: int, parts: int, strategy: str,
+                           alg: str, n_dev: int) -> dict:
+    """One multi-device cell: sharded fused vs sharded hybrid superstep,
+    plus the per-superstep wire accounting (paper §3.4 aggregation-β)."""
+    from repro.core.bsp import DistributedBSPEngine
+
+    mesh = jax.make_mesh((n_dev,), ("parts",))
+    fus = DistributedBSPEngine(pg, mesh, fused=True)
+    hyb = DistributedBSPEngine(pg, mesh, backend="hybrid")
+    program, state = _program_and_state(pg, parts, alg)
+
+    shd, _ = hyb._hybrid_dist_for(program)
+    # Independent wire accounting straight from the partition outbox maps
+    # (not the engine's own counters): cross-device used slots × 4B.
+    pl = parts // n_dev
+    om = pg.fwd.outbox_mask
+    cross_slots = int(om.sum() - sum(
+        int(om[s * pl:(s + 1) * pl, s * pl:(s + 1) * pl].sum())
+        for s in range(n_dev)))
+    plan = hyb.hybrid_plan()
+    e4 = pg.num_edges * 4.0
+    rec = dict(
+        scale=scale, parts=parts, strategy=strategy, algorithm=alg,
+        combine=program.combine, mode="distributed", devices=n_dev,
+        block_e=None, v_max=pg.v_max, o_max=pg.fwd.o_max,
+        beta=pg.beta_with_reduction,
+        # wire traffic per superstep, totalled over shards:
+        # fused/reference exchange ships the full [pl, P, o_max] tensor;
+        # the hybrid exchange ships only the used cross-device slot blocks
+        # (exchanged_bytes = aggregated payload, outbox slots × 4B;
+        # exchange_buffer_bytes = the shard-uniform padded SPMD buffer).
+        full_exchange_bytes=int(parts * parts * pg.fwd.o_max * 4),
+        exchanged_bytes=int(shd.wire_slots_used * 4),
+        cross_slots_bytes=int(cross_slots * 4),
+        exchange_buffer_bytes=int(n_dev * shd.wire_values_per_superstep()
+                                  * 4),
+        beta_slots_bytes=pg.beta_with_reduction * e4,
+        beta_edges_bytes=pg.beta_no_reduction * e4,
+        hybrid_k_per_shard=[r["k_dense"] for r in plan["per_shard"]],
+        predicted_makespan=plan["makespan"],
+        predicted_t_comm=max(r["t_comm"] for r in plan["per_shard"]),
+    )
+    step0 = jnp.int32(0)
+    for name, eng in (("dist_fused", fus), ("dist_hybrid", hyb)):
+        fn = eng.superstep(program)
+        rec[f"{name}_ms"] = timeit(fn, state, step0, warmup=1, iters=5) * 1e3
+    rec["dist_speedup"] = rec["dist_fused_ms"] / max(rec["dist_hybrid_ms"],
+                                                     1e-12)
+    return rec
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scales", type=int, nargs="+", default=[10, 11])
@@ -142,22 +206,99 @@ def main(argv=None) -> int:
                     help="smallest scale only (keeps the CI job under ~5min)")
     ap.add_argument("--hybrid", action="store_true",
                     help="also time the hybrid degree-split backend")
+    ap.add_argument("--distributed", action="store_true",
+                    help="add multi-device cells (sharded fused vs sharded "
+                         "hybrid + exchanged-bytes accounting)")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="forced host device count for --distributed")
     ap.add_argument("--seed", type=int, default=1,
                     help="RMAT topology seed (pinned for reproducible cells)")
     args = ap.parse_args(argv)
     if args.quick:
         args.scales = [min(args.scales)]
 
+    if args.distributed and len(jax.devices()) < args.devices:
+        # Re-exec with the forced host device count (it must be set before
+        # the jax runtime initializes, so a fresh subprocess is the only
+        # reliable way from an already-imported process).  The sentinel env
+        # var prevents unbounded recursion when the flag cannot take effect
+        # (e.g. a GPU/TPU backend ignores forced *host* devices).
+        import os
+        import subprocess
+        if os.environ.get("_SUPERSTEP_BENCH_REEXEC"):
+            print(f"--distributed needs >= {args.devices} devices but the "
+                  f"re-exec still sees {len(jax.devices())} "
+                  f"({jax.default_backend()} backend); forced host devices "
+                  f"only apply to CPU — run with fewer --devices or on CPU",
+                  file=sys.stderr)
+            return 2
+        env = dict(
+            os.environ,
+            _SUPERSTEP_BENCH_REEXEC="1",
+            XLA_FLAGS=(os.environ.get("XLA_FLAGS", "") +
+                       f" --xla_force_host_platform_device_count="
+                       f"{args.devices}").strip())
+        r = subprocess.run([sys.executable, __file__]
+                           + list(argv if argv is not None else sys.argv[1:]),
+                           env=env)
+        return r.returncode
+
     results = []
     failures = []
     for scale in args.scales:
         g = G.rmat(scale, args.edge_factor, seed=args.seed)
+        # distributed cells need num_parts % devices == 0
+        parts_dist = (args.parts if args.parts % args.devices == 0
+                      else args.devices)
         for strategy in PT.STRATEGIES:
             pg = PT.partition(g, args.parts, strategy)
+            pg_dist = None
+            if args.distributed:
+                pg_dist = (pg if parts_dist == args.parts
+                           else PT.partition(g, parts_dist, strategy))
             for alg in ("pagerank", "bfs"):
                 rec = bench_cell(pg, scale, args.parts, strategy, alg,
                                  args.block_e, hybrid=args.hybrid)
                 results.append(rec)
+                if args.distributed:
+                    drec = bench_distributed_cell(pg_dist, scale, parts_dist,
+                                                  strategy, alg, args.devices)
+                    results.append(drec)
+                    print(f"scale={scale} {strategy:>4} {alg:>8} "
+                          f"[{args.devices}dev]: "
+                          f"fused={drec['dist_fused_ms']:.2f}ms "
+                          f"hybrid={drec['dist_hybrid_ms']:.2f}ms "
+                          f"wire={drec['exchanged_bytes']}B "
+                          f"(buf={drec['exchange_buffer_bytes']}B, "
+                          f"full={drec['full_exchange_bytes']}B, "
+                          f"β·E·4={drec['beta_slots_bytes']:.0f}B) "
+                          f"k={drec['hybrid_k_per_shard']}", flush=True)
+                    # §3.4 claim: the aggregated exchange payload must stay
+                    # within β_with_reduction·|E|·4 — wire traffic scales
+                    # with unique boundary pairs, not per-edge messages.
+                    # The falsifiable half: the engine's own slot counter
+                    # must match the cross-device slot count derived
+                    # independently from the partition outbox maps — an
+                    # engine regression that shipped per-edge values (or
+                    # dropped slots) breaks the equality.
+                    if drec["exchanged_bytes"] != drec["cross_slots_bytes"]:
+                        failures.append(
+                            f"exchange payload ({drec['exchanged_bytes']}B) "
+                            f"!= cross-device outbox slots × 4B "
+                            f"({drec['cross_slots_bytes']}B) in "
+                            f"{strategy}/{alg} — source-side aggregation "
+                            f"is no longer slot-exact")
+                    if drec["exchanged_bytes"] > drec["beta_slots_bytes"]:
+                        failures.append(
+                            f"exchange payload ({drec['exchanged_bytes']}B) "
+                            f"exceeds the aggregation bound "
+                            f"(beta_wr*E*4={drec['beta_slots_bytes']:.0f}B) "
+                            f"in {strategy}/{alg}")
+                    if (drec["exchange_buffer_bytes"]
+                            >= drec["full_exchange_bytes"]):
+                        failures.append(
+                            f"compact exchange buffer not smaller than the "
+                            f"full outbox tensor in {strategy}/{alg}: {drec}")
                 print(f"scale={scale} {strategy:>4} {alg:>8}: "
                       f"ref={rec['ref_ms']:.2f}ms fused={rec['fused_ms']:.2f}ms "
                       f"({rec['speedup']:.2f}x) span={rec['span']} "
@@ -177,7 +318,9 @@ def main(argv=None) -> int:
     out = dict(backend=jax.default_backend(),
                interpret=jax.default_backend() != "tpu",
                block_e=args.block_e, parts=args.parts,
-               edge_factor=args.edge_factor, seed=args.seed, results=results)
+               edge_factor=args.edge_factor, seed=args.seed,
+               devices=(args.devices if args.distributed else 1),
+               results=results)
     Path(args.out).write_text(json.dumps(out, indent=2) + "\n")
     print(f"wrote {args.out} ({len(results)} cells)")
     if failures and not args.no_assert:

@@ -2,7 +2,11 @@
 
 Diffs a fresh ``BENCH_superstep.json`` (benchmarks/superstep_bench.py)
 against a baseline run and fails when any matching cell's fused superstep
-time regressed by more than ``--threshold`` (default 20%).  The make/CI
+time regressed by more than ``--threshold`` (default 20%), or when any
+*deterministic byte* metric (``--byte-fields``: per-superstep exchanged
+bytes, fused temp bytes) grew by more than ``--byte-threshold`` (20%) —
+byte counts don't suffer interpret-mode timing noise, so their gate stays
+tight even when the timing threshold is widened for CI.  The make/CI
 entry point:
 
   python benchmarks/superstep_bench.py --quick --out BENCH_superstep.json
@@ -27,8 +31,10 @@ from pathlib import Path
 
 
 def _key(rec: dict):
+    # None-valued fields become sort-safe sentinels (distributed cells have
+    # no block_e; legacy baselines have no mode).
     return (rec["scale"], rec["parts"], rec["strategy"], rec["algorithm"],
-            rec.get("block_e"))
+            rec.get("block_e") or 0, rec.get("mode") or "")
 
 
 def load(path: str) -> dict:
@@ -53,6 +59,12 @@ def main(argv=None) -> int:
                     help="max allowed fractional regression")
     ap.add_argument("--field", default="fused_ms",
                     help="which per-cell timing to gate on")
+    ap.add_argument("--byte-fields", nargs="*",
+                    default=["exchanged_bytes", "fused_temp_bytes"],
+                    help="deterministic byte metrics gated at "
+                         "--byte-threshold regardless of timing noise")
+    ap.add_argument("--byte-threshold", type=float, default=0.20,
+                    help="max allowed fractional growth in --byte-fields")
     args = ap.parse_args(argv)
 
     if not Path(args.baseline).exists():
@@ -73,27 +85,44 @@ def main(argv=None) -> int:
     regressions, checked = [], 0
     for key, rec in sorted(cur.items()):
         base = prev.get(key)
-        if base is None or args.field not in base or args.field not in rec:
+        if base is None:
             print(f"  new/unmatched cell (not gated): {key}")
             continue
-        checked += 1
-        ratio = rec[args.field] / max(base[args.field], 1e-12)
-        status = "OK"
-        if ratio > 1.0 + args.threshold:
-            status = "REGRESSION"
-            regressions.append((key, ratio))
-        print(f"  {key}: {args.field} {base[args.field]:.2f} -> "
-              f"{rec[args.field]:.2f} ms ({ratio:.2f}x) {status}")
+        if args.field in base and args.field in rec:
+            checked += 1
+            ratio = rec[args.field] / max(base[args.field], 1e-12)
+            status = "OK"
+            if ratio > 1.0 + args.threshold:
+                status = "REGRESSION"
+                regressions.append((key, args.field, ratio))
+            print(f"  {key}: {args.field} {base[args.field]:.2f} -> "
+                  f"{rec[args.field]:.2f} ms ({ratio:.2f}x) {status}")
+        # Deterministic byte metrics: gate growth tightly (no timing noise).
+        for field in args.byte_fields:
+            if base.get(field) is None or rec.get(field) is None:
+                continue
+            checked += 1
+            ratio = rec[field] / max(base[field], 1e-12)
+            status = "OK"
+            if ratio > 1.0 + args.byte_threshold:
+                status = "REGRESSION"
+                regressions.append((key, field, ratio))
+            print(f"  {key}: {field} {base[field]} -> {rec[field]} B "
+                  f"({ratio:.2f}x) {status}")
 
     dropped = set(prev) - set(cur)
     for key in sorted(dropped):
         print(f"  cell disappeared (not gated): {key}")
 
     if regressions:
-        print(f"bench_check: {len(regressions)}/{checked} cells regressed "
-              f">{args.threshold:.0%} on {args.field}", file=sys.stderr)
+        for key, field, ratio in regressions:
+            print(f"bench_check: {key} regressed {ratio:.2f}x on {field}",
+                  file=sys.stderr)
+        print(f"bench_check: {len(regressions)}/{checked} gated metrics "
+              f"regressed", file=sys.stderr)
         return 1
-    print(f"bench_check: {checked} cells within {args.threshold:.0%}")
+    print(f"bench_check: {checked} gated metrics within thresholds "
+          f"(timing {args.threshold:.0%}, bytes {args.byte_threshold:.0%})")
     return 0
 
 

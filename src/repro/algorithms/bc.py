@@ -93,7 +93,10 @@ def _bwd_edge_msg(vals, weight, step, consts):
 
 # Both cycles are weightless sum combines → the hybrid backend runs them
 # under plus_times; the backward cycle degree-splits the *reverse* graph
-# (built by the engine itself, so hybrid BC doesn't need include_reverse).
+# (built by the single-device engine itself, so hybrid BC doesn't need
+# include_reverse there; the *distributed* hybrid routes reverse boundary
+# edges through the reverse outbox maps, so it does — see
+# BSPEngine.provides_reverse).
 BACKWARD_PROGRAM = VertexProgram(combine=SUM, edge_fn=_bwd_edge,
                                  apply_fn=_bwd_apply, use_reverse=True,
                                  edge_msg=EdgeMessage(
@@ -106,7 +109,7 @@ def betweenness_centrality(engine: BSPEngine,
                            source: int) -> Tuple[np.ndarray, int]:
     """Single-source BC contribution; returns (bc [n], total supersteps)."""
     pg = engine.pg
-    if pg.rev is None and not engine._uses_hybrid(BACKWARD_PROGRAM):
+    if pg.rev is None and not engine.provides_reverse(BACKWARD_PROGRAM):
         raise ValueError("BC needs reverse edges "
                          "(partition with include_reverse=True)")
     P, V = pg.num_parts, pg.v_max

@@ -49,6 +49,9 @@ def _apply_fn(state, acc, step):
 # semiring (the message already carries level+1), with the frontier-density
 # push/pull direction switch as the traversal showcase: sparse frontiers take
 # the push segment-min, dense frontiers the frontier-oblivious SpMV pull.
+# Under the distributed hybrid, boundary levels min-reduce into outbox slots
+# at the source, so frontier-sparse supersteps ship aggregated slots (not
+# per-edge messages) over the mesh axis.
 BFS_PROGRAM = VertexProgram(combine=MIN, edge_fn=_edge_fn,
                             apply_fn=_apply_fn,
                             edge_msg=EdgeMessage(gather=("level",),

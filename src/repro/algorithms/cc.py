@@ -48,7 +48,9 @@ def _edge_msg_fn(vals, weight, step, consts):
 
 
 # Weightless min combine → the hybrid backend runs label propagation under
-# the pure-min semiring (no per-edge add at all on the ELL path).
+# the pure-min semiring (no per-edge add at all on the ELL path); the
+# distributed hybrid min-reduces boundary labels into outbox slots at the
+# source before the exchange (§3.4 aggregation is exact for min).
 CC_PROGRAM = VertexProgram(combine=MIN, edge_fn=_edge_fn,
                            apply_fn=_apply_fn,
                            edge_msg=EdgeMessage(gather=("label", "active"),

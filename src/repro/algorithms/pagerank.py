@@ -44,7 +44,9 @@ def make_pagerank_program(num_vertices: int, damping: float = DAMPING,
         return dict(state, rank=rank), jnp.bool_(True)
 
     # Weightless sum combine → the hybrid backend runs PR under plus_times:
-    # the dense block's multi-edge counts ride in the adjacency values.
+    # the dense block's multi-edge counts ride in the adjacency values.  The
+    # distributed hybrid sum-reduces boundary contributions into outbox
+    # slots at the source — the paper's §3.4 "rank sum is reducible" case.
     return VertexProgram(combine=SUM, edge_fn=_edge_fn, apply_fn=apply_fn,
                          max_steps=max_steps,
                          edge_msg=EdgeMessage(gather=("rank", "inv_deg"),

@@ -46,7 +46,9 @@ def _edge_msg_fn(vals, weight, step, consts):
 
 # weight_op="add" declares msg = f(src) + w — the min_plus semiring — which
 # makes SSSP eligible for the hybrid degree-split backend (relaxation as a
-# tropical SpMV over the dense block + ELL remainder).
+# tropical SpMV over the dense block + ELL remainder) and for the
+# distributed hybrid's source-side outbox aggregation: boundary relaxations
+# apply the same ⊗ inside kernels/outbox_reduce before crossing the wire.
 SSSP_PROGRAM = VertexProgram(combine=MIN, edge_fn=_edge_fn,
                              apply_fn=_apply_fn,
                              edge_msg=EdgeMessage(

@@ -206,6 +206,107 @@ def _superstep_hybrid(program: VertexProgram, hd: _HybridData,
     return new_state, all_finished(finished)
 
 
+def _superstep_hybrid_dist(program: VertexProgram, shd, arrs: dict,
+                           axis: str, interpret: Optional[bool],
+                           pull_threshold: float,
+                           all_finished: Callable[[Array], Array],
+                           state: State, step: Array) -> Tuple[State, Array]:
+    """One BSP superstep of the *distributed* degree-split backend.
+
+    Runs inside ``shard_map``: ``state`` leaves are the local ``[pl, v_max]``
+    shard, ``arrs`` the shard's slice of :class:`hybrid.ShardHybridData`
+    (leading mesh axis of extent 1).  The paper's cycle, per shard:
+
+      1. evaluate the EdgeMessage once per local vertex (⊗-identity weight),
+         then run the two-engine semiring SpMV over the shard's
+         *intra-partition* edges (dense H×H MXU block + ELL remainder, with
+         the push/pull frontier switch for min combines);
+      2. reduce boundary messages into the ``o_max`` outbox slots at the
+         source (``ops.outbox_reduce_op`` — the §3.4 aggregation, so the
+         wire carries β_with_reduction·|E| values, never per-edge messages);
+      3. exchange only the *used* (shard, peer) slot blocks via a compact
+         ``all_to_all`` (Fig. 6's outbox→inbox copy over ICI); same-device
+         peer slots short-circuit through a local gather/scatter;
+      4. scatter inbox values into the local accumulator, combine with the
+         SpMV result, apply + vote (global AND via psum).
+    """
+    from repro.core.hybrid import add_identity, hybrid_spmv
+    from repro.kernels.ops import outbox_reduce_op
+
+    spec = program.edge_msg
+    ident = add_identity(shd.semiring)
+    pl = shd.parts_per_shard
+    v_max = shd.v_max
+    slot = arrs["slot"][0]
+    vals = {k: state[k].astype(jnp.float32).reshape(-1)[slot]
+            for k in spec.gather}
+    consts = {c: state[c][0].astype(jnp.float32) for c in spec.consts}
+    w_ident = None
+    if spec.use_weight:
+        w_ident = jnp.float32(0.0 if spec.weight_op == "add" else 1.0)
+    x = spec.fn(vals, w_ident, step.astype(jnp.float32),
+                consts).astype(jnp.float32)
+    n_vert = arrs["n_vert"][0]
+    vmask = jnp.arange(shd.n_max, dtype=jnp.int32) < n_vert
+    x = jnp.where(vmask, x, ident)   # pad hybrid ids never contribute
+
+    def pull(xv):
+        return hybrid_spmv(arrs["dense"][0], arrs["ell_col"][0],
+                           arrs["ell_val"][0], xv, semiring=shd.semiring,
+                           k_dense=shd.k_dense, interpret=interpret)
+
+    if "push_src" in arrs:
+        def push(xv):
+            x_ext = jnp.concatenate([xv, jnp.full((1,), ident, xv.dtype)])
+            msgs = x_ext[arrs["push_src"][0]]
+            if "push_w" in arrs:
+                msgs = msgs + arrs["push_w"][0]
+            y = jax.ops.segment_min(msgs, arrs["push_dst"][0],
+                                    num_segments=shd.n_max + 1)
+            return y[: shd.n_max]
+
+        density = (jnp.sum((x != ident).astype(jnp.float32))
+                   / jnp.maximum(n_vert.astype(jnp.float32), 1.0))
+        y = jax.lax.cond(density < pull_threshold, push, pull, x)
+    else:
+        y = pull(x)
+
+    seg_op = _SEGMENT_OP[program.combine]
+    seg = shd.scatter_segments
+    racc = None
+    if shd.has_boundary:
+        x_ext = jnp.concatenate([x, jnp.full((1,), ident, x.dtype)])
+        outbox = outbox_reduce_op(
+            x_ext, arrs["b_src"][0], arrs["b_local"][0], arrs["b_mask"][0],
+            arrs["b_base"][0], arrs.get("b_weight", [None])[0],
+            num_slots=shd.num_slots, combine=program.combine,
+            weight_op=spec.weight_op if spec.use_weight else None,
+            span=shd.b_span, block_e=shd.b_block, interpret=interpret)
+        obox_ext = jnp.concatenate(
+            [outbox, jnp.full((1,), ident, outbox.dtype)])
+        rvals, rids = [], []
+        if shd.has_remote:
+            send = obox_ext[arrs["send_idx"][0]]          # [S, w]
+            recv = jax.lax.all_to_all(send, axis, split_axis=0,
+                                      concat_axis=0, tiled=True)
+            rvals.append(recv.reshape(-1))
+            rids.append(arrs["recv_ids"][0].reshape(-1))
+        if shd.has_local_slots:
+            rvals.append(obox_ext[arrs["loc_idx"][0]])
+            rids.append(arrs["loc_ids"][0])
+        if rvals:
+            racc = seg_op(jnp.concatenate(rvals), jnp.concatenate(rids),
+                          num_segments=seg + 1)
+            racc = racc[:seg].reshape(pl, v_max + 1)[:, :v_max]
+
+    y_ext = jnp.concatenate([y, jnp.full((1,), ident, y.dtype)])
+    acc = y_ext[arrs["hid"][0]]                            # [pl, v_max]
+    if racc is not None:
+        acc = _COMBINE[program.combine](acc, racc)
+    new_state, finished = program.apply_fn(state, acc, step)
+    return new_state, all_finished(finished)
+
+
 def _compute_reference(dims: _Dims, program: VertexProgram, edges: dict,
                        state: State, step: Array) -> Array:
     """Reference compute: gather → [Pl, e_max] messages → scatter-reduce."""
@@ -431,13 +532,24 @@ class BSPEngine:
         return (self.backend == HYBRID
                 and self._hybrid_semiring(program) is not None)
 
+    def provides_reverse(self, program: VertexProgram) -> bool:
+        """True when the engine serves a ``use_reverse`` program without
+        ``pg.rev`` (the single-device hybrid degree-splits its own reverse
+        graph; the distributed hybrid cannot — boundary edges route through
+        the reverse outbox maps, which only ``include_reverse=True``
+        partitioning builds)."""
+        return self._uses_hybrid(program)
+
     def _hybrid_for(self, program: VertexProgram) -> _HybridData:
         """Build (and cache) one direction's degree-split device data."""
         from repro.core.graph import CSRGraph
         from repro.core.hybrid import degree_split
 
         semiring = self._hybrid_semiring(program)
-        key = (semiring, program.use_reverse)
+        # use_weight in the key: a weighted and a weightless program can map
+        # to the same semiring (plus_times) but need different ⊗ values
+        # (edge weights vs multiplicity counts).
+        key = (semiring, program.use_reverse, program.edge_msg.use_weight)
         if key in self._hybrid_cache:
             return self._hybrid_cache[key]
 
@@ -556,49 +668,179 @@ class DistributedBSPEngine(BSPEngine):
     One (or more) partition(s) per device; the exchange phase becomes an
     ``all_to_all`` over the mesh axis — the ICI analogue of the paper's PCI-E
     outbox/inbox copy.  The termination vote is a global AND (psum).
+
+    ``backend="hybrid"`` runs the paper's actual headline configuration:
+    every shard executes its own degree-split two-engine step over its
+    intra-partition edges while boundary messages are aggregated into outbox
+    slots at the source and exchanged through a *compact* ``all_to_all``
+    that ships only the used (shard, peer) slot blocks.  The per-shard
+    split sizes come from the comm-inclusive performance model
+    (``perf_model.plan_shards``, Eq. 1–2); ``hybrid_plan()`` reports them.
+    Unlike the single-device hybrid, ``use_reverse`` programs (BC) need
+    ``include_reverse=True`` partitioning — the reverse boundary edges
+    route through the reverse outbox maps.
     """
 
     def __init__(self, pg: PartitionedGraph, mesh: Mesh, axis: str = "parts",
                  **kwargs):
-        super().__init__(pg, **kwargs)
-        if self.backend == HYBRID:
-            raise NotImplementedError(
-                "the hybrid degree-split backend is single-device (on-chip "
-                "two-engine step); shard with backend='fused' instead")
         if pg.num_parts % mesh.shape[axis]:
             raise ValueError("num_parts must divide mesh axis size")
         self.mesh = mesh
         self.axis = axis
+        self._hybrid_dist_cache: dict = {}
+        super().__init__(pg, **kwargs)
+
+    # ------------------- distributed hybrid plumbing -----------------------
+
+    def provides_reverse(self, program: VertexProgram) -> bool:
+        # The distributed hybrid routes reverse boundary edges through the
+        # reverse outbox maps, so pg.rev is required even for the hybrid.
+        return False
+
+    def _plan_hybrid(self, k_dense: Optional[int], block_e: int) -> dict:
+        """Per-shard split decision: each shard's |H| is the argmin of its
+        own comm-inclusive predicted makespan (Eq. 1 with the §3.4 reduced
+        boundary term); the system prediction is the max over shards
+        (Eq. 2)."""
+        from repro.core import perf_model
+        from repro.core.hybrid import _shard_intra, shard_plan_inputs
+
+        num_shards = self.mesh.shape[self.axis]
+        # Forward-direction shard layouts are shared with the split builder
+        # (_hybrid_dist_for) — the O(|E| + V log V) ranking runs once.
+        self._shard_layouts = _shard_intra(self.pg, num_shards,
+                                           self.pg.source)
+        ranks, edges, slots, nverts = shard_plan_inputs(
+            self.pg, num_shards, layouts=self._shard_layouts)
+        blk = self._fwd_blk or build_block_metadata(self.pg.fwd,
+                                                    block_e=block_e)
+        skew = blk.degree_skew()
+        candidates = [perf_model.k_dense_candidates(n, skewed=skew > 0.0)
+                      for n in nverts]
+        plan = perf_model.plan_shards(ranks, edges, slots, candidates,
+                                      k_dense=k_dense)
+        for rec, n in zip(plan["per_shard"], nverts):
+            rec["mode"] = perf_model.split_mode(rec["k_dense"], n,
+                                                rec["e_sparse"])
+        plan.update(skew=skew, num_shards=num_shards, candidates=candidates)
+        return plan
+
+    def _hybrid_dist_for(self, program: VertexProgram):
+        """Build (and cache) one direction's per-shard split: the static
+        :class:`hybrid.ShardHybridData` plus its device arrays, sharded over
+        the mesh axis."""
+        from repro.core.hybrid import shard_degree_split
+
+        semiring = self._hybrid_semiring(program)
+        # use_weight in the key for the same reason as _hybrid_for: one
+        # semiring can serve weighted and weightless programs, whose splits
+        # pack different ⊗ values.
+        key = (semiring, program.use_reverse, program.edge_msg.use_weight)
+        if key in self._hybrid_dist_cache:
+            return self._hybrid_dist_cache[key]
+
+        shd = shard_degree_split(
+            self.pg, self.mesh.shape[self.axis], semiring,
+            [rec["k_dense"] for rec in self._hybrid_plan["per_shard"]],
+            use_reverse=program.use_reverse,
+            use_weights=program.edge_msg.use_weight,
+            direction_switch=(program.combine == MIN
+                              and self._direction_switch),
+            layouts=self._shard_layouts)
+        arrs = dict(n_vert=shd.n_vert, dense=shd.dense, ell_col=shd.ell_col,
+                    ell_val=shd.ell_val, slot=shd.slot, hid=shd.hid,
+                    b_src=shd.b_src, b_local=shd.b_local, b_base=shd.b_base,
+                    b_mask=shd.b_mask, send_idx=shd.send_idx,
+                    recv_ids=shd.recv_ids, loc_idx=shd.loc_idx,
+                    loc_ids=shd.loc_ids)
+        if shd.b_weight is not None:
+            arrs["b_weight"] = shd.b_weight
+        if shd.push_src is not None:
+            arrs["push_src"] = shd.push_src
+            arrs["push_dst"] = shd.push_dst
+            if shd.push_w is not None:
+                arrs["push_w"] = shd.push_w
+        sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
+        arrs = {k: jax.device_put(jnp.asarray(v), sharding)
+                for k, v in arrs.items()}
+        self._hybrid_dist_cache[key] = (shd, arrs)
+        return shd, arrs
+
+    def _hybrid_step_fn(self, program: VertexProgram, shd, arrs) -> Callable:
+        return functools.partial(_superstep_hybrid_dist, program, shd, arrs,
+                                 self.axis, self.interpret,
+                                 self._pull_threshold, self._dist_finished)
+
+    # ----------------------------- exchange --------------------------------
 
     def _dist_exchange(self, outbox: Array) -> Array:
         # outbox: [pl, P, o_max] -> split peer axis across devices, concat the
         # received blocks on the local-partition axis, then restore layout.
-        pl = outbox.shape[0]
+        pl, peers, o = outbox.shape
         n_dev = self.mesh.shape[self.axis]
+        if peers != n_dev * pl:
+            raise ValueError(
+                f"outbox shape {tuple(outbox.shape)} is inconsistent with "
+                f"the mesh: peer axis ({peers}) must equal mesh axis size "
+                f"({n_dev}) × local partitions ({pl}).  Every device must "
+                f"host the same number of partitions — repartition so "
+                f"num_parts == {n_dev} × pl")
         # regroup peer axis as (device, local_partition)
-        ob = outbox.reshape(pl, n_dev, pl, outbox.shape[-1])
+        ob = outbox.reshape(pl, n_dev, pl, o)
         recv = jax.lax.all_to_all(ob, self.axis, split_axis=1, concat_axis=0,
                                   tiled=False)
         # recv: [n_dev, pl, pl, o] with recv[q, my_p?]  — reorder to
         # inbox[pl_local, P_global, o]
         recv = recv.transpose(2, 0, 1, 3)  # [pl_dst, n_dev, pl_src, o]
-        return recv.reshape(pl, n_dev * pl, outbox.shape[-1])
+        return recv.reshape(pl, n_dev * pl, o)
 
     def _dist_finished(self, fin: Array) -> Array:
         not_done = jnp.sum(jnp.logical_not(fin).astype(jnp.int32))
         return jax.lax.psum(not_done, self.axis) == 0
 
-    def run(self, program: VertexProgram, state: State) -> Tuple[State, Array]:
+    def _validate_state(self, state: State) -> None:
+        """Fail fast on mis-sharded inputs: every [num_parts, ...] leaf must
+        split evenly over the mesh axis (the exchange silently mis-routes
+        otherwise)."""
+        leaves = jax.tree_util.tree_leaves_with_path(state)
+        for path, leaf in leaves:
+            shape = getattr(leaf, "shape", ())
+            if len(shape) and shape[0] != self.pg.num_parts:
+                raise ValueError(
+                    f"state leaf {jax.tree_util.keystr(path)} has leading "
+                    f"axis {shape[0]}, expected num_parts="
+                    f"{self.pg.num_parts}: every device must host the same "
+                    f"number of partitions")
+
+    # ------------------------------- run -----------------------------------
+
+    def _dist_step_parts(self, program: VertexProgram):
+        """Shared run()/superstep() dispatch: the sharded extra operands
+        (hybrid shard arrays — already device_put — or edge arrays) and a
+        factory building the per-shard step function from them."""
+        if self._uses_hybrid(program):
+            shd, arrs = self._hybrid_dist_for(program)
+            return arrs, (lambda extra:
+                          self._hybrid_step_fn(program, shd, extra)), True
         edges = self.edges_for(program)
         dims = self.dims_for(edges)
+
+        def make(extra):
+            return functools.partial(_superstep, dims, program, extra,
+                                     self._dist_exchange,
+                                     self._dist_finished,
+                                     self.fused_cfg_for(program))
+
+        return edges, make, False
+
+    def run(self, program: VertexProgram, state: State) -> Tuple[State, Array]:
+        self._validate_state(state)
         spec = P(self.axis)
         sharding = jax.sharding.NamedSharding(self.mesh, spec)
+        extra, make_step, hybrid = self._dist_step_parts(program)
 
-        def local_fn(state, edges):
-            step_fn = functools.partial(_superstep, dims, program, edges,
-                                        self._dist_exchange,
-                                        self._dist_finished,
-                                        self.fused_cfg_for(program))
+        def local_fn(state, extra):
+            step_fn = make_step(extra)
 
             def body(carry):
                 st, step, _ = carry
@@ -616,9 +858,41 @@ class DistributedBSPEngine(BSPEngine):
         sharded = shard_map(
             local_fn, mesh=self.mesh,
             in_specs=(jax.tree.map(lambda _: spec, state),
-                      jax.tree.map(lambda _: spec, edges)),
+                      jax.tree.map(lambda _: spec, extra)),
             out_specs=(jax.tree.map(lambda _: spec, state), P()),
             check_vma=False)
         state = jax.device_put(state, sharding)
-        edges = jax.tree.map(lambda x: jax.device_put(x, sharding), edges)
-        return jax.jit(sharded)(state, edges)
+        if not hybrid:
+            extra = jax.tree.map(lambda x: jax.device_put(x, sharding), extra)
+        return jax.jit(sharded)(state, extra)
+
+    def superstep(self, program: VertexProgram) -> Callable:
+        """One jitted distributed superstep ``f(state, step) -> (state,
+        finished)`` — the benchmarking hook (state is device_put on entry)."""
+        spec = P(self.axis)
+        sharding = jax.sharding.NamedSharding(self.mesh, spec)
+        extra, make_step, hybrid = self._dist_step_parts(program)
+        if not hybrid:
+            extra = jax.tree.map(lambda x: jax.device_put(x, sharding),
+                                 extra)
+
+        def local_fn(state, extra, step):
+            return make_step(extra)(state, step)
+
+        jitted = {}
+
+        def fn(state, step):
+            self._validate_state(state)
+            key = jax.tree_util.tree_structure(state)
+            if key not in jitted:
+                sharded = shard_map(
+                    local_fn, mesh=self.mesh,
+                    in_specs=(jax.tree.map(lambda _: spec, state),
+                              jax.tree.map(lambda _: spec, extra), P()),
+                    out_specs=(jax.tree.map(lambda _: spec, state), P()),
+                    check_vma=False)
+                jitted[key] = jax.jit(sharded)
+            state = jax.device_put(state, sharding)
+            return jitted[key](state, extra, step)
+
+        return fn

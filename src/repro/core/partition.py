@@ -171,6 +171,24 @@ def assign_vertices(g: CSRGraph, num_parts: int, strategy: str = RAND,
     return VertexAssignment(num_parts, part_of, local_id, l2g)
 
 
+def boundary_edges(ea: EdgeArrays, p: int, v_max: int):
+    """One partition's boundary edges as (local src, flat outbox slot,
+    weight-or-None), in ``dst_ext`` order (so flat slot ids ascend).
+
+    The flat slot id is ``q * o_max + slot`` — the edge's position in the
+    partition's ``[P, o_max]`` outbox — recovered from the extended
+    destination index the edge arrays already carry (§4.3.1: the outbox
+    index is stored in the edge array).  The distributed hybrid engine
+    reduces boundary messages into exactly this segment space before the
+    exchange (§3.4 source-side aggregation).
+    """
+    em = ea.edge_mask[p] & (ea.dst_ext[p] > v_max)
+    src = ea.src[p][em]
+    flat = ea.dst_ext[p][em] - (v_max + 1)
+    w = ea.weight[p][em] if ea.weight is not None else None
+    return src, flat, w
+
+
 def _build_edge_arrays(g: CSRGraph, asg: VertexAssignment, v_max: int,
                        align: int) -> EdgeArrays:
     """Construct the edge-parallel arrays + outbox maps for one direction."""

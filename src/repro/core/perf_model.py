@@ -184,13 +184,21 @@ def k_dense_candidates(num_vertices: int, skewed: bool = True,
 
 def rank_k_dense(edge_max_rank: np.ndarray, num_edges: int, candidates,
                  num_chips: int = 1, bytes_per_edge: float = 8.0,
-                 msg_bytes: float = 4.0) -> list:
+                 msg_bytes: float = 4.0, boundary_slots: float = 0.0) -> list:
     """Predict the two-engine makespan for each candidate |H| (Eq. 2 recast).
 
     ``edge_max_rank[e] = max(rank(src_e), rank(dst_e))`` under the
     degree-descending vertex ranking, so ``e_dense(k)`` — edges inside the
     H×H block — is a single ``searchsorted``.  Returns one record per
     candidate with the makespan terms from :func:`hybrid_makespan_tpu`.
+
+    ``boundary_slots`` is the Eq. 1 communication term ``|E_p^b| / c``: the
+    number of aggregated outbox slots this partition ships over the
+    interconnect per superstep (β_with_reduction·|E_p|, paper §3.4 — the
+    source-side reduction already collapsed per-edge messages into slots).
+    It is independent of the split point, so it shifts every candidate's
+    makespan by the same ICI time — but across *shards* it differs, which is
+    what makes the sharded argmin (:func:`plan_shards`) strategy-sensitive.
     """
     ranks = np.sort(np.asarray(edge_max_rank))
     table = []
@@ -199,11 +207,13 @@ def rank_k_dense(edge_max_rank: np.ndarray, num_edges: int, candidates,
         e_sparse = int(num_edges) - e_dense
         density = e_dense / max(int(k) * int(k), 1)
         pred = hybrid_makespan_tpu(e_dense, density, e_sparse,
-                                   boundary_slots=0, num_chips=num_chips,
+                                   boundary_slots=boundary_slots,
+                                   num_chips=num_chips,
                                    bytes_per_edge=bytes_per_edge,
                                    msg_bytes=msg_bytes)
         table.append(dict(k_dense=int(k), e_dense=e_dense, e_sparse=e_sparse,
-                          density=density, **pred))
+                          density=density,
+                          boundary_slots=float(boundary_slots), **pred))
     return table
 
 
@@ -213,6 +223,54 @@ def choose_k_dense(edge_max_rank: np.ndarray, num_edges: int, candidates,
     table = rank_k_dense(edge_max_rank, num_edges, candidates, **kwargs)
     best = min(table, key=lambda rec: rec["makespan"])
     return best["k_dense"], table
+
+
+def plan_shards(shard_ranks, shard_edges, shard_slots, candidates,
+                k_dense: "int | None" = None, **kwargs) -> dict:
+    """Per-shard split decision for the distributed hybrid engine (Eq. 1–2).
+
+    Each shard ``p`` runs its own two-engine step over its intra-partition
+    edges and ships its aggregated outbox slots over the ICI, so its
+    predicted superstep time is ``t_p = |slots_p|/c + t_dense + t_sparse``
+    (Eq. 1 with the §3.4 reduced boundary term) and the system is bound by
+    ``max_p t_p`` (Eq. 2).  ``shard_ranks[p]`` / ``shard_edges[p]`` /
+    ``shard_slots[p]`` describe shard ``p``'s intra edges and cross-shard
+    outbox slots; each shard's ``k_dense`` is the argmin of *its own*
+    comm-inclusive makespan (pass ``k_dense=`` to force one size for all).
+
+    ``candidates`` is one ladder shared by every shard, or a per-shard
+    sequence of ladders (shards have different vertex counts, so their
+    VMEM-capped ladders differ).
+
+    Returns ``dict(per_shard=[{shard, k_dense, makespan, t_comm, ..,
+    table}], k_dense=max chosen |H| (the padded uniform block size the SPMD
+    step compiles for), makespan=max_p, bottleneck=argmax_p)``.
+    """
+    nested = (len(candidates) > 0
+              and isinstance(candidates[0], (list, tuple, np.ndarray)))
+    per_shard = []
+    for s, (ranks, edges, slots) in enumerate(
+            zip(shard_ranks, shard_edges, shard_slots)):
+        cands = list(candidates[s]) if nested else list(candidates)
+        cands = (sorted(set(cands) | {k_dense})
+                 if k_dense is not None else cands)
+        table = rank_k_dense(ranks, edges, cands,
+                             boundary_slots=slots, **kwargs)
+        if k_dense is None:
+            best = min(table, key=lambda rec: rec["makespan"])
+        else:
+            best = next(r for r in table if r["k_dense"] == k_dense)
+        per_shard.append(dict(shard=s, num_edges=int(edges),
+                              boundary_slots=float(slots), table=table,
+                              **{k: best[k] for k in
+                                 ("k_dense", "e_dense", "e_sparse", "density",
+                                  "t_dense", "t_sparse", "t_comm",
+                                  "makespan")}))
+    bottleneck = max(per_shard, key=lambda rec: rec["makespan"])
+    return dict(per_shard=per_shard,
+                k_dense=max((rec["k_dense"] for rec in per_shard), default=0),
+                makespan=bottleneck["makespan"],
+                bottleneck=bottleneck["shard"])
 
 
 def split_mode(k_dense: int, num_vertices: int, e_sparse: int) -> str:

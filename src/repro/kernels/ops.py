@@ -223,6 +223,72 @@ def segment_reduce_op(msgs: jax.Array, seg_ids: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# source-side outbox aggregation (distributed hybrid boundary leg, §3.4)
+# ---------------------------------------------------------------------------
+
+def outbox_reduce_op(x: jax.Array, src: jax.Array, local: jax.Array,
+                     mask: jax.Array, base: jax.Array, weight, *,
+                     num_slots: int, combine: str = "sum", weight_op=None,
+                     span: int, block_e: int = 256, max_span: int = 4096,
+                     gather_chunk: int = 256,
+                     interpret: bool | None = None) -> jax.Array:
+    """Reduce boundary messages into the flat outbox-slot space.
+
+    ``x`` is one shard's per-vertex message vector (+ identity sink at the
+    end); ``src``/``local``/``mask``/``base``/``weight`` follow
+    ``hybrid.shard_degree_split`` — boundary edges sorted by flat slot id
+    with per-block base/local offsets, arriving as *operands* so each shard
+    carries its own maps under ``shard_map``.  ``weight_op`` is the
+    EdgeMessage's ⊗ ("add"/"mul"/None).  Returns the [num_slots] aggregated
+    outbox (⊕-identity for unused slots).
+
+    Falls back to the plain gather → ``jax.ops.segment_*`` chain when the
+    static ``span`` bound exceeds ``max_span`` or the VMEM budget for the
+    kernel's [block_e, span] intermediates — correctness never depends on
+    the kernel (same contract as ``fused_superstep_op``).
+    """
+    from repro.kernels import outbox_reduce as _obox
+
+    if interpret is None:
+        interpret = _interpret_default()
+    ident = 0.0 if combine == "sum" else jnp.inf
+    seg_op = jax.ops.segment_sum if combine == "sum" else jax.ops.segment_min
+    e_pad = src.shape[0]
+    nb = e_pad // block_e
+
+    def apply_weight(msgs):
+        if weight_op == "add":
+            return msgs + weight
+        if weight_op == "mul":
+            return msgs * weight
+        return msgs
+
+    if span > fused_span_limit(block_e, combine, max_span):
+        # Reference chain: reconstruct flat slot ids from base + local.
+        ids = (jnp.repeat(base, block_e) + local).astype(jnp.int32)
+        msgs = apply_weight(jnp.take(x, src, axis=0))
+        msgs = jnp.where(mask > 0, msgs, ident)
+        acc = seg_op(msgs, jnp.minimum(ids, num_slots),
+                     num_segments=num_slots + 1)
+        return acc[:num_slots]
+
+    x_pad = _pad_to(x, gather_chunk, 0, value=ident)
+    partials = _obox.outbox_reduce_blocks(
+        x_pad, src, local, mask,
+        weight if weight_op is not None else None, combine=combine,
+        weight_op=weight_op, span=span, block_e=block_e,
+        gather_chunk=gather_chunk, interpret=interpret)     # [nb, span]
+
+    # phase 2: merge block partials (blocks may share a boundary slot);
+    # span overhang past the slot space drops into a sink.
+    ids = jnp.minimum(base[:, None] + jnp.arange(span, dtype=jnp.int32),
+                      num_slots)
+    acc = seg_op(partials.reshape(nb * span), ids.reshape(nb * span),
+                 num_segments=num_slots + 1)
+    return acc[:num_slots]
+
+
+# ---------------------------------------------------------------------------
 # fused superstep compute phase (TOTEM gather + message + reduction)
 # ---------------------------------------------------------------------------
 

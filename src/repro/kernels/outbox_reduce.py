@@ -1,0 +1,125 @@
+"""Source-side outbox aggregation Pallas kernel (paper §3.4, §4.3, Fig. 6).
+
+The distributed hybrid engine routes every inter-partition edge through the
+outbox-slot segment space of ``partition.py``: one slot per unique
+(source-partition, remote-vertex) pair, so aggregation-β (the paper's §3.4
+argument) is structural.  This kernel performs the whole boundary leg of the
+compute phase in one pass per edge block, entirely in VMEM:
+
+  1. **gather** — the shard's per-vertex message vector ``x`` (the
+     ``EdgeMessage`` already evaluated once per vertex with the ⊗-identity
+     weight) is VMEM-resident; per-edge source values come from a chunked
+     masked-max one-hot select (graph state legitimately contains ``+inf``,
+     so an MXU gather would produce ``0·inf = nan``; state never holds
+     ``-inf`` — same contract as ``fused_superstep``).
+  2. **⊗ weight** — the semiring's weight application is inlined:
+     ``add`` (min_plus relaxation) or ``mul`` (weighted plus_times);
+     weightless programs skip it.
+  3. **reduce** — boundary edges are pre-sorted by flat outbox slot id, so
+     a block of ``be`` edges reduces into a contiguous ``span`` of slots:
+     one-hot MXU contraction for ``sum``, masked VPU min for ``min``.
+
+The per-edge boundary messages never exist in HBM — the ``all_to_all``
+exchange afterwards moves ``β_with_reduction·|E|`` aggregated slot values
+instead of per-edge messages.  Slot ids/bases arrive as *operands* (not
+trace constants): under ``shard_map`` every shard carries its own static
+maps, stacked on the mesh axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_x(x_ref, src, *, gather_chunk: int):
+    """Per-edge gather from the VMEM-resident message vector.
+
+    x_ref: [x_pad] ref (x_pad % gather_chunk == 0); src: [be] int32.
+    Masked-max one-hot select, chunked so the [be, chunk] hit matrix never
+    grows to [be, x_pad].
+    """
+    x_pad = x_ref.shape[0]
+    be = src.shape[0]
+
+    def body(c, acc):
+        off = c * gather_chunk
+        chunk = x_ref[pl.ds(off, gather_chunk)]              # [chunk]
+        hit = (src[:, None] == off +
+               jax.lax.broadcasted_iota(jnp.int32, (1, gather_chunk), 1))
+        vals = jnp.where(hit, chunk[None, :], -jnp.inf)
+        return jnp.maximum(acc, jnp.max(vals, axis=1))
+
+    init = jnp.full((be,), -jnp.inf, jnp.float32)
+    return jax.lax.fori_loop(0, x_pad // gather_chunk, body, init)
+
+
+def _outbox_kernel(x_ref, src_ref, local_ref, mask_ref, *rest,
+                   combine: str, weight_op, span: int, gather_chunk: int):
+    if weight_op is not None:
+        w_ref, o_ref = rest
+    else:
+        w_ref, o_ref = None, rest[0]
+
+    src = src_ref[...]                                       # [be]
+    msgs = _gather_x(x_ref, src, gather_chunk=gather_chunk)
+    if weight_op == "add":
+        msgs = msgs + w_ref[...]
+    elif weight_op == "mul":
+        msgs = msgs * w_ref[...]
+    ident = 0.0 if combine == "sum" else jnp.inf
+    msgs = jnp.where(mask_ref[...] > 0, msgs, ident)
+
+    local = local_ref[...]                                   # [be] in [0,span)
+    hit = (local[:, None] ==
+           jax.lax.broadcasted_iota(jnp.int32, (1, span), 1))
+    if combine == "sum":
+        o_ref[...] = jax.lax.dot_general(
+            msgs[None, :], hit.astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        picked = jnp.where(hit, msgs[:, None], jnp.inf)
+        o_ref[...] = jnp.min(picked, axis=0)[None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("combine", "weight_op", "span", "block_e",
+                                    "gather_chunk", "interpret"))
+def outbox_reduce_blocks(x: jax.Array, src: jax.Array, local: jax.Array,
+                         mask: jax.Array, weight, *, combine: str,
+                         weight_op=None, span: int, block_e: int = 256,
+                         gather_chunk: int = 256,
+                         interpret: bool = False) -> jax.Array:
+    """Phase-1 outbox partials.
+
+    x: [x_pad] f32 (x_pad % gather_chunk == 0); src/local/mask (int32) and
+    weight (f32 or None): [e_pad] with e_pad % block_e == 0.  Returns
+    [e_pad/block_e, span] per-block slot partials (phase 2 in ops.py merges
+    blocks sharing a boundary slot).
+    """
+    e_pad = src.shape[0]
+    assert e_pad % block_e == 0 and x.shape[0] % gather_chunk == 0
+    nb = e_pad // block_e
+
+    kernel = functools.partial(_outbox_kernel, combine=combine,
+                               weight_op=weight_op, span=span,
+                               gather_chunk=gather_chunk)
+    edge_spec = pl.BlockSpec((block_e,), lambda b: (b,))
+    in_specs = [pl.BlockSpec(x.shape, lambda b: (0,)),   # x VMEM resident
+                edge_spec, edge_spec, edge_spec]
+    args = [x, src, local, mask]
+    if weight_op is not None:
+        in_specs.append(edge_spec)
+        args.append(weight)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, span), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, span), jnp.float32),
+        interpret=interpret,
+    )(*args)

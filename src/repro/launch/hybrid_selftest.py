@@ -1,0 +1,100 @@
+"""Distributed-hybrid parity self-test: every algorithm through
+``DistributedBSPEngine(backend="hybrid")`` against the single-device
+reference engine, across partitioning strategies.  Invoked in a subprocess
+so the forced device count never leaks into the caller's jax runtime:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      python -m repro.launch.hybrid_selftest [--scale 9] [--parts 4]
+
+Min combines (BFS, SSSP, CC) are compared exactly; sum combines (PageRank,
+BC) to f32 tolerance (the dense/ELL split and the outbox aggregation
+reassociate the sums).  With a single device the suite also covers the
+``P=1`` single-partition case — an entirely empty outbox (no boundary
+edges, no exchange), the degenerate end of the compact-exchange contract.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=9)
+    ap.add_argument("--edge-factor", type=int, default=4)
+    ap.add_argument("--parts", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=13)
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.core import graph as G
+    from repro.core import partition as PT
+    from repro.core.bsp import BSPEngine, DistributedBSPEngine
+    from repro.algorithms.bfs import bfs
+    from repro.algorithms.sssp import sssp
+    from repro.algorithms.pagerank import pagerank, pagerank_distributed
+    from repro.algorithms.cc import connected_components, symmetrize
+    from repro.algorithms.bc import betweenness_centrality
+
+    n_dev = len(jax.devices())
+    assert args.parts % n_dev == 0, (args.parts, n_dev)
+    mesh = jax.make_mesh((n_dev,), ("parts",))
+    g = G.rmat(args.scale, args.edge_factor,
+               seed=args.seed).with_uniform_weights(seed=1)
+    gs = symmetrize(G.rmat(args.scale, args.edge_factor, seed=args.seed))
+
+    for strategy in PT.STRATEGIES:
+        pg = PT.partition(g, args.parts, strategy, include_reverse=True)
+        ref = BSPEngine(pg)
+        hyb = DistributedBSPEngine(pg, mesh, backend="hybrid")
+        plan = hyb.hybrid_plan()
+        ks = [rec["k_dense"] for rec in plan["per_shard"]]
+
+        lr, sr = bfs(ref, 0)
+        lh, sh = bfs(hyb, 0)
+        np.testing.assert_array_equal(lr, lh)      # min combine: exact
+        assert sr == sh, (sr, sh)
+
+        dr, _ = sssp(ref, 0)
+        dh, _ = sssp(hyb, 0)
+        np.testing.assert_array_equal(dr, dh)      # min combine: exact
+
+        pr = pagerank(ref, num_iterations=10)
+        ph = pagerank_distributed(hyb, num_iterations=10)
+        np.testing.assert_allclose(pr, ph, rtol=1e-5, atol=1e-8)
+
+        br, s1 = betweenness_centrality(ref, 0)
+        bh, s2 = betweenness_centrality(hyb, 0)
+        assert s1 == s2, (s1, s2)
+        np.testing.assert_allclose(br, bh, rtol=1e-4, atol=1e-4)
+
+        pgs = PT.partition(gs, args.parts, strategy)
+        cr, _ = connected_components(BSPEngine(pgs))
+        ch, _ = connected_components(
+            DistributedBSPEngine(pgs, mesh, backend="hybrid"))
+        np.testing.assert_array_equal(cr, ch)      # min combine: exact
+
+        print(f"{strategy:>4}: bfs/sssp/pagerank/bc/cc parity over "
+              f"{n_dev} device(s), per-shard k={ks}", flush=True)
+
+    if n_dev == 1:
+        # P=1: no peers, no boundary edges, empty outbox — the engine must
+        # statically skip the exchange and still match the reference.
+        pg1 = PT.partition(g, 1, PT.RAND)
+        assert float(pg1.beta_with_reduction) == 0.0
+        lr, _ = bfs(BSPEngine(pg1), 0)
+        lh, _ = bfs(DistributedBSPEngine(pg1, mesh, backend="hybrid"), 0)
+        np.testing.assert_array_equal(lr, lh)
+        dr, _ = sssp(BSPEngine(pg1), 0)
+        dh, _ = sssp(DistributedBSPEngine(pg1, mesh, backend="hybrid"), 0)
+        np.testing.assert_array_equal(dr, dh)
+        print("P=1 empty-outbox edge case: parity", flush=True)
+
+    print("HYBRID SELFTEST OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
