@@ -12,8 +12,10 @@ from repro.core import graph as G
 from repro.core import partition as PT
 from repro.core.bsp import BSPEngine
 from repro.core.perf_model import speedup, PAPER_C
-from repro.algorithms import (bfs, bfs_reference, pagerank, sssp,
-                              connected_components, betweenness_centrality)
+from repro.algorithms import (bfs, bfs_batched, bfs_reference, pagerank,
+                              sssp, connected_components,
+                              betweenness_centrality,
+                              betweenness_centrality_batched)
 from repro.algorithms.cc import symmetrize
 
 # 1. A scale-free graph (paper Table 2 parameters, reduced scale).
@@ -51,4 +53,13 @@ print(f"CC      : {len(np.unique(labels))} components")
 
 bc, _ = betweenness_centrality(engine, src)
 print(f"BC      : max centrality {bc.max():.1f}")
+
+# 4. Batched queries (docs/serving.md): state grows a leading query axis, so
+#    one resident graph + one compiled while_loop serve many sources at once.
+hubs = np.argsort(-g.out_degrees())[:8]
+levels8, steps8 = bfs_batched(engine, hubs)
+assert np.array_equal(levels8[0], bfs(engine, int(hubs[0]))[0])
+print(f"BFS x8  : one run, per-query supersteps {steps8.tolist()}")
+bc8, _ = betweenness_centrality_batched(engine, hubs)
+print(f"BC  x8  : batched contributions, max {bc8.max(axis=1).round(1)}")
 print("OK")

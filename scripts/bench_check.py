@@ -2,12 +2,15 @@
 
 Diffs a fresh ``BENCH_superstep.json`` (benchmarks/superstep_bench.py)
 against a baseline run and fails when any matching cell's fused superstep
-time regressed by more than ``--threshold`` (default 20%), or when any
-*deterministic byte* metric (``--byte-fields``: per-superstep exchanged
-bytes, fused temp bytes) grew by more than ``--byte-threshold`` (20%) —
-byte counts don't suffer interpret-mode timing noise, so their gate stays
-tight even when the timing threshold is widened for CI.  The make/CI
-entry point:
+time — or any ``--extra-timing-fields`` metric present on both sides, e.g.
+the batched column's amortized ``batched_ms_per_query`` — regressed by
+more than ``--threshold`` (default 20%), or when any *deterministic*
+metric (``--byte-fields``: per-superstep exchanged bytes, fused temp
+bytes, and the batched column's compile-cache ``retraces``, which must
+stay at 0 — any growth from 0 fails the ratio gate outright) grew by more
+than ``--byte-threshold`` (20%) — deterministic counts don't suffer
+interpret-mode timing noise, so their gate stays tight even when the
+timing threshold is widened for CI.  The make/CI entry point:
 
   python benchmarks/superstep_bench.py --quick --out BENCH_superstep.json
   python scripts/bench_check.py BENCH_superstep.json \
@@ -59,10 +62,17 @@ def main(argv=None) -> int:
                     help="max allowed fractional regression")
     ap.add_argument("--field", default="fused_ms",
                     help="which per-cell timing to gate on")
+    ap.add_argument("--extra-timing-fields", nargs="*",
+                    default=["batched_ms_per_query"],
+                    help="additional timing metrics gated at --threshold "
+                         "when present on both sides (batched cells carry "
+                         "these instead of --field)")
     ap.add_argument("--byte-fields", nargs="*",
-                    default=["exchanged_bytes", "fused_temp_bytes"],
-                    help="deterministic byte metrics gated at "
-                         "--byte-threshold regardless of timing noise")
+                    default=["exchanged_bytes", "fused_temp_bytes",
+                             "retraces"],
+                    help="deterministic metrics gated at --byte-threshold "
+                         "regardless of timing noise (retraces must stay "
+                         "0: any growth fails)")
     ap.add_argument("--byte-threshold", type=float, default=0.20,
                     help="max allowed fractional growth in --byte-fields")
     args = ap.parse_args(argv)
@@ -88,15 +98,17 @@ def main(argv=None) -> int:
         if base is None:
             print(f"  new/unmatched cell (not gated): {key}")
             continue
-        if args.field in base and args.field in rec:
+        for field in [args.field] + list(args.extra_timing_fields):
+            if base.get(field) is None or rec.get(field) is None:
+                continue
             checked += 1
-            ratio = rec[args.field] / max(base[args.field], 1e-12)
+            ratio = rec[field] / max(base[field], 1e-12)
             status = "OK"
             if ratio > 1.0 + args.threshold:
                 status = "REGRESSION"
-                regressions.append((key, args.field, ratio))
-            print(f"  {key}: {args.field} {base[args.field]:.2f} -> "
-                  f"{rec[args.field]:.2f} ms ({ratio:.2f}x) {status}")
+                regressions.append((key, field, ratio))
+            print(f"  {key}: {field} {base[field]:.2f} -> "
+                  f"{rec[field]:.2f} ms ({ratio:.2f}x) {status}")
         # Deterministic byte metrics: gate growth tightly (no timing noise).
         for field in args.byte_fields:
             if base.get(field) is None or rec.get(field) is None:

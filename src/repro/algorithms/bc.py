@@ -13,11 +13,17 @@ Two BSP cycles, exactly the paper's structure:
   the bc score.  This runs levels ``max_level-1 .. 1``.
 
 Single-source BC, as in the paper's evaluation (Table 4: "for a single
-source").  ``bc_exact`` loops over all sources for small-graph validation.
+source"), plus the batched form: ``betweenness_centrality_batched`` runs Q
+sources through one forward and one backward engine invocation — each
+query's ``max_level`` rides the state as a per-query scalar, so queries at
+different depths process their own levels inside the shared loop.
+``bc_exact`` chunks all |V| sources through that path instead of
+re-entering the engine once per source (the old O(|V|)-dispatch loop is
+kept as ``bc_exact_sequential``, the parity oracle).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -105,6 +111,57 @@ BACKWARD_PROGRAM = VertexProgram(combine=SUM, edge_fn=_bwd_edge,
                                      consts=("max_level",)))
 
 
+def betweenness_centrality_batched(engine: BSPEngine,
+                                   sources: Sequence[int]
+                                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-source BC contributions for a batch of Q sources.
+
+    One forward and one backward engine invocation cover the whole batch:
+    the forward BFS+sigma cycle converges per query, then each query's
+    measured ``max_level`` rides the backward state as a per-query scalar,
+    so the shared backward loop walks every query down its *own* levels.
+    Queries whose forward tree is shallower than 2 levels contribute
+    nothing, exactly as in the single-source path (they spend one no-op
+    vote round in the batched backward loop, so their reported step count
+    can exceed the sequential count by one).
+
+    Returns (bc [Q, n], per-query total supersteps [Q]).
+    """
+    from repro.algorithms.bfs import gather_batch, multi_source_state
+
+    pg = engine.pg
+    if pg.rev is None and not engine.provides_reverse(BACKWARD_PROGRAM):
+        raise ValueError("BC needs reverse edges "
+                         "(partition with include_reverse=True)")
+    P, V = pg.num_parts, pg.v_max
+    q = len(np.asarray(sources).reshape(-1))
+    dist0 = multi_source_state(pg, sources)
+    sigma0 = multi_source_state(pg, sources, fill=0.0, value=1.0)
+
+    fwd_state, fwd_steps = engine.run_batched(FORWARD_PROGRAM, {
+        "dist": jnp.asarray(dist0), "sigma": jnp.asarray(sigma0)})
+
+    dist = np.asarray(fwd_state["dist"])                   # [Q, P, V]
+    finite = np.where(np.isfinite(dist), dist, -np.inf)
+    max_level = np.maximum(finite.max(axis=(1, 2)), 0.0)   # [Q]
+
+    bwd_state = {
+        "dist": fwd_state["dist"], "sigma": fwd_state["sigma"],
+        "delta": jnp.zeros((q, P, V), dtype=jnp.float32),
+        "bc": jnp.zeros((q, P, V), dtype=jnp.float32),
+        "max_level": jnp.asarray(
+            np.broadcast_to(max_level[:, None].astype(np.float32), (q, P))),
+    }
+    if float(max_level.max(initial=0.0)) >= 2.0:
+        bwd_state, bwd_steps = engine.run_batched(BACKWARD_PROGRAM,
+                                                  bwd_state)
+        bwd_steps = np.asarray(bwd_steps)
+    else:
+        bwd_steps = np.zeros(q, dtype=np.int32)
+    bc = gather_batch(pg, bwd_state["bc"])
+    return bc, np.asarray(fwd_steps) + bwd_steps
+
+
 def betweenness_centrality(engine: BSPEngine,
                            source: int) -> Tuple[np.ndarray, int]:
     """Single-source BC contribution; returns (bc [n], total supersteps)."""
@@ -181,8 +238,37 @@ def bc_reference(g: CSRGraph, source: int) -> np.ndarray:
     return bc.astype(np.float32)
 
 
-def bc_exact(engine: BSPEngine) -> np.ndarray:
-    """All-sources exact BC (small graphs only)."""
+def bc_exact(engine: BSPEngine, chunk: Optional[int] = 32) -> np.ndarray:
+    """All-sources exact BC via the batched path, in source chunks.
+
+    Replaces the O(|V|)-dispatch loop (one engine re-entry per source) with
+    ``⌈|V|/chunk⌉`` batched invocations; the tail chunk is padded with
+    repeats of source 0 (their rows are dropped) so every chunk compiles to
+    the same Q and the engine's compile cache holds exactly one entry per
+    cycle.  Contributions accumulate in source order in float64 —
+    bit-identical to ``bc_exact_sequential`` whenever the batched engine
+    matches the sequential engine bitwise (asserted in the tier-1 suite).
+    ``chunk=None`` runs the whole vertex set as one batch.
+    """
+    n = engine.pg.num_vertices
+    chunk = n if chunk is None else min(chunk, n)
+    total = np.zeros(n, dtype=np.float64)
+    for lo in range(0, n, chunk):
+        srcs = np.arange(lo, min(lo + chunk, n), dtype=np.int64)
+        pad = chunk - len(srcs)
+        contrib, _ = betweenness_centrality_batched(
+            engine, np.concatenate([srcs, np.zeros(pad, np.int64)]))
+        for row in contrib[: len(srcs)]:
+            total += row          # source-order accumulation (bitwise)
+    return total.astype(np.float32)
+
+
+def bc_exact_sequential(engine: BSPEngine) -> np.ndarray:
+    """The pre-batching all-sources loop: one engine re-entry per source.
+
+    Kept as the parity oracle for ``bc_exact`` (and as a measure of the
+    dispatch overhead the batched path amortizes away).
+    """
     total = np.zeros(engine.pg.num_vertices, dtype=np.float64)
     for s in range(engine.pg.num_vertices):
         contrib, _ = betweenness_centrality(engine, s)

@@ -9,7 +9,7 @@ the dense block — see kernels/dense_spmv).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -20,6 +20,27 @@ from repro.core.graph import CSRGraph
 from repro.core.partition import PartitionedGraph
 
 INF = jnp.float32(jnp.inf)
+
+
+def multi_source_state(pg: PartitionedGraph, sources: Sequence[int],
+                       fill=np.inf, value=0.0) -> np.ndarray:
+    """[Q, P, v_max] per-query state with ``value`` at each query's source.
+
+    The shared multi-source constructor: one row per query, ``fill``
+    elsewhere — BFS levels, SSSP distances, and BC's dist/sigma all start
+    from this shape.
+    """
+    sources = np.asarray(sources, dtype=np.int64).reshape(-1)
+    out = np.full((len(sources), pg.num_parts, pg.v_max), fill,
+                  dtype=np.float32)
+    out[np.arange(len(sources)), pg.assignment.part_of[sources],
+        pg.assignment.local_id[sources]] = value
+    return out
+
+
+def gather_batch(pg: PartitionedGraph, per_part: np.ndarray) -> np.ndarray:
+    """Collect a [Q, P, v_max] batched state into global [Q, n] order."""
+    return np.stack([pg.gather_global(row) for row in np.asarray(per_part)])
 
 
 def _edge_fn(state, src, weight, step):
@@ -58,15 +79,25 @@ BFS_PROGRAM = VertexProgram(combine=MIN, edge_fn=_edge_fn,
                                                  fn=_edge_msg_fn))
 
 
+def bfs_batched(engine: BSPEngine,
+                sources: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
+    """Run a batch of Q BFS queries through one engine invocation.
+
+    All queries share the resident partitioned graph and advance through a
+    single compiled ``lax.while_loop``; each converges independently.
+    Returns (levels [Q, n], per-query supersteps [Q]).
+    """
+    pg = engine.pg
+    level0 = multi_source_state(pg, sources)
+    state, steps = engine.run_batched(BFS_PROGRAM,
+                                      {"level": jnp.asarray(level0)})
+    return gather_batch(pg, state["level"]), np.asarray(steps)
+
+
 def bfs(engine: BSPEngine, source: int) -> Tuple[np.ndarray, int]:
     """Run BFS from global vertex ``source``; returns (levels [n], steps)."""
-    pg = engine.pg
-    level0 = np.full((pg.num_parts, pg.v_max), np.inf, dtype=np.float32)
-    sp = int(pg.assignment.part_of[source])
-    sl = int(pg.assignment.local_id[source])
-    level0[sp, sl] = 0.0
-    state, steps = engine.run(BFS_PROGRAM, {"level": jnp.asarray(level0)})
-    return pg.gather_global(np.asarray(state["level"])), int(steps)
+    levels, steps = bfs_batched(engine, [source])
+    return levels[0], int(steps[0])
 
 
 def bfs_reference(g: CSRGraph, source: int) -> np.ndarray:

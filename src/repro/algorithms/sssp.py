@@ -10,7 +10,7 @@ semantics.  The paper's ``atomicMin`` becomes the engine's segment_min.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -57,20 +57,29 @@ SSSP_PROGRAM = VertexProgram(combine=MIN, edge_fn=_edge_fn,
                                  weight_op="add"))
 
 
-def sssp(engine: BSPEngine, source: int) -> Tuple[np.ndarray, int]:
+def sssp_batched(engine: BSPEngine,
+                 sources: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
+    """Run a batch of Q SSSP queries through one engine invocation.
+
+    Returns (dists [Q, n], per-query supersteps [Q]); each query relaxes
+    independently and freezes once converged.
+    """
+    from repro.algorithms.bfs import gather_batch, multi_source_state
+
     pg = engine.pg
     if pg.fwd.weight is None:
         raise ValueError("SSSP needs edge weights "
                          "(graph.with_uniform_weights)")
-    dist0 = np.full((pg.num_parts, pg.v_max), np.inf, dtype=np.float32)
-    active0 = np.zeros((pg.num_parts, pg.v_max), dtype=bool)
-    sp = int(pg.assignment.part_of[source])
-    sl = int(pg.assignment.local_id[source])
-    dist0[sp, sl] = 0.0
-    active0[sp, sl] = True
-    state, steps = engine.run(SSSP_PROGRAM, {
+    dist0 = multi_source_state(pg, sources)
+    active0 = np.isfinite(dist0)
+    state, steps = engine.run_batched(SSSP_PROGRAM, {
         "dist": jnp.asarray(dist0), "active": jnp.asarray(active0)})
-    return pg.gather_global(np.asarray(state["dist"])), int(steps)
+    return gather_batch(pg, state["dist"]), np.asarray(steps)
+
+
+def sssp(engine: BSPEngine, source: int) -> Tuple[np.ndarray, int]:
+    dists, steps = sssp_batched(engine, [source])
+    return dists[0], int(steps[0])
 
 
 def sssp_reference(g: CSRGraph, source: int) -> np.ndarray:

@@ -20,6 +20,19 @@ The same superstep body runs in two modes:
   - *local*: all P partitions stacked on one device (tests, small graphs);
   - *distributed*: partitions sharded over a mesh axis with ``shard_map``
     (one partition per device; this is the multi-pod scale-out path).
+
+**Query batching.**  Every internal superstep path operates on state whose
+leaves carry a leading *query axis* ``Q``: vertex leaves are
+``[Q, Pl, v_max]``, per-partition scalars ``[Q, Pl]``.  The graph topology
+(edge arrays, block metadata, outbox maps, degree splits) is shared across
+the batch — only message values and state grow with Q — so a batch of Q
+concurrent traversals (multi-source BFS/SSSP/BC, personalized PageRank)
+amortizes one resident partitioned graph, one compiled ``lax.while_loop``,
+and one kernel-launch sequence over all queries.  Each query votes finish
+independently; converged queries are masked out of the apply step (their
+state freezes bitwise) while the rest continue, and ``run_batched`` reports
+per-query superstep counts.  The single-query ``run``/``run_fixed`` API is
+preserved as a Q=1 wrapper.
 """
 from __future__ import annotations
 
@@ -37,7 +50,23 @@ from repro.core.partition import (BlockMetadata, EdgeArrays, PartitionedGraph,
                                   build_block_metadata)
 
 Array = jax.Array
-State = Any  # pytree of [Pl, v_max]-leading arrays + scalars
+State = Any    # pytree of [Pl, v_max]-leading arrays + [Pl] scalars
+BatchedState = Any  # same pytree with a leading query axis: [Q, Pl, ...]
+
+
+def batch_state(state: State) -> BatchedState:
+    """Add a Q=1 query axis to every leaf (single-query compatibility)."""
+    return jax.tree.map(lambda x: jnp.asarray(x)[None], state)
+
+
+def unbatch_state(state: BatchedState) -> State:
+    """Strip the query axis of a Q=1 batched state."""
+    return jax.tree.map(lambda x: x[0], state)
+
+
+def num_queries(state: BatchedState) -> int:
+    """Static query-batch extent Q of a batched state pytree."""
+    return int(jax.tree_util.tree_leaves(state)[0].shape[0])
 
 SUM = "sum"
 MIN = "min"
@@ -171,16 +200,18 @@ def _superstep_hybrid(program: VertexProgram, hd: _HybridData,
 
     spec = program.edge_msg
     ident = add_identity(hd.semiring)
-    vals = {k: state[k].astype(jnp.float32).reshape(-1)[hd.slot]
-            for k in spec.gather}
+    q = state[spec.gather[0]].shape[0]
+    vals = {k: state[k].astype(jnp.float32).reshape(q, -1)[:, hd.slot]
+            for k in spec.gather}           # [Q, n] in hybrid id space
     # Per-partition scalar consts are replicated across partitions in the
-    # single-device engines; the global compute reads partition 0's copy.
-    consts = {c: state[c][0].astype(jnp.float32) for c in spec.consts}
+    # single-device engines; the global compute reads partition 0's copy
+    # (shaped [Q, 1] so they broadcast against the [Q, n] values).
+    consts = {c: state[c][:, :1].astype(jnp.float32) for c in spec.consts}
     w_ident = None
     if spec.use_weight:
         w_ident = jnp.float32(0.0 if spec.weight_op == "add" else 1.0)
     x = spec.fn(vals, w_ident, step.astype(jnp.float32),
-                consts).astype(jnp.float32)
+                consts).astype(jnp.float32)              # [Q, n]
 
     def pull(x):
         return hybrid_spmv(hd.dense, hd.ell_col, hd.ell_val, x,
@@ -189,20 +220,28 @@ def _superstep_hybrid(program: VertexProgram, hd: _HybridData,
 
     if hd.push_src is not None:
         def push(x):
-            msgs = x[hd.push_src]
+            msgs = x[:, hd.push_src]                     # [Q, E]
             if hd.push_w is not None:
                 msgs = msgs + hd.push_w
-            return jax.ops.segment_min(msgs, hd.push_dst,
-                                       num_segments=hd.num_vertices)
+            offs = (jnp.arange(q, dtype=jnp.int32)
+                    * hd.num_vertices)[:, None]
+            y = jax.ops.segment_min(msgs.ravel(),
+                                    (hd.push_dst[None] + offs).ravel(),
+                                    num_segments=q * hd.num_vertices)
+            return y.reshape(q, hd.num_vertices)
 
+        # One direction per superstep for the whole batch: the mean frontier
+        # density across queries decides (direction is a perf choice only —
+        # both directions are exact for min combines).
         density = jnp.mean((x != ident).astype(jnp.float32))
         y = jax.lax.cond(density < hd.pull_threshold, push, pull, x)
     else:
         y = pull(x)
 
-    y_ext = jnp.concatenate([y, jnp.full((1,), ident, y.dtype)])
-    acc = y_ext[hd.hid]                     # back to [P, v_max] layout
-    new_state, finished = program.apply_fn(state, acc, step)
+    y_ext = jnp.concatenate([y, jnp.full((q, 1), ident, y.dtype)], axis=1)
+    acc = y_ext[:, hd.hid]                  # back to [Q, P, v_max] layout
+    new_state, finished = jax.vmap(program.apply_fn,
+                                   in_axes=(0, 0, None))(state, acc, step)
     return new_state, all_finished(finished)
 
 
@@ -213,9 +252,10 @@ def _superstep_hybrid_dist(program: VertexProgram, shd, arrs: dict,
                            state: State, step: Array) -> Tuple[State, Array]:
     """One BSP superstep of the *distributed* degree-split backend.
 
-    Runs inside ``shard_map``: ``state`` leaves are the local ``[pl, v_max]``
-    shard, ``arrs`` the shard's slice of :class:`hybrid.ShardHybridData`
-    (leading mesh axis of extent 1).  The paper's cycle, per shard:
+    Runs inside ``shard_map``: ``state`` leaves are the local
+    ``[Q, pl, v_max]`` shard of the query batch, ``arrs`` the shard's slice
+    of :class:`hybrid.ShardHybridData` (leading mesh axis of extent 1),
+    shared across the batch.  The paper's cycle, per shard:
 
       1. evaluate the EdgeMessage once per local vertex (⊗-identity weight),
          then run the two-engine semiring SpMV over the shard's
@@ -238,17 +278,18 @@ def _superstep_hybrid_dist(program: VertexProgram, shd, arrs: dict,
     pl = shd.parts_per_shard
     v_max = shd.v_max
     slot = arrs["slot"][0]
-    vals = {k: state[k].astype(jnp.float32).reshape(-1)[slot]
-            for k in spec.gather}
-    consts = {c: state[c][0].astype(jnp.float32) for c in spec.consts}
+    q = state[spec.gather[0]].shape[0]
+    vals = {k: state[k].astype(jnp.float32).reshape(q, -1)[:, slot]
+            for k in spec.gather}                       # [Q, n_max]
+    consts = {c: state[c][:, :1].astype(jnp.float32) for c in spec.consts}
     w_ident = None
     if spec.use_weight:
         w_ident = jnp.float32(0.0 if spec.weight_op == "add" else 1.0)
     x = spec.fn(vals, w_ident, step.astype(jnp.float32),
-                consts).astype(jnp.float32)
+                consts).astype(jnp.float32)             # [Q, n_max]
     n_vert = arrs["n_vert"][0]
     vmask = jnp.arange(shd.n_max, dtype=jnp.int32) < n_vert
-    x = jnp.where(vmask, x, ident)   # pad hybrid ids never contribute
+    x = jnp.where(vmask[None], x, ident)  # pad hybrid ids never contribute
 
     def pull(xv):
         return hybrid_spmv(arrs["dense"][0], arrs["ell_col"][0],
@@ -257,16 +298,22 @@ def _superstep_hybrid_dist(program: VertexProgram, shd, arrs: dict,
 
     if "push_src" in arrs:
         def push(xv):
-            x_ext = jnp.concatenate([xv, jnp.full((1,), ident, xv.dtype)])
-            msgs = x_ext[arrs["push_src"][0]]
+            x_ext = jnp.concatenate(
+                [xv, jnp.full((q, 1), ident, xv.dtype)], axis=1)
+            msgs = x_ext[:, arrs["push_src"][0]]        # [Q, ei]
             if "push_w" in arrs:
                 msgs = msgs + arrs["push_w"][0]
-            y = jax.ops.segment_min(msgs, arrs["push_dst"][0],
-                                    num_segments=shd.n_max + 1)
-            return y[: shd.n_max]
+            offs = (jnp.arange(q, dtype=jnp.int32)
+                    * (shd.n_max + 1))[:, None]
+            y = jax.ops.segment_min(
+                msgs.ravel(), (arrs["push_dst"][0][None] + offs).ravel(),
+                num_segments=q * (shd.n_max + 1))
+            return y.reshape(q, shd.n_max + 1)[:, : shd.n_max]
 
+        # Batch-aggregate frontier density picks one direction per superstep
+        # (a perf choice only; both directions are exact for min combines).
         density = (jnp.sum((x != ident).astype(jnp.float32))
-                   / jnp.maximum(n_vert.astype(jnp.float32), 1.0))
+                   / jnp.maximum(q * n_vert.astype(jnp.float32), 1.0))
         y = jax.lax.cond(density < pull_threshold, push, pull, x)
     else:
         y = pull(x)
@@ -275,66 +322,82 @@ def _superstep_hybrid_dist(program: VertexProgram, shd, arrs: dict,
     seg = shd.scatter_segments
     racc = None
     if shd.has_boundary:
-        x_ext = jnp.concatenate([x, jnp.full((1,), ident, x.dtype)])
+        x_ext = jnp.concatenate([x, jnp.full((q, 1), ident, x.dtype)],
+                                axis=1)
         outbox = outbox_reduce_op(
             x_ext, arrs["b_src"][0], arrs["b_local"][0], arrs["b_mask"][0],
             arrs["b_base"][0], arrs.get("b_weight", [None])[0],
             num_slots=shd.num_slots, combine=program.combine,
             weight_op=spec.weight_op if spec.use_weight else None,
-            span=shd.b_span, block_e=shd.b_block, interpret=interpret)
+            span=shd.b_span, block_e=shd.b_block,
+            interpret=interpret)                        # [Q, num_slots]
         obox_ext = jnp.concatenate(
-            [outbox, jnp.full((1,), ident, outbox.dtype)])
+            [outbox, jnp.full((q, 1), ident, outbox.dtype)], axis=1)
         rvals, rids = [], []
         if shd.has_remote:
-            send = obox_ext[arrs["send_idx"][0]]          # [S, w]
-            recv = jax.lax.all_to_all(send, axis, split_axis=0,
-                                      concat_axis=0, tiled=True)
-            rvals.append(recv.reshape(-1))
+            send = obox_ext[:, arrs["send_idx"][0]]     # [Q, S, w]
+            recv = jax.lax.all_to_all(send, axis, split_axis=1,
+                                      concat_axis=1, tiled=True)
+            rvals.append(recv.reshape(q, -1))
             rids.append(arrs["recv_ids"][0].reshape(-1))
         if shd.has_local_slots:
-            rvals.append(obox_ext[arrs["loc_idx"][0]])
+            rvals.append(obox_ext[:, arrs["loc_idx"][0]])
             rids.append(arrs["loc_ids"][0])
         if rvals:
-            racc = seg_op(jnp.concatenate(rvals), jnp.concatenate(rids),
-                          num_segments=seg + 1)
-            racc = racc[:seg].reshape(pl, v_max + 1)[:, :v_max]
+            ids = jnp.concatenate(rids)                 # [L], shared over Q
+            offs = (jnp.arange(q, dtype=jnp.int32) * (seg + 1))[:, None]
+            racc = seg_op(jnp.concatenate(rvals, axis=1).ravel(),
+                          (ids[None] + offs).ravel(),
+                          num_segments=q * (seg + 1))
+            racc = racc.reshape(q, seg + 1)[:, :seg]
+            racc = racc.reshape(q, pl, v_max + 1)[:, :, :v_max]
 
-    y_ext = jnp.concatenate([y, jnp.full((1,), ident, y.dtype)])
-    acc = y_ext[arrs["hid"][0]]                            # [pl, v_max]
+    y_ext = jnp.concatenate([y, jnp.full((q, 1), ident, y.dtype)], axis=1)
+    acc = y_ext[:, arrs["hid"][0]]                      # [Q, pl, v_max]
     if racc is not None:
         acc = _COMBINE[program.combine](acc, racc)
-    new_state, finished = program.apply_fn(state, acc, step)
+    new_state, finished = jax.vmap(program.apply_fn,
+                                   in_axes=(0, 0, None))(state, acc, step)
     return new_state, all_finished(finished)
 
 
 def _compute_reference(dims: _Dims, program: VertexProgram, edges: dict,
-                       state: State, step: Array) -> Array:
-    """Reference compute: gather → [Pl, e_max] messages → scatter-reduce."""
+                       state: BatchedState, step: Array) -> Array:
+    """Reference compute: gather → [Q, Pl, e_max] messages → scatter-reduce.
+
+    ``edge_fn`` is written against unbatched [Pl, ...] state; vmap over the
+    query axis runs it once per query against the *shared* edge arrays."""
     pl = edges["src"].shape[0]
-    msgs = program.edge_fn(state, edges["src"], edges.get("weight"), step)
-    offs = jnp.arange(pl, dtype=jnp.int32)[:, None] * dims.seg
-    ids = (edges["dst_ext"] + offs).ravel()
+    src, weight = edges["src"], edges.get("weight")
+    msgs = jax.vmap(
+        lambda st: program.edge_fn(st, src, weight, step))(state)
+    q = msgs.shape[0]
+    offs = (jnp.arange(q * pl, dtype=jnp.int32)
+            * dims.seg).reshape(q, pl, 1)
+    ids = (edges["dst_ext"][None] + offs).ravel()
     acc = _SEGMENT_OP[program.combine](msgs.ravel(), ids,
-                                       num_segments=pl * dims.seg)
-    return acc.reshape(pl, dims.seg)
+                                       num_segments=q * pl * dims.seg)
+    return acc.reshape(q, pl, dims.seg)
 
 
 def _compute_fused(dims: _Dims, program: VertexProgram, edges: dict,
-                   cfg: FusedConfig, state: State, step: Array) -> Array:
-    """Fused compute: one Pallas pass per edge block, no [Pl, e_max] HBM
-    message array (kernels/fused_superstep.py)."""
+                   cfg: FusedConfig, state: BatchedState,
+                   step: Array) -> Array:
+    """Fused compute: one Pallas pass per (query, edge block), no
+    [Q, Pl, e_max] HBM message array (kernels/fused_superstep.py)."""
     from repro.kernels.ops import fused_superstep_op
 
     spec = program.edge_msg
     pl = edges["src"].shape[0]
     vstate = jnp.stack([state[k].astype(jnp.float32) for k in spec.gather],
-                       axis=1)                            # [Pl, K, v_max]
-    pad = cfg.v_pad - vstate.shape[2]
+                       axis=2)                            # [Q, Pl, K, v_max]
+    pad = cfg.v_pad - vstate.shape[3]
     if pad:
-        vstate = jnp.pad(vstate, ((0, 0), (0, 0), (0, pad)))
-    cols = [jnp.broadcast_to(step.astype(jnp.float32), (pl,))]
+        vstate = jnp.pad(vstate, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    q = vstate.shape[0]
+    cols = [jnp.broadcast_to(step.astype(jnp.float32), (q, pl))]
     cols += [state[k].astype(jnp.float32) for k in spec.consts]
-    scal = jnp.stack(cols, axis=1)                        # [Pl, 1 + consts]
+    scal = jnp.stack(cols, axis=2)                        # [Q, Pl, 1+consts]
 
     def msg_fn(vals, weight, scals):
         vals_d = dict(zip(spec.gather, vals))
@@ -354,8 +417,9 @@ def _superstep(dims: _Dims, program: VertexProgram, edges: dict,
                exchange: Callable[[Array], Array],
                all_finished: Callable[[Array], Array],
                fused_cfg: Optional[FusedConfig],
-               state: State, step: Array) -> Tuple[State, Array]:
-    """One BSP superstep over the local shard of partitions."""
+               state: BatchedState, step: Array) -> Tuple[BatchedState,
+                                                          Array]:
+    """One BSP superstep of the whole query batch over the local shard."""
     combine = program.combine
     seg_op = _SEGMENT_OP[combine]
     pl = edges["src"].shape[0]  # local partition count
@@ -365,23 +429,27 @@ def _superstep(dims: _Dims, program: VertexProgram, edges: dict,
         acc = _compute_fused(dims, program, edges, fused_cfg, state, step)
     else:
         acc = _compute_reference(dims, program, edges, state, step)
-    local_acc = acc[:, : dims.v_max]
-    outbox = acc[:, dims.v_max + 1:].reshape(pl, dims.num_parts, dims.o_max)
+    q = acc.shape[0]
+    local_acc = acc[:, :, : dims.v_max]
+    outbox = acc[:, :, dims.v_max + 1:].reshape(q, pl, dims.num_parts,
+                                                dims.o_max)
 
-    # -- communicate: outbox -> symmetric inbox (paper Fig. 6) --------------
-    inbox = exchange(outbox)  # [pl, P, o_max]: inbox[p, q] = from partition q
+    # -- communicate: outbox -> symmetric inbox (paper Fig. 6); the wire
+    # ships Q slot blocks per pair — topology maps are never duplicated ----
+    inbox = exchange(outbox)  # [Q, pl, P, o_max]
 
     # -- scatter: combine inbox messages into local vertex accumulator ------
-    in_ids = (edges["inbox_dst"]
-              + (jnp.arange(pl, dtype=jnp.int32) * (dims.v_max + 1))[:, None,
-                                                                     None])
+    offs = (jnp.arange(q * pl, dtype=jnp.int32)
+            * (dims.v_max + 1)).reshape(q, pl, 1, 1)
+    in_ids = edges["inbox_dst"][None] + offs
     racc = seg_op(inbox.ravel(), in_ids.ravel(),
-                  num_segments=pl * (dims.v_max + 1))
-    racc = racc.reshape(pl, dims.v_max + 1)[:, : dims.v_max]
+                  num_segments=q * pl * (dims.v_max + 1))
+    racc = racc.reshape(q, pl, dims.v_max + 1)[:, :, : dims.v_max]
     total = _COMBINE[combine](local_acc, racc)
 
-    # -- apply + vote --------------------------------------------------------
-    new_state, finished = program.apply_fn(state, total, step)
+    # -- apply + vote (per query) -------------------------------------------
+    new_state, finished = jax.vmap(program.apply_fn,
+                                   in_axes=(0, 0, None))(state, total, step)
     return new_state, all_finished(finished)
 
 
@@ -400,6 +468,40 @@ def _edges_dict(ea: EdgeArrays, blk: Optional[BlockMetadata] = None) -> dict:
         if blk.weight is not None:
             d["weight_blk"] = jnp.asarray(blk.weight)
     return d
+
+
+def _run_batched_loop(step_fn: Callable, max_steps: int,
+                      state: BatchedState,
+                      q: int) -> Tuple[BatchedState, Array]:
+    """One ``lax.while_loop`` advancing all Q queries together.
+
+    ``step_fn(state, step) -> (state, finished[Q])`` is any superstep
+    closure; queries vote finish independently.  A converged query is
+    masked out of the apply step — its state leaves freeze bitwise via a
+    per-query ``where`` — while unfinished queries continue, so a batch
+    reproduces each query's sequential trajectory exactly.  Returns the
+    final state and per-query executed superstep counts ``steps[Q]``
+    (identical to the sequential engine's ``steps`` for each query).
+    """
+    def freeze(fin, new, old):
+        return jnp.where(fin.reshape(fin.shape + (1,) * (new.ndim - 1)),
+                         old, new)
+
+    def body(carry):
+        st, step, fin, steps_q = carry
+        new_st, vote = step_fn(st, step)
+        new_st = jax.tree.map(functools.partial(freeze, fin), new_st, st)
+        steps_q = steps_q + jnp.logical_not(fin).astype(jnp.int32)
+        return new_st, step + 1, jnp.logical_or(fin, vote), steps_q
+
+    def cond(carry):
+        _, step, fin, _ = carry
+        return jnp.logical_and(~jnp.all(fin), step < max_steps)
+
+    init = (state, jnp.int32(0), jnp.zeros((q,), jnp.bool_),
+            jnp.zeros((q,), jnp.int32))
+    state, _, _, steps_q = jax.lax.while_loop(cond, body, init)
+    return state, steps_q
 
 
 REFERENCE = "reference"
@@ -589,10 +691,16 @@ class BSPEngine:
         self._hybrid_cache[key] = hd
         return hd
 
-    # Local exchange: outbox[p, q] -> inbox[q, p] is a transpose.
+    # Local exchange: outbox[q, p, r] -> inbox[q, r, p] is a transpose over
+    # the partition axes (the query axis rides along).
     @staticmethod
     def _exchange(outbox: Array) -> Array:
-        return outbox.transpose(1, 0, 2)
+        return outbox.transpose(0, 2, 1, 3)
+
+    # Single device: each query's apply vote is already its global vote.
+    @staticmethod
+    def _all_finished(fin: Array) -> Array:
+        return fin
 
     def edges_for(self, program: VertexProgram) -> dict:
         if program.use_reverse:
@@ -630,36 +738,46 @@ class BSPEngine:
         return None if self._uses_hybrid(program) else self.edges_for(program)
 
     @functools.partial(jax.jit, static_argnums=(0, 1))
-    def run(self, program: VertexProgram, state: State) -> Tuple[State, Array]:
-        """Run supersteps until all partitions vote finish (lax.while_loop)."""
+    def run_batched(self, program: VertexProgram,
+                    state: BatchedState) -> Tuple[BatchedState, Array]:
+        """Advance a [Q, Pl, ...] batch of queries through **one** compiled
+        ``lax.while_loop`` until every query votes finish; returns the final
+        batched state and per-query superstep counts [Q].  The compiled
+        computation is cached on (program, state shape): batches of the same
+        Q never retrace, whatever their sources."""
         edges = self._edges_or_none(program)
-        step_fn = self._step_fn(program, edges, self._exchange, jnp.all)
+        step_fn = self._step_fn(program, edges, self._exchange,
+                                self._all_finished)
+        return _run_batched_loop(step_fn, program.max_steps, state,
+                                 num_queries(state))
 
-        def body(carry):
-            state, step, _ = carry
-            state, fin = step_fn(state, step)
-            return state, step + 1, fin
+    def run(self, program: VertexProgram, state: State) -> Tuple[State, Array]:
+        """Run supersteps until all partitions vote finish (lax.while_loop).
 
-        def cond(carry):
-            _, step, fin = carry
-            return jnp.logical_and(~fin, step < program.max_steps)
-
-        state, steps, _ = jax.lax.while_loop(
-            cond, body, (state, jnp.int32(0), jnp.bool_(False)))
-        return state, steps
+        Single-query compatibility wrapper: a Q=1 slice of the batched
+        path, bitwise-identical semantics to the pre-batching engine."""
+        state, steps = self.run_batched(program, batch_state(state))
+        return unbatch_state(state), steps[0]
 
     @functools.partial(jax.jit, static_argnums=(0, 1, 2))
-    def run_fixed(self, program: VertexProgram, num_steps: int,
-                  state: State) -> State:
-        """Fixed-iteration algorithms (PageRank)."""
+    def run_fixed_batched(self, program: VertexProgram, num_steps: int,
+                          state: BatchedState) -> BatchedState:
+        """Fixed-iteration algorithms (PageRank), batched over queries."""
         edges = self._edges_or_none(program)
-        step_fn = self._step_fn(program, edges, self._exchange, jnp.all)
+        step_fn = self._step_fn(program, edges, self._exchange,
+                                self._all_finished)
 
         def body(i, state):
             state, _ = step_fn(state, i)
             return state
 
         return jax.lax.fori_loop(0, num_steps, body, state)
+
+    def run_fixed(self, program: VertexProgram, num_steps: int,
+                  state: State) -> State:
+        """Fixed-iteration algorithms (PageRank); Q=1 wrapper."""
+        return unbatch_state(
+            self.run_fixed_batched(program, num_steps, batch_state(state)))
 
 
 class DistributedBSPEngine(BSPEngine):
@@ -774,9 +892,12 @@ class DistributedBSPEngine(BSPEngine):
     # ----------------------------- exchange --------------------------------
 
     def _dist_exchange(self, outbox: Array) -> Array:
-        # outbox: [pl, P, o_max] -> split peer axis across devices, concat the
-        # received blocks on the local-partition axis, then restore layout.
-        pl, peers, o = outbox.shape
+        # outbox: [Q, pl, P, o_max] -> split peer axis across devices, concat
+        # the received blocks on a device axis, then restore layout (a 3-D
+        # input is treated as a single query).
+        if outbox.ndim == 3:
+            return self._dist_exchange(outbox[None])[0]
+        q, pl, peers, o = outbox.shape
         n_dev = self.mesh.shape[self.axis]
         if peers != n_dev * pl:
             raise ValueError(
@@ -786,29 +907,30 @@ class DistributedBSPEngine(BSPEngine):
                 f"host the same number of partitions — repartition so "
                 f"num_parts == {n_dev} × pl")
         # regroup peer axis as (device, local_partition)
-        ob = outbox.reshape(pl, n_dev, pl, o)
-        recv = jax.lax.all_to_all(ob, self.axis, split_axis=1, concat_axis=0,
+        ob = outbox.reshape(q, pl, n_dev, pl, o)
+        recv = jax.lax.all_to_all(ob, self.axis, split_axis=2, concat_axis=0,
                                   tiled=False)
-        # recv: [n_dev, pl, pl, o] with recv[q, my_p?]  — reorder to
-        # inbox[pl_local, P_global, o]
-        recv = recv.transpose(2, 0, 1, 3)  # [pl_dst, n_dev, pl_src, o]
-        return recv.reshape(pl, n_dev * pl, o)
+        # recv: [n_dev, Q, pl_src, pl_dst, o] — reorder to
+        # inbox[Q, pl_local, P_global, o]
+        recv = recv.transpose(1, 3, 0, 2, 4)  # [Q, pl_dst, n_dev, pl_src, o]
+        return recv.reshape(q, pl, n_dev * pl, o)
 
     def _dist_finished(self, fin: Array) -> Array:
-        not_done = jnp.sum(jnp.logical_not(fin).astype(jnp.int32))
+        # fin: [Q] per-shard votes -> [Q] global AND over the mesh axis.
+        not_done = jnp.logical_not(fin).astype(jnp.int32)
         return jax.lax.psum(not_done, self.axis) == 0
 
-    def _validate_state(self, state: State) -> None:
-        """Fail fast on mis-sharded inputs: every [num_parts, ...] leaf must
-        split evenly over the mesh axis (the exchange silently mis-routes
-        otherwise)."""
+    def _validate_state(self, state: BatchedState) -> None:
+        """Fail fast on mis-sharded inputs: every [Q, num_parts, ...] leaf
+        must split evenly over the mesh axis (the exchange silently
+        mis-routes otherwise)."""
         leaves = jax.tree_util.tree_leaves_with_path(state)
         for path, leaf in leaves:
             shape = getattr(leaf, "shape", ())
-            if len(shape) and shape[0] != self.pg.num_parts:
+            if len(shape) >= 2 and shape[1] != self.pg.num_parts:
                 raise ValueError(
-                    f"state leaf {jax.tree_util.keystr(path)} has leading "
-                    f"axis {shape[0]}, expected num_parts="
+                    f"state leaf {jax.tree_util.keystr(path)} has partition "
+                    f"axis {shape[1]}, expected num_parts="
                     f"{self.pg.num_parts}: every device must host the same "
                     f"number of partitions")
 
@@ -833,47 +955,52 @@ class DistributedBSPEngine(BSPEngine):
 
         return edges, make, False
 
-    def run(self, program: VertexProgram, state: State) -> Tuple[State, Array]:
+    def run_batched(self, program: VertexProgram,
+                    state: BatchedState) -> Tuple[BatchedState, Array]:
+        """Advance a [Q, P, ...] batch of queries through one sharded
+        ``lax.while_loop``; the termination vote is a per-query global AND
+        (psum over the mesh axis).  Returns (batched state, steps [Q])."""
         self._validate_state(state)
-        spec = P(self.axis)
+        q = num_queries(state)
+        # State shards on the *partition* axis (axis 1); the query axis is
+        # replicated-free: every device holds all Q rows of its partitions.
+        spec = P(None, self.axis)
+        extra_spec = P(self.axis)
         sharding = jax.sharding.NamedSharding(self.mesh, spec)
         extra, make_step, hybrid = self._dist_step_parts(program)
 
         def local_fn(state, extra):
-            step_fn = make_step(extra)
-
-            def body(carry):
-                st, step, _ = carry
-                st, fin = step_fn(st, step)
-                return st, step + 1, fin
-
-            def cond(carry):
-                _, step, fin = carry
-                return jnp.logical_and(~fin, step < program.max_steps)
-
-            st, steps, _ = jax.lax.while_loop(
-                cond, body, (state, jnp.int32(0), jnp.bool_(False)))
-            return st, steps
+            return _run_batched_loop(make_step(extra), program.max_steps,
+                                     state, q)
 
         sharded = shard_map(
             local_fn, mesh=self.mesh,
             in_specs=(jax.tree.map(lambda _: spec, state),
-                      jax.tree.map(lambda _: spec, extra)),
+                      jax.tree.map(lambda _: extra_spec, extra)),
             out_specs=(jax.tree.map(lambda _: spec, state), P()),
             check_vma=False)
         state = jax.device_put(state, sharding)
         if not hybrid:
-            extra = jax.tree.map(lambda x: jax.device_put(x, sharding), extra)
+            ex_shard = jax.sharding.NamedSharding(self.mesh, extra_spec)
+            extra = jax.tree.map(lambda x: jax.device_put(x, ex_shard),
+                                 extra)
         return jax.jit(sharded)(state, extra)
+
+    def run(self, program: VertexProgram, state: State) -> Tuple[State, Array]:
+        state, steps = self.run_batched(program, batch_state(state))
+        return unbatch_state(state), steps[0]
 
     def superstep(self, program: VertexProgram) -> Callable:
         """One jitted distributed superstep ``f(state, step) -> (state,
-        finished)`` — the benchmarking hook (state is device_put on entry)."""
-        spec = P(self.axis)
+        finished)`` — the benchmarking hook (state is device_put on entry;
+        unbatched contract, runs as a Q=1 batch internally)."""
+        spec = P(None, self.axis)
+        extra_spec = P(self.axis)
         sharding = jax.sharding.NamedSharding(self.mesh, spec)
         extra, make_step, hybrid = self._dist_step_parts(program)
         if not hybrid:
-            extra = jax.tree.map(lambda x: jax.device_put(x, sharding),
+            ex_shard = jax.sharding.NamedSharding(self.mesh, extra_spec)
+            extra = jax.tree.map(lambda x: jax.device_put(x, ex_shard),
                                  extra)
 
         def local_fn(state, extra, step):
@@ -882,17 +1009,20 @@ class DistributedBSPEngine(BSPEngine):
         jitted = {}
 
         def fn(state, step):
+            state = batch_state(state)
             self._validate_state(state)
             key = jax.tree_util.tree_structure(state)
             if key not in jitted:
                 sharded = shard_map(
                     local_fn, mesh=self.mesh,
                     in_specs=(jax.tree.map(lambda _: spec, state),
-                              jax.tree.map(lambda _: spec, extra), P()),
+                              jax.tree.map(lambda _: extra_spec, extra),
+                              P()),
                     out_specs=(jax.tree.map(lambda _: spec, state), P()),
                     check_vma=False)
                 jitted[key] = jax.jit(sharded)
             state = jax.device_put(state, sharding)
-            return jitted[key](state, extra, step)
+            out, fin = jitted[key](state, extra, step)
+            return unbatch_state(out), fin[0]
 
         return fn

@@ -187,22 +187,30 @@ def hybrid_spmv(dense: jax.Array, ell_col: jax.Array, ell_val: jax.Array,
 
     The dense H×H block runs on the MXU path (plus_times) or its tropical
     twin (min_plus/min); the remainder streams through the ELL kernel.  ``x``
-    is the per-source value vector in hybrid (degree-ranked) id space.
+    is the per-source value vector in hybrid (degree-ranked) id space — or a
+    ``[Q, n]`` *query batch* of such vectors, in which case the batch rides
+    the MXU's M axis (SpMV becomes SpMM: Q concurrent traversals amortize
+    one pass over the resident adjacency) and the ELL kernel's leading grid
+    axis; returns ``[Q, n]``.
     """
     ident = add_identity(semiring)
-    xs = jnp.concatenate([x, jnp.full((1,), ident, x.dtype)])
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+    q = x.shape[0]
+    xs = jnp.concatenate([x, jnp.full((q, 1), ident, x.dtype)], axis=1)
     y = kops.ell_spmv_op(ell_col, ell_val, xs, semiring=semiring,
                          interpret=interpret)
     if k_dense:
         if semiring == PLUS_TIMES:
-            yh = kops.dense_spmv_op(x[None, :k_dense], dense,
-                                    interpret=interpret)[0]
-            y = y.at[:k_dense].add(yh)
+            yh = kops.dense_spmv_op(x[:, :k_dense], dense,
+                                    interpret=interpret)
+            y = y.at[:, :k_dense].add(yh)
         else:
-            yh = kops.dense_spmv_minplus_op(x[None, :k_dense], dense,
-                                            interpret=interpret)[0]
-            y = y.at[:k_dense].min(yh)
-    return y
+            yh = kops.dense_spmv_minplus_op(x[:, :k_dense], dense,
+                                            interpret=interpret)
+            y = y.at[:, :k_dense].min(yh)
+    return y[0] if squeeze else y
 
 
 # ---------------------------------------------------------------------------

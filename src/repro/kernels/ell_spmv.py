@@ -20,6 +20,12 @@ and x's sink entry carries the ⊕-identity (0/+inf), so padding never
 contributes.  ``combine="sum"|"min"`` remains as a back-compat alias for
 ``plus_times``/``min_plus``.
 
+The value vector carries a leading **query-batch axis**: ``x[Q, x_len]`` →
+``y[Q, V]``.  The topology (``col``/``val``) is shared across the batch —
+the grid is ``(Q, V/block_v)`` with the batch axis outermost, so each
+query's x row stays VMEM-resident while its row blocks stream through; the
+adjacency HBM traffic is paid once per query, never duplicated per edge.
+
 TPU note: the row gather ``x[col_block]`` lowers to Mosaic's 32-bit dynamic
 VMEM gather on v4+; on older targets the fallback is a one-hot matmul
 (``dense_spmv`` path).  Validated here with interpret=True per task spec.
@@ -36,24 +42,24 @@ from jax.experimental import pallas as pl
 def _ell_kernel_sum(col_ref, val_ref, x_ref, o_ref):
     cols = col_ref[...]                      # [bv, K] int32
     vals = val_ref[...]                      # [bv, K]
-    x = x_ref[...]                           # [x_len] (VMEM resident)
+    x = x_ref[0]                             # [x_len]: this query's row
     gathered = jnp.take(x, cols, axis=0)     # [bv, K]
-    o_ref[...] = jnp.sum(gathered * vals, axis=1)
+    o_ref[...] = jnp.sum(gathered * vals, axis=1)[None]
 
 
 def _ell_kernel_min_plus(col_ref, val_ref, x_ref, o_ref):
     cols = col_ref[...]
     vals = val_ref[...]
-    x = x_ref[...]
+    x = x_ref[0]
     gathered = jnp.take(x, cols, axis=0)
-    o_ref[...] = jnp.min(gathered + vals, axis=1)
+    o_ref[...] = jnp.min(gathered + vals, axis=1)[None]
 
 
 def _ell_kernel_min(col_ref, val_ref, x_ref, o_ref):
     del val_ref                              # pure propagation: no ⊗
     cols = col_ref[...]
-    x = x_ref[...]
-    o_ref[...] = jnp.min(jnp.take(x, cols, axis=0), axis=1)
+    x = x_ref[0]
+    o_ref[...] = jnp.min(jnp.take(x, cols, axis=0), axis=1)[None]
 
 
 # semiring → (kernel, ⊕ name, ⊕ identity, ⊗ identity for sentinel slots)
@@ -80,25 +86,29 @@ def resolve_semiring(combine: str | None, semiring: str | None) -> str:
 def ell_spmv(col: jax.Array, val: jax.Array, x: jax.Array, *,
              combine: str | None = None, semiring: str | None = None,
              block_v: int = 512, interpret: bool = False) -> jax.Array:
-    """ELL SpMV over a row-blocked grid.
+    """ELL SpMV over a (query, row-block) grid.
 
-    col: [V, K] int32 neighbour ids into ``x``; val: [V, K]; x: [x_len].
-    Returns y: [V] f32.  V must be a multiple of block_v (ops.py pads).
+    col: [V, K] int32 neighbour ids into ``x``; val: [V, K]; x: [Q, x_len]
+    (the query-batch axis; topology is shared across it).  Returns
+    y: [Q, V] f32.  V must be a multiple of block_v (ops.py pads).
     """
     v, k = col.shape
+    q = x.shape[0]
     assert val.shape == (v, k)
+    assert x.ndim == 2, "ops.ell_spmv_op adds the query-batch axis"
     assert v % block_v == 0, "ops.ell_spmv_op pads to block multiples"
     kernel = SEMIRINGS[resolve_semiring(combine, semiring)][0]
-    grid = (v // block_v,)
+    grid = (q, v // block_v)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_v, k), lambda i: (i, 0)),
-            pl.BlockSpec((block_v, k), lambda i: (i, 0)),
-            pl.BlockSpec(x.shape, lambda i: (0,)),   # whole x, VMEM resident
+            pl.BlockSpec((block_v, k), lambda b, i: (i, 0)),
+            pl.BlockSpec((block_v, k), lambda b, i: (i, 0)),
+            # one query's x row, VMEM resident across its row blocks
+            pl.BlockSpec((1, x.shape[1]), lambda b, i: (b, 0)),
         ],
-        out_specs=pl.BlockSpec((block_v,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((v,), jnp.float32),
+        out_specs=pl.BlockSpec((1, block_v), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((q, v), jnp.float32),
         interpret=interpret,
     )(col, val, x)

@@ -25,8 +25,16 @@ grid cell without ever leaving VMEM:
      ``[span]`` partials per block.
 
 The ``[be]`` messages exist only between steps 2 and 3 in VMEM; the kernel's
-HBM output is the ``[Pl, nb, span]`` partials array (merged by a tiny static
-segment reduce in ops.py — phase 2 of the two-phase scheme).
+HBM output is the ``[Q, Pl, nb, span]`` partials array (merged by a tiny
+static segment reduce in ops.py — phase 2 of the two-phase scheme).
+
+**Query-batch axis**: vertex state and per-partition scalars carry a leading
+``Q`` axis (``vstate[Q, Pl, K, v_pad]``, ``scal[Q, Pl, S]``) and the grid is
+``(Q, Pl, nb)`` with the batch outermost.  The edge topology
+(``src``/``local``/``mask``/``weight``) stays ``[Pl, e_pad]`` — its block
+index maps ignore the query coordinate, so a batch of Q concurrent
+traversals reuses one copy of the graph structure; only the message values
+grow with Q.
 """
 from __future__ import annotations
 
@@ -40,17 +48,17 @@ from jax.experimental import pallas as pl
 def _gather_state(vstate_ref, src, *, gather_chunk: int):
     """Per-edge source-state gather from the VMEM state block.
 
-    vstate_ref: [1, K, v_pad] ref; src: [be] int32.  Returns [be, K] f32.
-    Chunked over v_pad so the one-hot select never materializes a full
-    [be, v_pad] matrix in VMEM.
+    vstate_ref: [1, 1, K, v_pad] ref (one query's slice of one partition);
+    src: [be] int32.  Returns [be, K] f32.  Chunked over v_pad so the
+    one-hot select never materializes a full [be, v_pad] matrix in VMEM.
     """
-    k = vstate_ref.shape[1]
-    v_pad = vstate_ref.shape[2]
+    k = vstate_ref.shape[2]
+    v_pad = vstate_ref.shape[3]
     be = src.shape[0]
 
     def body(c, acc):
         off = c * gather_chunk
-        chunk = vstate_ref[0, :, pl.ds(off, gather_chunk)]      # [K, chunk]
+        chunk = vstate_ref[0, 0, :, pl.ds(off, gather_chunk)]   # [K, chunk]
         hit = (src[:, None] == off +
                jax.lax.broadcasted_iota(jnp.int32, (1, gather_chunk), 1))
         vals = jnp.where(hit[:, None, :], chunk[None, :, :], -jnp.inf)
@@ -71,8 +79,8 @@ def _fused_kernel(scal_ref, vstate_ref, src_ref, local_ref, mask_ref, *rest,
     src = src_ref[0]                                     # [be] int32
     gathered = _gather_state(vstate_ref, src, gather_chunk=gather_chunk)
     vals = tuple(gathered[:, i] for i in range(gathered.shape[1]))
-    step = scal_ref[0, 0]
-    consts = tuple(scal_ref[0, 1 + i] for i in range(n_consts))
+    step = scal_ref[0, 0, 0]
+    consts = tuple(scal_ref[0, 0, 1 + i] for i in range(n_consts))
     weight = weight_ref[0] if has_weight else None
 
     msgs = msg_fn(vals, weight, (step,) + consts).astype(jnp.float32)
@@ -86,10 +94,10 @@ def _fused_kernel(scal_ref, vstate_ref, src_ref, local_ref, mask_ref, *rest,
         onehot = hit.astype(jnp.float32)                 # [be, span]
         o_ref[...] = jax.lax.dot_general(
             msgs[None, :], onehot, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)[None]
+            preferred_element_type=jnp.float32)[None, None]
     else:
         picked = jnp.where(hit, msgs[:, None], jnp.inf)
-        o_ref[...] = jnp.min(picked, axis=0)[None, None]
+        o_ref[...] = jnp.min(picked, axis=0)[None, None, None]
 
 
 @functools.partial(jax.jit,
@@ -103,17 +111,18 @@ def fused_superstep_blocks(vstate: jax.Array, scal: jax.Array,
                            interpret: bool = False) -> jax.Array:
     """Phase-1 fused partials.
 
-    vstate: [Pl, K, v_pad] f32 (v_pad % gather_chunk == 0); scal: [Pl, S] f32
-    with scal[:, 0] = superstep and scal[:, 1:] per-partition consts;
-    src/local/mask (int32) and weight (f32 or None): [Pl, e_pad] with
-    e_pad % block_e == 0.  ``msg_fn(vals_tuple, weight, scal_tuple) -> [be]``
-    must be elementwise/broadcast-safe.  Returns [Pl, e_pad/block_e, span].
+    vstate: [Q, Pl, K, v_pad] f32 (v_pad % gather_chunk == 0); scal:
+    [Q, Pl, S] f32 with scal[..., 0] = superstep and scal[..., 1:] per-query
+    per-partition consts; src/local/mask (int32) and weight (f32 or None):
+    [Pl, e_pad] with e_pad % block_e == 0 — shared across the query batch.
+    ``msg_fn(vals_tuple, weight, scal_tuple) -> [be]`` must be
+    elementwise/broadcast-safe.  Returns [Q, Pl, e_pad/block_e, span].
     """
-    pl_count, _, v_pad = vstate.shape
+    q, pl_count, _, v_pad = vstate.shape
     e_pad = src.shape[1]
     assert e_pad % block_e == 0 and v_pad % gather_chunk == 0
     nb = e_pad // block_e
-    n_scal = scal.shape[1]
+    n_scal = scal.shape[2]
     has_weight = weight is not None
 
     kernel = functools.partial(
@@ -121,10 +130,12 @@ def fused_superstep_blocks(vstate: jax.Array, scal: jax.Array,
         gather_chunk=gather_chunk, n_consts=n_scal - 1,
         has_weight=has_weight)
 
-    edge_spec = pl.BlockSpec((1, block_e), lambda p, b: (p, b))
+    # Topology blocks ignore the query coordinate: one copy serves all Q.
+    edge_spec = pl.BlockSpec((1, block_e), lambda s, p, b: (p, b))
     in_specs = [
-        pl.BlockSpec((1, n_scal), lambda p, b: (p, 0)),
-        pl.BlockSpec((1, vstate.shape[1], v_pad), lambda p, b: (p, 0, 0)),
+        pl.BlockSpec((1, 1, n_scal), lambda s, p, b: (s, p, 0)),
+        pl.BlockSpec((1, 1, vstate.shape[2], v_pad),
+                     lambda s, p, b: (s, p, 0, 0)),
         edge_spec, edge_spec, edge_spec,
     ]
     args = [scal, vstate, src, local, mask]
@@ -134,9 +145,9 @@ def fused_superstep_blocks(vstate: jax.Array, scal: jax.Array,
 
     return pl.pallas_call(
         kernel,
-        grid=(pl_count, nb),
+        grid=(q, pl_count, nb),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, span), lambda p, b: (p, b, 0)),
-        out_shape=jax.ShapeDtypeStruct((pl_count, nb, span), jnp.float32),
+        out_specs=pl.BlockSpec((1, 1, 1, span), lambda s, p, b: (s, p, b, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, pl_count, nb, span), jnp.float32),
         interpret=interpret,
     )(*args)

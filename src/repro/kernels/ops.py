@@ -126,19 +126,26 @@ def ell_spmv_op(col: jax.Array, val: jax.Array, x: jax.Array, *,
                 combine: str | None = None, semiring: str | None = None,
                 block_v: int = 512,
                 interpret: bool | None = None) -> jax.Array:
-    """ELL SpMV for arbitrary V; pads rows to the block size."""
+    """ELL SpMV for arbitrary V; pads rows to the block size.
+
+    ``x`` may be ``[x_len]`` (one query, returns ``[V]``) or ``[Q, x_len]``
+    (query batch, returns ``[Q, V]``); the topology is shared across Q.
+    """
     if interpret is None:
         interpret = _interpret_default()
     sr = _ell.resolve_semiring(combine, semiring)
     v = col.shape[0]
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
     bv = min(block_v, max(8, 1 << (v - 1).bit_length()))
     mul_ident = _ell.SEMIRINGS[sr][3]
-    sentinel = x.shape[0] - 1  # callers append the ⊕-identity slot
+    sentinel = x.shape[1] - 1  # callers append the ⊕-identity slot
     colp = _pad_to(col, bv, 0, value=sentinel)
     valp = _pad_to(val, bv, 0, value=mul_ident)
     y = _ell.ell_spmv(colp, valp, x, semiring=sr, block_v=bv,
-                      interpret=interpret)
-    return y[:v]
+                      interpret=interpret)[:, :v]
+    return y[0] if squeeze else y
 
 
 # ---------------------------------------------------------------------------
@@ -234,13 +241,15 @@ def outbox_reduce_op(x: jax.Array, src: jax.Array, local: jax.Array,
                      interpret: bool | None = None) -> jax.Array:
     """Reduce boundary messages into the flat outbox-slot space.
 
-    ``x`` is one shard's per-vertex message vector (+ identity sink at the
-    end); ``src``/``local``/``mask``/``base``/``weight`` follow
+    ``x`` is one shard's per-query per-vertex message matrix ``[Q, x_len]``
+    (+ identity sink at the end of each row; a 1-D ``x`` is treated as
+    ``Q=1``); ``src``/``local``/``mask``/``base``/``weight`` follow
     ``hybrid.shard_degree_split`` — boundary edges sorted by flat slot id
     with per-block base/local offsets, arriving as *operands* so each shard
-    carries its own maps under ``shard_map``.  ``weight_op`` is the
-    EdgeMessage's ⊗ ("add"/"mul"/None).  Returns the [num_slots] aggregated
-    outbox (⊕-identity for unused slots).
+    carries its own maps under ``shard_map`` (and shared across the query
+    batch).  ``weight_op`` is the EdgeMessage's ⊗ ("add"/"mul"/None).
+    Returns the [Q, num_slots] aggregated outboxes (⊕-identity for unused
+    slots), or [num_slots] for 1-D input.
 
     Falls back to the plain gather → ``jax.ops.segment_*`` chain when the
     static ``span`` bound exceeds ``max_span`` or the VMEM budget for the
@@ -253,8 +262,13 @@ def outbox_reduce_op(x: jax.Array, src: jax.Array, local: jax.Array,
         interpret = _interpret_default()
     ident = 0.0 if combine == "sum" else jnp.inf
     seg_op = jax.ops.segment_sum if combine == "sum" else jax.ops.segment_min
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+    q = x.shape[0]
     e_pad = src.shape[0]
     nb = e_pad // block_e
+    q_offs = (jnp.arange(q, dtype=jnp.int32) * (num_slots + 1))
 
     def apply_weight(msgs):
         if weight_op == "add":
@@ -266,26 +280,30 @@ def outbox_reduce_op(x: jax.Array, src: jax.Array, local: jax.Array,
     if span > fused_span_limit(block_e, combine, max_span):
         # Reference chain: reconstruct flat slot ids from base + local.
         ids = (jnp.repeat(base, block_e) + local).astype(jnp.int32)
-        msgs = apply_weight(jnp.take(x, src, axis=0))
+        msgs = apply_weight(jnp.take(x, src, axis=1))       # [Q, e_pad]
         msgs = jnp.where(mask > 0, msgs, ident)
-        acc = seg_op(msgs, jnp.minimum(ids, num_slots),
-                     num_segments=num_slots + 1)
-        return acc[:num_slots]
+        ids = jnp.minimum(ids, num_slots)[None] + q_offs[:, None]
+        acc = seg_op(msgs.ravel(), ids.ravel(),
+                     num_segments=q * (num_slots + 1))
+        acc = acc.reshape(q, num_slots + 1)[:, :num_slots]
+        return acc[0] if squeeze else acc
 
-    x_pad = _pad_to(x, gather_chunk, 0, value=ident)
+    x_pad = _pad_to(x, gather_chunk, 1, value=ident)
     partials = _obox.outbox_reduce_blocks(
         x_pad, src, local, mask,
         weight if weight_op is not None else None, combine=combine,
         weight_op=weight_op, span=span, block_e=block_e,
-        gather_chunk=gather_chunk, interpret=interpret)     # [nb, span]
+        gather_chunk=gather_chunk, interpret=interpret)     # [Q, nb, span]
 
     # phase 2: merge block partials (blocks may share a boundary slot);
     # span overhang past the slot space drops into a sink.
     ids = jnp.minimum(base[:, None] + jnp.arange(span, dtype=jnp.int32),
-                      num_slots)
-    acc = seg_op(partials.reshape(nb * span), ids.reshape(nb * span),
-                 num_segments=num_slots + 1)
-    return acc[:num_slots]
+                      num_slots)                            # [nb, span]
+    ids = ids[None] + q_offs[:, None, None]
+    acc = seg_op(partials.ravel(), ids.ravel(),
+                 num_segments=q * (num_slots + 1))
+    acc = acc.reshape(q, num_slots + 1)[:, :num_slots]
+    return acc[0] if squeeze else acc
 
 
 # ---------------------------------------------------------------------------
@@ -319,16 +337,17 @@ def fused_superstep_op(msg_fn, vstate: jax.Array, weight, scal: jax.Array,
                        block_e: int = 1024, max_span: int = 4096,
                        gather_chunk: int = 256,
                        interpret: bool | None = None) -> jax.Array:
-    """Fused compute phase: per-partition accumulator [Pl, num_segments].
+    """Fused compute phase: per-query accumulator [Q, Pl, num_segments].
 
     Inputs follow ``partition.build_block_metadata``: ``vstate`` is the
-    stacked [Pl, K, v_pad] gathered-state matrix, ``scal`` [Pl, S] carries
-    (step, *per-partition consts), ``src``/``local``/``mask`` are the
-    [Pl, e_pad] block arrays, ``base`` [Pl, nb] the per-block segment bases,
-    and ``span``/``block_e`` their static geometry.  ``msg_fn(vals, weight,
-    scals) -> msgs`` is elementwise/broadcast-safe, so the same callable runs
-    on [be]-shaped values inside the kernel and on [Pl, e_max]-shaped values
-    in the fallback.
+    stacked [Q, Pl, K, v_pad] gathered-state matrix, ``scal`` [Q, Pl, S]
+    carries (step, *per-query per-partition consts), ``src``/``local``/
+    ``mask`` are the [Pl, e_pad] block arrays (shared across the query
+    batch), ``base`` [Pl, nb] the per-block segment bases, and
+    ``span``/``block_e`` their static geometry.  ``msg_fn(vals, weight,
+    scals) -> msgs`` is elementwise/broadcast-safe, so the same callable
+    runs on [be]-shaped values inside the kernel and on
+    [Q, Pl, e_max]-shaped values in the fallback.
 
     Falls back to the reference gather → message → ``jax.ops.segment_*``
     chain when the measured block span exceeds ``fused_span_limit`` — either
@@ -340,36 +359,38 @@ def fused_superstep_op(msg_fn, vstate: jax.Array, weight, scal: jax.Array,
 
     if interpret is None:
         interpret = _interpret_default()
-    pl_count = vstate.shape[0]
+    q, pl_count = vstate.shape[0], vstate.shape[1]
     ident = 0.0 if combine == "sum" else jnp.inf
     seg_op = jax.ops.segment_sum if combine == "sum" else jax.ops.segment_min
 
     if span > fused_span_limit(block_e, combine, max_span):
         # Reference path expressed through the elementwise form.
         e_max = dst_ext.shape[1]
+        src_b = jnp.broadcast_to(src[None, :, :e_max], (q, pl_count, e_max))
         vals = tuple(
-            jnp.take_along_axis(vstate[:, k_, :], src[:, :e_max], axis=1)
-            for k_ in range(vstate.shape[1]))
-        scals = tuple(scal[:, j:j + 1] for j in range(scal.shape[1]))
+            jnp.take_along_axis(vstate[:, :, k_, :], src_b, axis=2)
+            for k_ in range(vstate.shape[2]))
+        scals = tuple(scal[:, :, j:j + 1] for j in range(scal.shape[2]))
         w = weight[:, :e_max] if weight is not None else None
         msgs = msg_fn(vals, w, scals).astype(jnp.float32)
         msgs = jnp.where(mask[:, :e_max] > 0, msgs, ident)
-        offs = jnp.arange(pl_count, dtype=jnp.int32)[:, None] * num_segments
-        acc = seg_op(msgs.ravel(), (dst_ext + offs).ravel(),
-                     num_segments=pl_count * num_segments)
-        return acc.reshape(pl_count, num_segments)
+        offs = (jnp.arange(q * pl_count, dtype=jnp.int32)
+                * num_segments).reshape(q, pl_count, 1)
+        acc = seg_op(msgs.ravel(), (dst_ext[None] + offs).ravel(),
+                     num_segments=q * pl_count * num_segments)
+        return acc.reshape(q, pl_count, num_segments)
 
     partials = _fused.fused_superstep_blocks(
         vstate, scal, src, local, mask, weight, msg_fn=msg_fn,
         combine=combine, span=span, block_e=block_e,
-        gather_chunk=gather_chunk, interpret=interpret)  # [Pl, nb, span]
+        gather_chunk=gather_chunk, interpret=interpret)  # [Q, Pl, nb, span]
 
     # phase 2: merge block partials (blocks may share boundary segments);
     # ids past the segment space (base + span overhang) drop into a sink.
     ids = jnp.minimum(base[:, :, None] + jnp.arange(span, dtype=jnp.int32),
-                      num_segments)
-    offs = (jnp.arange(pl_count, dtype=jnp.int32) *
-            (num_segments + 1))[:, None, None]
-    acc = seg_op(partials.ravel(), (ids + offs).ravel(),
-                 num_segments=pl_count * (num_segments + 1))
-    return acc.reshape(pl_count, num_segments + 1)[:, :num_segments]
+                      num_segments)                      # [Pl, nb, span]
+    offs = (jnp.arange(q * pl_count, dtype=jnp.int32) *
+            (num_segments + 1)).reshape(q, pl_count, 1, 1)
+    acc = seg_op(partials.ravel(), (ids[None] + offs).ravel(),
+                 num_segments=q * pl_count * (num_segments + 1))
+    return acc.reshape(q, pl_count, num_segments + 1)[:, :, :num_segments]

@@ -24,6 +24,12 @@ exchange afterwards moves ``β_with_reduction·|E|`` aggregated slot values
 instead of per-edge messages.  Slot ids/bases arrive as *operands* (not
 trace constants): under ``shard_map`` every shard carries its own static
 maps, stacked on the mesh axis.
+
+The message vector carries a leading **query-batch axis**: ``x[Q, x_pad]``
+→ ``[Q, nb, span]`` partials over a ``(Q, nb)`` grid.  The boundary maps
+(``src``/``local``/``mask``/``weight``) are shared across the batch — a
+batch of Q concurrent queries aggregates Q outboxes against one copy of
+the slot topology.
 """
 from __future__ import annotations
 
@@ -37,16 +43,16 @@ from jax.experimental import pallas as pl
 def _gather_x(x_ref, src, *, gather_chunk: int):
     """Per-edge gather from the VMEM-resident message vector.
 
-    x_ref: [x_pad] ref (x_pad % gather_chunk == 0); src: [be] int32.
-    Masked-max one-hot select, chunked so the [be, chunk] hit matrix never
-    grows to [be, x_pad].
+    x_ref: [1, x_pad] ref (one query's row; x_pad % gather_chunk == 0);
+    src: [be] int32.  Masked-max one-hot select, chunked so the [be, chunk]
+    hit matrix never grows to [be, x_pad].
     """
-    x_pad = x_ref.shape[0]
+    x_pad = x_ref.shape[1]
     be = src.shape[0]
 
     def body(c, acc):
         off = c * gather_chunk
-        chunk = x_ref[pl.ds(off, gather_chunk)]              # [chunk]
+        chunk = x_ref[0, pl.ds(off, gather_chunk)]           # [chunk]
         hit = (src[:, None] == off +
                jax.lax.broadcasted_iota(jnp.int32, (1, gather_chunk), 1))
         vals = jnp.where(hit, chunk[None, :], -jnp.inf)
@@ -79,10 +85,10 @@ def _outbox_kernel(x_ref, src_ref, local_ref, mask_ref, *rest,
         o_ref[...] = jax.lax.dot_general(
             msgs[None, :], hit.astype(jnp.float32),
             (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+            preferred_element_type=jnp.float32)[None]
     else:
         picked = jnp.where(hit, msgs[:, None], jnp.inf)
-        o_ref[...] = jnp.min(picked, axis=0)[None]
+        o_ref[...] = jnp.min(picked, axis=0)[None, None]
 
 
 @functools.partial(jax.jit,
@@ -95,20 +101,24 @@ def outbox_reduce_blocks(x: jax.Array, src: jax.Array, local: jax.Array,
                          interpret: bool = False) -> jax.Array:
     """Phase-1 outbox partials.
 
-    x: [x_pad] f32 (x_pad % gather_chunk == 0); src/local/mask (int32) and
-    weight (f32 or None): [e_pad] with e_pad % block_e == 0.  Returns
-    [e_pad/block_e, span] per-block slot partials (phase 2 in ops.py merges
-    blocks sharing a boundary slot).
+    x: [Q, x_pad] f32 (x_pad % gather_chunk == 0); src/local/mask (int32)
+    and weight (f32 or None): [e_pad] with e_pad % block_e == 0 — shared
+    across the query batch.  Returns [Q, e_pad/block_e, span] per-block
+    slot partials (phase 2 in ops.py merges blocks sharing a boundary
+    slot).
     """
     e_pad = src.shape[0]
-    assert e_pad % block_e == 0 and x.shape[0] % gather_chunk == 0
+    q = x.shape[0]
+    assert x.ndim == 2, "ops.outbox_reduce_op adds the query-batch axis"
+    assert e_pad % block_e == 0 and x.shape[1] % gather_chunk == 0
     nb = e_pad // block_e
 
     kernel = functools.partial(_outbox_kernel, combine=combine,
                                weight_op=weight_op, span=span,
                                gather_chunk=gather_chunk)
-    edge_spec = pl.BlockSpec((block_e,), lambda b: (b,))
-    in_specs = [pl.BlockSpec(x.shape, lambda b: (0,)),   # x VMEM resident
+    # Boundary-map blocks ignore the query coordinate: one copy serves all Q.
+    edge_spec = pl.BlockSpec((block_e,), lambda s, b: (b,))
+    in_specs = [pl.BlockSpec((1, x.shape[1]), lambda s, b: (s, 0)),
                 edge_spec, edge_spec, edge_spec]
     args = [x, src, local, mask]
     if weight_op is not None:
@@ -117,9 +127,9 @@ def outbox_reduce_blocks(x: jax.Array, src: jax.Array, local: jax.Array,
 
     return pl.pallas_call(
         kernel,
-        grid=(nb,),
+        grid=(q, nb),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, span), lambda b: (b, 0)),
-        out_shape=jax.ShapeDtypeStruct((nb, span), jnp.float32),
+        out_specs=pl.BlockSpec((1, 1, span), lambda s, b: (s, b, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, nb, span), jnp.float32),
         interpret=interpret,
     )(*args)

@@ -1,0 +1,204 @@
+"""Batched-query axis == sequential per-query runs, for every algorithm.
+
+The query-batch refactor must be a pure *throughput* substitution: a batch
+of Q queries through one ``run_batched`` while_loop has to reproduce Q
+sequential single-source runs exactly — per backend {reference, fused,
+hybrid}, under ``DistributedBSPEngine`` on {1, 2, 4} forced host devices
+(subprocess selftest, so the device count never leaks), with mixed
+convergence (early-finishing queries freeze while others continue) and the
+Q=1 no-regression case.  ``bc_exact``'s chunked batched execution is held
+to *bitwise* parity with the old per-source loop.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core import partition as PT
+from repro.core.bsp import BSPEngine
+from repro.algorithms import (bc_exact, bc_exact_sequential,
+                              betweenness_centrality,
+                              betweenness_centrality_batched, bfs,
+                              bfs_batched, personalized_pagerank,
+                              personalized_pagerank_reference, sssp,
+                              sssp_batched)
+
+INTERP = dict(interpret=True)
+SCALE = 9
+PARTS = 4
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+BACKENDS = {
+    "reference": dict(),
+    "fused": dict(fused=True, block_e=256),
+    "hybrid": dict(backend="hybrid"),
+}
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return G.rmat(SCALE, 4, seed=13).with_uniform_weights(seed=1)
+
+
+@pytest.fixture(scope="module", params=sorted(BACKENDS))
+def named_engine(request, graph):
+    pg = PT.partition(graph, PARTS, PT.HIGH, include_reverse=True)
+    return request.param, BSPEngine(pg, **BACKENDS[request.param], **INTERP)
+
+
+@pytest.fixture(scope="module")
+def engine(named_engine):
+    return named_engine[1]
+
+
+@pytest.fixture(scope="module")
+def sources(graph):
+    # Hub + low-degree tail + randoms: eccentricities differ, so the batch
+    # exercises mixed convergence on every backend.
+    deg = graph.out_degrees()
+    rng = np.random.default_rng(3)
+    return np.unique(np.concatenate(
+        [[np.argmax(deg), np.argmin(deg)],
+         rng.integers(0, graph.num_vertices, size=4)]))[:4]
+
+
+def test_bfs_batched_matches_sequential(engine, sources):
+    levels, steps = bfs_batched(engine, sources)
+    assert len(set(int(s) for s in steps)) > 1, \
+        f"sources should converge at different supersteps, got {steps}"
+    for i, s in enumerate(sources):
+        want, want_steps = bfs(engine, int(s))
+        np.testing.assert_array_equal(levels[i], want)   # min: exact
+        assert int(steps[i]) == want_steps
+
+
+def test_sssp_batched_matches_sequential(engine, sources):
+    dists, steps = sssp_batched(engine, sources)
+    for i, s in enumerate(sources):
+        want, want_steps = sssp(engine, int(s))
+        np.testing.assert_array_equal(dists[i], want)    # min: exact
+        assert int(steps[i]) == want_steps
+
+
+def test_bc_batched_matches_sequential(named_engine, sources):
+    name, engine = named_engine
+    bcs, _ = betweenness_centrality_batched(engine, sources)
+    for i, s in enumerate(sources):
+        want, _ = betweenness_centrality(engine, int(s))
+        if name == "hybrid":
+            # The dense MXU block contracts [Q, K] @ [K, K]: a different M
+            # legitimately reassociates the f32 K-reduction.
+            np.testing.assert_allclose(bcs[i], want, rtol=1e-5, atol=1e-5)
+        else:
+            # reference/fused reduce per query in an M-independent order.
+            np.testing.assert_array_equal(bcs[i], want)
+
+
+def test_ppr_batched_matches_oracle_and_q1(engine, graph, sources):
+    rng = np.random.default_rng(7)
+    reset = rng.random((len(sources), graph.num_vertices)).astype(np.float32)
+    reset /= reset.sum(axis=1, keepdims=True)
+    got = personalized_pagerank(engine, reset, num_iterations=8)
+    want = personalized_pagerank_reference(graph, reset, num_iterations=8)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-7)
+    # Q=1 slices of the batch == independent Q=1 runs (no cross-query talk;
+    # tight allclose — the hybrid dense block's M axis reassociates f32).
+    one = personalized_pagerank(engine, reset[:1], num_iterations=8)
+    np.testing.assert_allclose(got[0], one[0], rtol=1e-6, atol=1e-9)
+
+
+def test_q1_matches_batched_row(engine, sources):
+    """Q=1 no-regression: a batch of identical queries is Q copies of the
+    single-query result, and the Q=1 batch equals the public bfs()."""
+    s = int(sources[0])
+    levels, steps = bfs_batched(engine, [s, s, s])
+    want, want_steps = bfs(engine, s)
+    for i in range(3):
+        np.testing.assert_array_equal(levels[i], want)
+        assert int(steps[i]) == want_steps
+
+
+def test_mixed_convergence_freezes_early_finishers():
+    """A query in a 2-vertex islet finishes supersteps before a main-
+    component query; its state must freeze bitwise at its own fixpoint."""
+    base = G.rmat(8, 4, seed=5)
+    n = base.num_vertices
+    src = np.concatenate([base.edge_sources(), [n, n + 1]])
+    dst = np.concatenate([base.col, [n + 1, n]])
+    g = G.from_edge_list(src, dst, n + 2)
+    eng = BSPEngine(PT.partition(g, 2, PT.RAND), **INTERP)
+    hub = int(np.argmax(g.out_degrees()))
+    levels, steps = bfs_batched(eng, [n, hub])
+    assert int(steps[0]) < int(steps[1])
+    for i, s in enumerate([n, hub]):
+        want, want_steps = bfs(eng, s)
+        np.testing.assert_array_equal(levels[i], want)
+        assert int(steps[i]) == want_steps
+
+
+def test_bc_exact_bitwise_parity_with_sequential_loop():
+    """The chunked batched all-sources path == the old O(|V|)-dispatch
+    loop, bitwise (including a padded tail chunk)."""
+    g = G.rmat(6, 4, seed=11)
+    eng = BSPEngine(PT.partition(g, 2, PT.RAND, include_reverse=True),
+                    **INTERP)
+    got = bc_exact(eng, chunk=24)          # 64 sources -> 2 full + padded
+    want = bc_exact_sequential(eng)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bc_exact_single_chunk_and_default():
+    g = G.rmat(6, 4, seed=11)
+    eng = BSPEngine(PT.partition(g, 2, PT.HIGH, include_reverse=True),
+                    **INTERP)
+    np.testing.assert_array_equal(bc_exact(eng, chunk=None),
+                                  bc_exact_sequential(eng))
+
+
+def test_batched_runs_do_not_retrace():
+    """Two same-Q batches with different sources must share one compiled
+    while_loop (the serving contract: no per-query / per-batch retrace)."""
+    g = G.rmat(8, 4, seed=2)
+    eng = BSPEngine(PT.partition(g, 2, PT.RAND), **INTERP)
+    bfs_batched(eng, [0, 1, 2, 3])                       # compiles
+    before = BSPEngine.run_batched._cache_size()
+    bfs_batched(eng, [4, 5, 6, 7])
+    bfs_batched(eng, [9, 8, 7, 6])
+    assert BSPEngine.run_batched._cache_size() == before
+
+
+def test_graph_serve_smoke(tmp_path):
+    """The serving driver drains a stream end to end with zero retraces."""
+    from repro.launch.graph_serve import main
+
+    out = tmp_path / "serve.json"
+    assert main(["--smoke", "--alg", "bfs", "--backend", "reference",
+                 "--out", str(out)]) == 0
+    import json
+    rep = json.loads(out.read_text())
+    assert rep["retraces"] == 0
+    assert rep["queries_per_sec"] > 0
+    assert rep["batches"] * rep["batch"] >= rep["num_queries"]
+
+
+def _run(ndev: int, module: str, *args, timeout=900):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={ndev}",
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH",
+                                                            ""))
+    return subprocess.run([sys.executable, "-m", module, *args],
+                          capture_output=True, text=True, env=env,
+                          timeout=timeout)
+
+
+@pytest.mark.parametrize("ndev", [1, 2, 4])
+def test_distributed_batched_parity(ndev):
+    """bfs/sssp/bc/ppr batched through DistributedBSPEngine (fused +
+    hybrid) vs the sequential single-device reference."""
+    r = _run(ndev, "repro.launch.batched_selftest", "--parts", "4")
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "BATCHED SELFTEST OK" in r.stdout
