@@ -7,8 +7,8 @@ BASELINE := BENCH_superstep.prev.json
 # real TPU runs: make bench-check BENCH_THRESHOLD=0.20).
 BENCH_THRESHOLD ?= 0.75
 
-.PHONY: test lint bench bench-quick bench-batched bench-dist bench-gate \
-	bench-check serve ci
+.PHONY: test lint bench bench-quick bench-batched bench-dist bench-dynamic \
+	bench-gate bench-check serve serve-mutate ci
 
 test:            ## tier-1 suite
 	$(PY) -m pytest -x -q
@@ -23,15 +23,23 @@ lint:            ## fast critical-rule lint (skips if ruff absent)
 bench:           ## reference-vs-fused superstep timings -> BENCH_superstep.json
 	$(PY) benchmarks/superstep_bench.py
 
-bench-quick:     ## smallest scale only (the CI bench job; incl. batched col)
-	$(PY) benchmarks/superstep_bench.py --quick --batched
+bench-quick:     ## smallest scale only (the CI bench job; batched + dynamic)
+	$(PY) benchmarks/superstep_bench.py --quick --batched --mutations
 
 bench-batched:   ## query-throughput column only (Q in {1,8,32}) + gate
 	$(PY) benchmarks/superstep_bench.py --quick --batched
 	$(MAKE) bench-gate
 
+bench-dynamic:   ## dynamic-graph column (mutation edges/s, warm-start) + gate
+	$(PY) benchmarks/superstep_bench.py --quick --mutations
+	$(MAKE) bench-gate
+
 serve:           ## batched query-serving driver (resident graph, q/s report)
 	$(PY) -m repro.launch.graph_serve --scale 12 --batch 32 --alg bfs
+
+serve-mutate:    ## mutating serving driver (resident DynamicGraph)
+	$(PY) -m repro.launch.graph_serve --scale 12 --batch 32 --alg bfs \
+	  --mutate --churn 1.0
 
 bench-dist:      ## multi-device column (8 forced host devices, quick scale)
 	$(PY) benchmarks/superstep_bench.py --quick --distributed --devices 8 \

@@ -213,6 +213,83 @@ def bench_batched_cell(pg, scale: int, parts: int, strategy: str,
         compile_cache_entries=cache_fn._cache_size())
 
 
+def bench_mutations_cell(g, scale: int, parts: int, strategy: str,
+                         seed: int, backend: str = "reference",
+                         block_e: int = 256, rounds: int = 4,
+                         mutation_batch: int = 256) -> dict:
+    """One dynamic-graph cell: in-place mutation throughput + incremental
+    warm-start economics on a resident DynamicGraph.
+
+    Applies ``rounds`` insert-only mutation batches (insert-only keeps the
+    window monotone so the warm-vs-cold comparison is apples-to-apples),
+    recording edges/s applied through the compiled scatter, the warm-start
+    vs cold superstep counts for a standing BFS query set, and the dynamic
+    runner's compile-cache growth across batches (``retraces`` — 0 is the
+    contract, gated deterministically by scripts/bench_check.py alongside
+    ``incremental_steps``/``cold_steps``).
+    """
+    from repro.core import bsp
+    from repro.core.dynamic import DynamicGraph
+    from repro.data.graphs import edge_stream
+    from repro.algorithms.bfs import bfs_batched, bfs_incremental
+
+    dg = DynamicGraph(g, parts, strategy,
+                      mutation_capacity=mutation_batch)
+    if backend == "fused":
+        eng = BSPEngine(dg, fused=True, block_e=block_e)
+    elif backend == "hybrid":
+        eng = BSPEngine(dg, backend="hybrid")
+    else:
+        eng = BSPEngine(dg)
+    rng = np.random.default_rng(seed)
+    sources = rng.integers(0, g.num_vertices, size=8)
+    prev, _ = bfs_batched(eng, sources)            # compile + first fixpoint
+    stream = edge_stream(g, rounds + 1, mutation_batch, churn=1.0,
+                         seed=seed)
+
+    # warm-up round: compiles the incremental (relaxation) program too, so
+    # the retrace counter below sees only genuine re-traces
+    mark = dg.mark()
+    dg.apply_mutations(stream[0])
+    dirty, _ = dg.dirty_since(mark)
+    prev, _ = bfs_incremental(eng, prev, dirty)
+    prev, _ = bfs_batched(eng, sources)
+
+    entries0 = bsp._run_dyn_jit._cache_size() + \
+        bsp._run_dyn_hybrid_jit._cache_size()
+    edges = apply_s = 0.0
+    warm_steps = cold_steps = 0
+    bitwise = True
+    mark = dg.mark()
+    for mb in stream[1:]:
+        rep = dg.apply_mutations(mb)
+        edges += rep["num_edges"]
+        apply_s += rep["apply_ms"] / 1e3
+        dirty, monotone = dg.dirty_since(mark)
+        assert monotone                            # churn=1.0 stream
+        warm, wsteps = bfs_incremental(eng, prev, dirty)
+        cold, csteps = bfs_batched(eng, sources)
+        bitwise = bitwise and bool(np.array_equal(warm, cold))
+        warm_steps += int(wsteps.max())
+        cold_steps += int(csteps.max())
+        prev = cold
+        mark = dg.mark()
+    retraces = (bsp._run_dyn_jit._cache_size()
+                + bsp._run_dyn_hybrid_jit._cache_size() - entries0)
+    return dict(
+        scale=scale, parts=parts, strategy=strategy, algorithm="bfs",
+        combine="min", mode="mutations", block_e=block_e, backend=backend,
+        v_max=dg.pg.v_max, delta_slots=dg.delta_slots,
+        mutation_rounds=rounds, mutation_batch=mutation_batch,
+        mutation_edges=int(edges),
+        mutation_edges_per_sec=edges / max(apply_s, 1e-12),
+        apply_ms_per_batch=apply_s * 1e3 / max(rounds, 1),
+        incremental_steps=warm_steps, cold_steps=cold_steps,
+        warm_bitwise_equal=bitwise,
+        compactions=dg.compactions,
+        hybrid_rebuilds=eng.hybrid_dyn_rebuilds, retraces=retraces)
+
+
 def bench_distributed_cell(pg, scale: int, parts: int, strategy: str,
                            alg: str, n_dev: int) -> dict:
     """One multi-device cell: sharded fused vs sharded hybrid superstep,
@@ -289,6 +366,13 @@ def main(argv=None) -> int:
     ap.add_argument("--batched-backend", default="reference",
                     choices=("reference", "fused", "hybrid"),
                     help="engine backend for the --batched column")
+    ap.add_argument("--mutations", action="store_true",
+                    help="add the dynamic-graph column: in-place mutation "
+                         "edges/s, incremental-vs-cold supersteps, and the "
+                         "zero-retrace guard on a resident DynamicGraph")
+    ap.add_argument("--mutations-backend", default="reference",
+                    choices=("reference", "fused", "hybrid"),
+                    help="engine backend for the --mutations column")
     ap.add_argument("--distributed", action="store_true",
                     help="add multi-device cells (sharded fused vs sharded "
                          "hybrid + exchanged-bytes accounting)")
@@ -397,6 +481,42 @@ def main(argv=None) -> int:
                 if rec["ref_hlo_msg_arrays"] == 0:
                     failures.append(f"reference HLO unexpectedly clean "
                                     f"(check the detector) in {rec}")
+            if args.mutations:
+                mrec = bench_mutations_cell(g, scale, args.parts, strategy,
+                                            args.seed,
+                                            backend=args.mutations_backend,
+                                            block_e=args.block_e)
+                results.append(mrec)
+                print(f"scale={scale} {strategy:>4} mutations: "
+                      f"{mrec['mutation_edges_per_sec']:.0f} edges/s "
+                      f"applied ({mrec['apply_ms_per_batch']:.1f} ms/batch "
+                      f"of {mrec['mutation_batch']}), incremental "
+                      f"{mrec['incremental_steps']} vs cold "
+                      f"{mrec['cold_steps']} supersteps, "
+                      f"retraces={mrec['retraces']} "
+                      f"compactions={mrec['compactions']}", flush=True)
+                # Dynamic contract, deterministic halves: mutation batches
+                # must reuse the compiled loops (no compaction and no
+                # spare-ELL-overflow split rebuild => no cache growth),
+                # warm starts must be bitwise-exact and never run MORE
+                # supersteps than cold recomputes.
+                if (mrec["compactions"] == 0
+                        and mrec["hybrid_rebuilds"] == 0
+                        and mrec["retraces"] != 0):
+                    failures.append(
+                        f"mutations {strategy}: {mrec['retraces']} "
+                        f"compile-cache entries added across mutation "
+                        f"batches — the dynamic payload is no longer "
+                        f"shape-stable")
+                if not mrec["warm_bitwise_equal"]:
+                    failures.append(
+                        f"mutations {strategy}: warm-start BFS diverged "
+                        f"from the cold rerun (monotone window)")
+                if mrec["incremental_steps"] > mrec["cold_steps"]:
+                    failures.append(
+                        f"mutations {strategy}: incremental refresh ran "
+                        f"{mrec['incremental_steps']} supersteps, more "
+                        f"than cold {mrec['cold_steps']}")
             if args.batched:
                 for q in args.batch_sizes:
                     brec = bench_batched_cell(pg, scale, args.parts,

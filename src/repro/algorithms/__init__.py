@@ -1,17 +1,22 @@
-from repro.algorithms.bfs import bfs, bfs_batched, bfs_reference
+from repro.algorithms.bfs import (bfs, bfs_batched, bfs_incremental,
+                                  bfs_reference)
 from repro.algorithms.pagerank import (pagerank, pagerank_reference,
                                        personalized_pagerank,
                                        personalized_pagerank_reference)
-from repro.algorithms.sssp import sssp, sssp_batched, sssp_reference
-from repro.algorithms.cc import connected_components, cc_reference
+from repro.algorithms.sssp import (sssp, sssp_batched, sssp_incremental,
+                                   sssp_reference)
+from repro.algorithms.cc import (cc_incremental, cc_reference,
+                                 connected_components)
 from repro.algorithms.bc import (bc_exact, bc_exact_sequential, bc_reference,
                                  betweenness_centrality,
                                  betweenness_centrality_batched)
 
 __all__ = [
-    "bfs", "bfs_batched", "bfs_reference", "pagerank", "pagerank_reference",
-    "personalized_pagerank", "personalized_pagerank_reference", "sssp",
-    "sssp_batched", "sssp_reference", "connected_components", "cc_reference",
-    "betweenness_centrality", "betweenness_centrality_batched", "bc_exact",
-    "bc_exact_sequential", "bc_reference",
+    "bfs", "bfs_batched", "bfs_incremental", "bfs_reference", "pagerank",
+    "pagerank_reference", "personalized_pagerank",
+    "personalized_pagerank_reference", "sssp", "sssp_batched",
+    "sssp_incremental", "sssp_reference", "connected_components",
+    "cc_incremental", "cc_reference", "betweenness_centrality",
+    "betweenness_centrality_batched", "bc_exact", "bc_exact_sequential",
+    "bc_reference",
 ]

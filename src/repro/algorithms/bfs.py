@@ -14,8 +14,8 @@ from typing import Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bsp import (MIN, BSPEngine, EdgeMessage, VertexProgram,
-                            gather_src)
+from repro.core.bsp import (MIN, BSPEngine, EdgeMessage, IncrementalForm,
+                            VertexProgram, gather_src)
 from repro.core.graph import CSRGraph
 from repro.core.partition import PartitionedGraph
 
@@ -66,6 +66,51 @@ def _apply_fn(state, acc, step):
     return {"level": new_level}, finished
 
 
+# --- incremental (warm-start) form -----------------------------------------
+# The level-synchronous program cannot lower a *finite* level (its frontier
+# test is ``level == step`` and its apply only fills unvisited vertices), so
+# warm starts run BFS's relaxation restatement instead: unit-weight
+# Bellman-Ford over levels with an active set.  Its fixpoint is reachable by
+# descent from any over-approximation — exactly the previous solution after
+# insert-only mutations — and since levels are small exact-f32 integers the
+# warm fixpoint is *bitwise* equal to a cold rerun (docs/dynamic.md).
+
+def _inc_edge_fn(state, src, weight, step):
+    del weight, step
+    level = gather_src(state["level"], src)
+    active = gather_src(state["active"].astype(jnp.float32), src) > 0
+    return jnp.where(active, level + 1.0, INF)
+
+
+def _inc_edge_msg_fn(vals, weight, step, consts):
+    del weight, step, consts
+    # np.inf (not the jnp INF const): Pallas kernels may not capture arrays.
+    return jnp.where(vals["active"] > 0, vals["level"] + 1.0, np.inf)
+
+
+def _inc_apply_fn(state, acc, step):
+    del step
+    level = state["level"]
+    improved = acc < level
+    new_level = jnp.where(improved, acc, level)
+    return {"level": new_level, "active": improved}, ~jnp.any(improved)
+
+
+BFS_RELAX_PROGRAM = VertexProgram(
+    combine=MIN, edge_fn=_inc_edge_fn, apply_fn=_inc_apply_fn,
+    edge_msg=EdgeMessage(gather=("level", "active"), fn=_inc_edge_msg_fn))
+
+
+def _inc_seed(prev_state, dirty):
+    """Warm state: previous levels + dirty-frontier active set.  ``dirty``
+    is a [Pl, v_max] mask of vertices whose out-edges changed; only dirty
+    vertices that are themselves reached can improve a neighbour."""
+    level = prev_state["level"]
+    active = jnp.logical_and(jnp.broadcast_to(dirty, level.shape),
+                             jnp.isfinite(level))
+    return {"level": level, "active": active}
+
+
 # Weightless min combine → the hybrid backend runs BFS under the pure-min
 # semiring (the message already carries level+1), with the frontier-density
 # push/pull direction switch as the traversal showcase: sparse frontiers take
@@ -76,7 +121,9 @@ def _apply_fn(state, acc, step):
 BFS_PROGRAM = VertexProgram(combine=MIN, edge_fn=_edge_fn,
                             apply_fn=_apply_fn,
                             edge_msg=EdgeMessage(gather=("level",),
-                                                 fn=_edge_msg_fn))
+                                                 fn=_edge_msg_fn),
+                            incremental=IncrementalForm(BFS_RELAX_PROGRAM,
+                                                        _inc_seed))
 
 
 def bfs_batched(engine: BSPEngine,
@@ -98,6 +145,27 @@ def bfs(engine: BSPEngine, source: int) -> Tuple[np.ndarray, int]:
     """Run BFS from global vertex ``source``; returns (levels [n], steps)."""
     levels, steps = bfs_batched(engine, [source])
     return levels[0], int(steps[0])
+
+
+def bfs_incremental(engine: BSPEngine, prev_levels: np.ndarray,
+                    dirty_global: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Warm-start a batch of BFS solutions after insert-only mutations.
+
+    ``prev_levels`` is the [Q, n] (or [n]) result of an earlier run whose
+    sources are being kept fresh; ``dirty_global`` the [n] mask of vertices
+    with inserted out-edges since (``DynamicGraph.dirty_since`` — the caller
+    must fall back to cold :func:`bfs_batched` when that window was not
+    monotone).  Returns (levels [Q, n], supersteps [Q]) — bitwise equal to
+    a cold rerun, typically in a fraction of the supersteps.
+    """
+    pg = engine.pg
+    prev = np.atleast_2d(np.asarray(prev_levels, dtype=np.float32))
+    state = {"level": jnp.asarray(np.stack(
+        [pg.scatter_global(row, np.inf) for row in prev]))}
+    st, steps = engine.run_incremental(BFS_PROGRAM, state,
+                                       pg.scatter_dirty(dirty_global))
+    return gather_batch(pg, st["level"]), np.asarray(steps)
 
 
 def bfs_reference(g: CSRGraph, source: int) -> np.ndarray:

@@ -11,8 +11,10 @@ from typing import Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bsp import (MIN, BSPEngine, EdgeMessage, VertexProgram,
-                            gather_src)
+import dataclasses
+
+from repro.core.bsp import (MIN, BSPEngine, EdgeMessage, IncrementalForm,
+                            VertexProgram, gather_src)
 from repro.core.graph import CSRGraph, from_edge_list
 
 INF = jnp.float32(jnp.inf)
@@ -57,6 +59,21 @@ CC_PROGRAM = VertexProgram(combine=MIN, edge_fn=_edge_fn,
                                                 fn=_edge_msg_fn))
 
 
+def _inc_seed(prev_state, dirty):
+    """Warm state after insert-only mutations: label propagation is already
+    an active-set min-relaxation, so re-seed it from the previous fixpoint
+    with the dirty frontier active.  Mutations must keep the graph
+    symmetric (insert both (u, v) and (v, u)) — CC's contract."""
+    label = prev_state["label"]
+    active = jnp.logical_and(jnp.broadcast_to(dirty, label.shape),
+                             jnp.isfinite(label))
+    return {"label": label, "active": active}
+
+
+CC_PROGRAM = dataclasses.replace(
+    CC_PROGRAM, incremental=IncrementalForm(CC_PROGRAM, _inc_seed))
+
+
 def connected_components(engine: BSPEngine) -> Tuple[np.ndarray, int]:
     """Returns (labels [n] — min global vertex id per component, steps)."""
     pg = engine.pg
@@ -68,6 +85,18 @@ def connected_components(engine: BSPEngine) -> Tuple[np.ndarray, int]:
         "label": jnp.asarray(label0, dtype=jnp.float32),
         "active": jnp.asarray(active0)})
     return pg.gather_global(np.asarray(state["label"])), int(steps)
+
+
+def cc_incremental(engine: BSPEngine, prev_labels: np.ndarray,
+                   dirty_global: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Warm-start component labels after insert-only *symmetric* mutations
+    (see :func:`repro.algorithms.bfs.bfs_incremental` for the contract)."""
+    pg = engine.pg
+    prev = np.asarray(prev_labels, dtype=np.float32)
+    state = {"label": jnp.asarray(pg.scatter_global(prev, np.inf))[None]}
+    st, steps = engine.run_incremental(CC_PROGRAM, state,
+                                       pg.scatter_dirty(dirty_global))
+    return pg.gather_global(np.asarray(st["label"][0])), int(steps[0])
 
 
 def cc_reference(g: CSRGraph) -> np.ndarray:

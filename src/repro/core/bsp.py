@@ -104,6 +104,32 @@ class EdgeMessage:
 
 
 @dataclasses.dataclass(frozen=True)
+class IncrementalForm:
+    """A program's warm-start form for incremental recomputation.
+
+    ``program`` is the *relaxation* restatement of the algorithm — one whose
+    fixpoint is reachable by descent from any over-approximation, not just
+    from the cold initial state (e.g. BFS's level-synchronous frontier test
+    becomes an active-set min-relaxation over levels).  ``seed(prev_state,
+    dirty)`` rebuilds the warm initial state from a previous *fixpoint* and
+    a ``[Pl, v_max]`` dirty-vertex mask (the sources of edges inserted since
+    that fixpoint was computed).
+
+    Valid only while mutations stay **monotone** for the program's semiring
+    (insert-only for min/min-plus: new edges can only lower the least
+    fixpoint, so the old solution is a sound over-approximation — and every
+    old path survives, which is what makes the warm fixpoint *bitwise* equal
+    to the cold one).  Deletions, and non-monotone programs (PageRank, BC),
+    must fall back to cold recompute; ``BSPEngine.run_incremental`` returns
+    None when no form exists and ``DynamicGraph.dirty_since`` reports
+    whether the mutation window was monotone.
+    """
+
+    program: "VertexProgram"
+    seed: Callable[[BatchedState, Array], BatchedState]
+
+
+@dataclasses.dataclass(frozen=True)
 class VertexProgram:
     """An algorithm in TOTEM's callback form (paper Fig. 5).
 
@@ -116,6 +142,8 @@ class VertexProgram:
     ``finished`` is this shard's vote to terminate.
     ``edge_msg`` — optional :class:`EdgeMessage` equivalent of ``edge_fn``;
     programs that provide it are eligible for the fused superstep path.
+    ``incremental`` — optional :class:`IncrementalForm` enabling
+    ``BSPEngine.run_incremental`` warm starts after monotone mutations.
     """
 
     combine: str
@@ -124,6 +152,7 @@ class VertexProgram:
     max_steps: int = 1 << 30
     use_reverse: bool = False
     edge_msg: Optional[EdgeMessage] = None
+    incremental: Optional[IncrementalForm] = None
 
 
 def gather_src(x: Array, src: Array) -> Array:
@@ -156,33 +185,26 @@ class FusedConfig:
 
 
 @dataclasses.dataclass(frozen=True)
-class _HybridData:
-    """Device arrays + static geometry of one hybrid degree-split direction.
+class _HybridCfg:
+    """Static geometry of one hybrid degree-split direction.
 
-    ``slot``/``hid`` translate between the engine's [P, v_max] partition
-    layout and the split's degree-ranked global id space (sink = n for
-    padding slots).  ``push_*`` are the edge-parallel arrays of the push
-    direction; None disables the direction switch (sum combines, or
-    ``direction_switch=False``).
+    The array payload travels separately (an ``arrs`` dict with keys
+    ``dense``/``ell_col``/``ell_val``/``slot``/``hid`` and optionally
+    ``push_src``/``push_dst``/``push_w``): numpy in the static engine —
+    per-trace constants — but **traced jit arguments** in the dynamic
+    engine, so in-place edge mutations (core/dynamic.py) update the split
+    without retracing and compaction can never be served from a stale
+    compiled constant.
     """
 
     semiring: str
     k_dense: int
     num_vertices: int
-    # numpy on purpose: these become per-trace constants (see _hybrid_for).
-    dense: np.ndarray               # [K, K] ⊗ values (⊕-identity non-edges)
-    ell_col: np.ndarray             # [n, kmax]
-    ell_val: np.ndarray             # [n, kmax]
-    slot: np.ndarray                # [n] hybrid id -> p * v_max + local id
-    hid: np.ndarray                 # [P, v_max] slot -> hybrid id (n = sink)
-    push_src: Optional[np.ndarray]  # [E] hybrid-space edge sources
-    push_dst: Optional[np.ndarray]  # [E] hybrid-space edge destinations
-    push_w: Optional[np.ndarray]    # [E] weights (min_plus) or None
     pull_threshold: float
     interpret: Optional[bool]
 
 
-def _superstep_hybrid(program: VertexProgram, hd: _HybridData,
+def _superstep_hybrid(program: VertexProgram, cfg: _HybridCfg, arrs: dict,
                       all_finished: Callable[[Array], Array],
                       state: State, step: Array) -> Tuple[State, Array]:
     """One BSP superstep through the degree-split two-engine backend.
@@ -195,13 +217,19 @@ def _superstep_hybrid(program: VertexProgram, hd: _HybridData,
     frontier-density switch picks the push direction (gather + segment-min —
     cheap when few vertices send) or the pull direction (frontier-oblivious
     SpMV), the direction-optimized traversal of Sallinen et al.
+
+    ``slot``/``hid`` in ``arrs`` translate between the engine's [P, v_max]
+    partition layout and the split's degree-ranked global id space (sink =
+    n for padding slots); ``push_*`` absent disables the direction switch
+    (sum combines, ``direction_switch=False``, or the dynamic engine, whose
+    pull SpMV is frontier-oblivious and mutation-stable).
     """
     from repro.core.hybrid import add_identity, hybrid_spmv
 
     spec = program.edge_msg
-    ident = add_identity(hd.semiring)
+    ident = add_identity(cfg.semiring)
     q = state[spec.gather[0]].shape[0]
-    vals = {k: state[k].astype(jnp.float32).reshape(q, -1)[:, hd.slot]
+    vals = {k: state[k].astype(jnp.float32).reshape(q, -1)[:, arrs["slot"]]
             for k in spec.gather}           # [Q, n] in hybrid id space
     # Per-partition scalar consts are replicated across partitions in the
     # single-device engines; the global compute reads partition 0's copy
@@ -214,32 +242,32 @@ def _superstep_hybrid(program: VertexProgram, hd: _HybridData,
                 consts).astype(jnp.float32)              # [Q, n]
 
     def pull(x):
-        return hybrid_spmv(hd.dense, hd.ell_col, hd.ell_val, x,
-                           semiring=hd.semiring, k_dense=hd.k_dense,
-                           interpret=hd.interpret)
+        return hybrid_spmv(arrs["dense"], arrs["ell_col"], arrs["ell_val"],
+                           x, semiring=cfg.semiring, k_dense=cfg.k_dense,
+                           interpret=cfg.interpret)
 
-    if hd.push_src is not None:
+    if "push_src" in arrs:
         def push(x):
-            msgs = x[:, hd.push_src]                     # [Q, E]
-            if hd.push_w is not None:
-                msgs = msgs + hd.push_w
+            msgs = x[:, arrs["push_src"]]                # [Q, E]
+            if "push_w" in arrs:
+                msgs = msgs + arrs["push_w"]
             offs = (jnp.arange(q, dtype=jnp.int32)
-                    * hd.num_vertices)[:, None]
+                    * cfg.num_vertices)[:, None]
             y = jax.ops.segment_min(msgs.ravel(),
-                                    (hd.push_dst[None] + offs).ravel(),
-                                    num_segments=q * hd.num_vertices)
-            return y.reshape(q, hd.num_vertices)
+                                    (arrs["push_dst"][None] + offs).ravel(),
+                                    num_segments=q * cfg.num_vertices)
+            return y.reshape(q, cfg.num_vertices)
 
         # One direction per superstep for the whole batch: the mean frontier
         # density across queries decides (direction is a perf choice only —
         # both directions are exact for min combines).
         density = jnp.mean((x != ident).astype(jnp.float32))
-        y = jax.lax.cond(density < hd.pull_threshold, push, pull, x)
+        y = jax.lax.cond(density < cfg.pull_threshold, push, pull, x)
     else:
         y = pull(x)
 
     y_ext = jnp.concatenate([y, jnp.full((q, 1), ident, y.dtype)], axis=1)
-    acc = y_ext[:, hd.hid]                  # back to [Q, P, v_max] layout
+    acc = y_ext[:, arrs["hid"]]             # back to [Q, P, v_max] layout
     new_state, finished = jax.vmap(program.apply_fn,
                                    in_axes=(0, 0, None))(state, acc, step)
     return new_state, all_finished(finished)
@@ -417,18 +445,50 @@ def _superstep(dims: _Dims, program: VertexProgram, edges: dict,
                exchange: Callable[[Array], Array],
                all_finished: Callable[[Array], Array],
                fused_cfg: Optional[FusedConfig],
-               state: BatchedState, step: Array) -> Tuple[BatchedState,
-                                                          Array]:
-    """One BSP superstep of the whole query batch over the local shard."""
+               state: BatchedState, step: Array,
+               dyn: Optional[dict] = None) -> Tuple[BatchedState, Array]:
+    """One BSP superstep of the whole query batch over the local shard.
+
+    ``dyn`` (a ``DynamicGraph.payload`` dict, sharded alongside ``edges``)
+    folds in-place mutations into the same superstep: tombstoned base edges
+    are redirected to the segment sink (reference path) / masked out of
+    their block (fused path), the masked **delta-slot tail** runs one extra
+    reference-style reduction over the same extended segment space — so its
+    boundary messages share the outbox slots and the exchange for free —
+    and the live ``inbox_dst`` map carries slots assigned after partition
+    time.  All shapes are mutation-independent; only values change.
+    """
     combine = program.combine
     seg_op = _SEGMENT_OP[combine]
     pl = edges["src"].shape[0]  # local partition count
+
+    if dyn is not None:
+        edges = dict(edges)
+        tomb = dyn["tomb"]
+        edges["dst_ext"] = jnp.where(tomb, dims.v_max, edges["dst_ext"])
+        edges["inbox_dst"] = dyn["inbox_dst"]
+        if "blk_mask" in edges:
+            pad = edges["blk_mask"].shape[1] - tomb.shape[1]
+            alive = jnp.pad(jnp.logical_not(tomb), ((0, 0), (0, pad)))
+            edges["blk_mask"] = edges["blk_mask"] * alive.astype(
+                edges["blk_mask"].dtype)
 
     # -- compute: per-edge messages, reduced over extended destinations -----
     if fused_cfg is not None and program.edge_msg is not None:
         acc = _compute_fused(dims, program, edges, fused_cfg, state, step)
     else:
         acc = _compute_reference(dims, program, edges, state, step)
+
+    if dyn is not None:
+        # Delta-slot tail: inserted edges, reduced over the same segment
+        # space (sink-pointing slots are unoccupied and vanish in the ⊕).
+        d_edges = dict(src=dyn["d_src"], dst_ext=dyn["d_dst_ext"])
+        if "d_weight" in dyn:
+            d_edges["weight"] = dyn["d_weight"]
+        d_dims = _Dims(dims.num_parts, dims.v_max,
+                       dyn["d_src"].shape[1], dims.o_max)
+        d_acc = _compute_reference(d_dims, program, d_edges, state, step)
+        acc = _COMBINE[combine](acc, d_acc)
     q = acc.shape[0]
     local_acc = acc[:, :, : dims.v_max]
     outbox = acc[:, :, dims.v_max + 1:].reshape(q, pl, dims.num_parts,
@@ -504,6 +564,68 @@ def _run_batched_loop(step_fn: Callable, max_steps: int,
     return state, steps_q
 
 
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4))
+def _run_dyn_jit(dims: _Dims, program: VertexProgram,
+                 fused_cfg: Optional[FusedConfig], max_steps: int,
+                 fixed_steps: Optional[int], edges: dict, dyn: dict,
+                 state: BatchedState):
+    """Dynamic-graph batched runner (reference/fused backends).
+
+    Unlike the static ``BSPEngine.run_batched`` — whose closed-over edge
+    arrays become compiled constants — every array here (base edges AND the
+    mutation payload) is a **traced argument**: mutation batches between
+    runs reuse one trace (shapes never change), and a compaction can never
+    be served stale values from the jit cache (a shape change retraces, a
+    shape-preserving rebuild just passes new operands).
+    """
+    step_fn = functools.partial(_superstep, dims, program, edges,
+                                BSPEngine._exchange,
+                                BSPEngine._all_finished, fused_cfg, dyn=dyn)
+    if fixed_steps is not None:
+        def body(i, st):
+            st, _ = step_fn(st, i)
+            return st
+        return jax.lax.fori_loop(0, fixed_steps, body, state)
+    return _run_batched_loop(step_fn, max_steps, state, num_queries(state))
+
+
+def _vote_never(apply_fn):
+    def wrapped(state, acc, step):
+        new_state, _ = apply_fn(state, acc, step)
+        return new_state, jnp.bool_(False)
+    return wrapped
+
+
+@functools.lru_cache(maxsize=None)
+def _fixed_step_program(program: VertexProgram,
+                        num_steps: int) -> VertexProgram:
+    """Fixed-iteration restatement of ``program``: never votes finish, so
+    the while_loop path runs exactly ``num_steps`` supersteps — how the
+    *distributed dynamic* engine serves ``run_fixed_batched`` through the
+    same sharded machinery as ``run_batched``.  Memoized so repeated calls
+    reuse one program identity (the jit caches key on it)."""
+    return dataclasses.replace(program, max_steps=num_steps,
+                               apply_fn=_vote_never(program.apply_fn))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _run_dyn_hybrid_jit(program: VertexProgram, cfg: _HybridCfg,
+                        max_steps: int, fixed_steps: Optional[int],
+                        arrs: dict, state: BatchedState):
+    """Dynamic-graph batched runner, hybrid degree-split backend: the
+    dense block / ELL arrays arrive as traced arguments so in-place
+    mutation writes (and post-compaction rebuilds) never hit a stale
+    compiled constant."""
+    step_fn = functools.partial(_superstep_hybrid, program, cfg, arrs,
+                                BSPEngine._all_finished)
+    if fixed_steps is not None:
+        def body(i, st):
+            st, _ = step_fn(st, i)
+            return st
+        return jax.lax.fori_loop(0, fixed_steps, body, state)
+    return _run_batched_loop(step_fn, max_steps, state, num_queries(state))
+
+
 REFERENCE = "reference"
 FUSED = "fused"
 HYBRID = "hybrid"
@@ -532,23 +654,70 @@ class BSPEngine:
       eligible EdgeMessage run the reference path.
     """
 
-    def __init__(self, pg: PartitionedGraph, *, backend: Optional[str] = None,
+    def __init__(self, pg, *, backend: Optional[str] = None,
                  fused: bool = False, block_e: int = 1024,
                  max_span: int = 4096, gather_chunk: int = 256,
                  interpret: Optional[bool] = None,
                  hybrid_k_dense: Optional[int] = None,
                  pull_threshold: float = 0.05,
-                 direction_switch: bool = True):
+                 direction_switch: bool = True,
+                 dynamic_ell_spare: int = 8):
+        from repro.core.dynamic import DynamicGraph
+
         if backend is None:
             backend = FUSED if fused else REFERENCE
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; pick one of "
                              f"{BACKENDS}")
-        self.pg = pg
         self.backend = backend
-        self.dims = _Dims(pg.num_parts, pg.v_max, pg.fwd.e_max, pg.fwd.o_max)
         self.fused = backend == FUSED
         self.interpret = interpret
+        self._block_e = block_e
+        self._max_span = max_span
+        self._gather_chunk = gather_chunk
+        self._hybrid_k_dense = hybrid_k_dense
+        self._pull_threshold = pull_threshold
+        self._direction_switch = direction_switch
+        self._dyn_ell_spare = dynamic_ell_spare
+
+        # Dynamic graphs hand the engine a mutable layout: the engine reads
+        # the mutation payload as traced jit arguments each run (never as
+        # compiled constants) and rebinds itself after a compaction.
+        self.dg: Optional[DynamicGraph] = None
+        self.dynamic_rebinds = 0
+        # dynamic-hybrid split rebuilds (spare-ELL overflow / batch log no
+        # longer reaching the cursor): legitimate shape-changing recompiles
+        # the retrace gates must discount, like compaction rebinds
+        self.hybrid_dyn_rebuilds = 0
+        if isinstance(pg, DynamicGraph):
+            self.dg = pg
+            self._dyn_version = pg.version
+            pg = pg.pg
+        self._bind(pg)
+        if self.dg is not None:
+            # Instance-level dispatch: the class attributes stay the jitted
+            # static-path methods (their compile-cache introspection is part
+            # of the serving contract); a dynamic engine shadows them.
+            self.run_batched = self._run_batched_dyn
+            self.run_fixed_batched = self._run_fixed_batched_dyn
+
+    @property
+    def pg(self) -> PartitionedGraph:
+        """The current partitioned layout.  On a dynamic engine this first
+        syncs with the DynamicGraph (rebinds after compaction — and, on the
+        distributed hybrid, folds pending mutations), so state constructed
+        from ``engine.pg`` always matches the layout the next run uses."""
+        if self.dg is not None:
+            self._sync_dynamic()
+        return self._pg
+
+    def _bind(self, pg: PartitionedGraph) -> None:
+        """Derive every pg-shaped structure (edge dicts, block metadata,
+        hybrid plan/caches).  Construction and post-compaction rebinds both
+        land here."""
+        self._pg = pg
+        block_e, gather_chunk = self._block_e, self._gather_chunk
+        self.dims = _Dims(pg.num_parts, pg.v_max, pg.fwd.e_max, pg.fwd.o_max)
         self._fwd_blk = self._rev_blk = None
         if self.fused:
             self._fwd_blk = build_block_metadata(pg.fwd, block_e=block_e)
@@ -563,24 +732,25 @@ class BSPEngine:
                 return None
             v_pad = -(-pg.v_max // gather_chunk) * gather_chunk
             return FusedConfig(span=blk.span, block_e=blk.block_e,
-                               v_pad=v_pad, max_span=max_span,
-                               gather_chunk=gather_chunk, interpret=interpret)
+                               v_pad=v_pad, max_span=self._max_span,
+                               gather_chunk=gather_chunk,
+                               interpret=self.interpret)
 
         self._fwd_cfg = _cfg(self._fwd_blk)
         self._rev_cfg = _cfg(self._rev_blk)
         self.out_deg = jnp.asarray(pg.out_deg)
         self.vertex_mask = jnp.asarray(pg.vertex_mask)
 
-        self._pull_threshold = pull_threshold
-        self._direction_switch = direction_switch
         self._hybrid_cache: dict = {}
+        self._hybrid_dyn_cache: dict = {}
         self._hybrid_plan: Optional[dict] = None
-        if backend == HYBRID:
+        if self.backend == HYBRID:
             if pg.source is None:
                 raise ValueError(
                     "hybrid backend needs PartitionedGraph.source; "
                     "re-partition with core.partition.partition()")
-            self._hybrid_plan = self._plan_hybrid(hybrid_k_dense, block_e)
+            self._hybrid_plan = self._plan_hybrid(self._hybrid_k_dense,
+                                                  block_e)
 
     # ---------------------- hybrid backend plumbing ------------------------
 
@@ -642,20 +812,22 @@ class BSPEngine:
         partitioning builds)."""
         return self._uses_hybrid(program)
 
-    def _hybrid_for(self, program: VertexProgram) -> _HybridData:
-        """Build (and cache) one direction's degree-split device data."""
+    def _hybrid_key(self, program: VertexProgram):
+        # use_weight in the key: a weighted and a weightless program can map
+        # to the same semiring (plus_times) but need different ⊗ values
+        # (edge weights vs multiplicity counts).
+        return (self._hybrid_semiring(program), program.use_reverse,
+                program.edge_msg.use_weight)
+
+    def _build_hybrid(self, program: VertexProgram, g,
+                      with_push: bool) -> Tuple[_HybridCfg, dict, Any]:
+        """One direction's degree split of ``g``: (static cfg, numpy array
+        dict, the HybridGraph) — shared by the static cache and the dynamic
+        rebuild path."""
         from repro.core.graph import CSRGraph
         from repro.core.hybrid import degree_split
 
         semiring = self._hybrid_semiring(program)
-        # use_weight in the key: a weighted and a weightless program can map
-        # to the same semiring (plus_times) but need different ⊗ values
-        # (edge weights vs multiplicity counts).
-        key = (semiring, program.use_reverse, program.edge_msg.use_weight)
-        if key in self._hybrid_cache:
-            return self._hybrid_cache[key]
-
-        g = self.pg.source
         if program.use_reverse:
             g = g.reverse()
         if not program.edge_msg.use_weight and g.weights is not None:
@@ -672,24 +844,33 @@ class BSPEngine:
         for p, l2g in enumerate(asg.l2g):
             hid[p, : len(l2g)] = hg.inv_perm[l2g]
 
-        push_src = push_dst = push_w = None
-        if program.combine == MIN and self._direction_switch:
-            push_src = hg.inv_perm[g.edge_sources()].astype(np.int32)
-            push_dst = hg.inv_perm[g.col].astype(np.int32)
+        arrs = dict(dense=hg.dense_block, ell_col=hg.ell_col,
+                    ell_val=hg.ell_val, slot=slot, hid=hid)
+        if with_push and program.combine == MIN and self._direction_switch:
+            arrs["push_src"] = hg.inv_perm[g.edge_sources()].astype(np.int32)
+            arrs["push_dst"] = hg.inv_perm[g.col].astype(np.int32)
             if semiring == "min_plus" and g.weights is not None:
-                push_w = g.weights.astype(np.float32)
+                arrs["push_w"] = g.weights.astype(np.float32)
 
-        # Cache *numpy* arrays: _superstep_hybrid runs at jit-trace time, and
-        # device arrays created inside one trace must not leak into the next
-        # (numpy operands become per-trace constants instead).
-        hd = _HybridData(
-            semiring=semiring, k_dense=hg.k_dense, num_vertices=n,
-            dense=hg.dense_block, ell_col=hg.ell_col, ell_val=hg.ell_val,
-            slot=slot, hid=hid,
-            push_src=push_src, push_dst=push_dst, push_w=push_w,
-            pull_threshold=self._pull_threshold, interpret=self.interpret)
-        self._hybrid_cache[key] = hd
-        return hd
+        cfg = _HybridCfg(semiring=semiring, k_dense=hg.k_dense,
+                         num_vertices=n,
+                         pull_threshold=self._pull_threshold,
+                         interpret=self.interpret)
+        return cfg, arrs, hg
+
+    def _hybrid_for(self, program: VertexProgram) -> Tuple[_HybridCfg, dict]:
+        """Build (and cache) one direction's degree-split data.
+
+        The cached arrays stay *numpy*: _superstep_hybrid runs at jit-trace
+        time, and device arrays created inside one trace must not leak into
+        the next (numpy operands become per-trace constants instead)."""
+        key = self._hybrid_key(program)
+        if key in self._hybrid_cache:
+            return self._hybrid_cache[key]
+        cfg, arrs, _ = self._build_hybrid(program, self.pg.source,
+                                          with_push=True)
+        self._hybrid_cache[key] = (cfg, arrs)
+        return cfg, arrs
 
     # Local exchange: outbox[q, p, r] -> inbox[q, r, p] is a transpose over
     # the partition axes (the query axis rides along).
@@ -725,8 +906,9 @@ class BSPEngine:
     def _step_fn(self, program: VertexProgram, edges: Optional[dict],
                  exchange: Callable, all_finished: Callable) -> Callable:
         if self._uses_hybrid(program):
-            return functools.partial(_superstep_hybrid, program,
-                                     self._hybrid_for(program), all_finished)
+            cfg, arrs = self._hybrid_for(program)
+            return functools.partial(_superstep_hybrid, program, cfg, arrs,
+                                     all_finished)
         return functools.partial(_superstep, self.dims_for(edges), program,
                                  edges, exchange, all_finished,
                                  self.fused_cfg_for(program))
@@ -779,6 +961,244 @@ class BSPEngine:
         return unbatch_state(
             self.run_fixed_batched(program, num_steps, batch_state(state)))
 
+    # ---------------------- dynamic-graph plumbing -------------------------
+
+    def _sync_dynamic(self) -> None:
+        """Rebind after a compaction (the one retrace-paying event); called
+        on entry to every dynamic run and by the ``pg`` property."""
+        if self.dg.version != self._dyn_version:
+            # version first: _bind reads self.pg, whose property getter
+            # re-enters this sync — the updated version makes it a no-op.
+            self._dyn_version = self.dg.version
+            self._bind(self.dg.pg)
+            self.dynamic_rebinds += 1
+
+    def _run_batched_dyn(self, program: VertexProgram,
+                         state: BatchedState) -> Tuple[BatchedState, Array]:
+        """Dynamic-graph ``run_batched``: same contract, but every graph
+        array rides as a traced argument so mutation batches never retrace
+        (see ``_run_dyn_jit``)."""
+        return self._dispatch_dyn(program, state, fixed_steps=None)
+
+    def _run_fixed_batched_dyn(self, program: VertexProgram, num_steps: int,
+                               state: BatchedState) -> BatchedState:
+        return self._dispatch_dyn(program, state, fixed_steps=num_steps)
+
+    def _dispatch_dyn(self, program: VertexProgram, state: BatchedState,
+                      fixed_steps: Optional[int]):
+        self._sync_dynamic()
+        if self._uses_hybrid(program):
+            cfg, arrs = self._hybrid_dyn_for(program)
+            return _run_dyn_hybrid_jit(program, cfg, program.max_steps,
+                                       fixed_steps, arrs, state)
+        edges = self.edges_for(program)
+        dyn = self.dg.payload(program.use_reverse)
+        return _run_dyn_jit(self.dims_for(edges), program,
+                            self.fused_cfg_for(program), program.max_steps,
+                            fixed_steps, edges, dyn, state)
+
+    def run_incremental(self, program: VertexProgram,
+                        prev_state: BatchedState, dirty
+                        ) -> Optional[Tuple[BatchedState, Array]]:
+        """Warm-start ``program`` from a previous fixpoint.
+
+        ``prev_state`` is the batched final state of an earlier run of the
+        same queries; ``dirty`` a ``[Pl, v_max]`` bool mask of vertices whose
+        out-edges changed since (``DynamicGraph.dirty_since`` scattered into
+        partition layout).  Runs the program's :class:`IncrementalForm`
+        relaxation seeded at the dirty frontier — typically a handful of
+        supersteps instead of the full traversal depth.  Returns ``(state,
+        steps)``, or ``None`` when the program has no incremental form
+        (non-monotone: PageRank, BC) — the caller must recompute cold.  The
+        *caller* is also responsible for the monotonicity of the mutation
+        window itself (``dirty_since`` reports it): a deletion invalidates
+        the previous fixpoint as an over-approximation, so warm-starting
+        across one is unsound.
+        """
+        inc = program.incremental
+        if inc is None:
+            return None
+        state = inc.seed(prev_state, jnp.asarray(dirty))
+        return self.run_batched(inc.program, state)
+
+    def should_resplit_hybrid(self, threshold: float = 0.10) -> bool:
+        """The ``perf_model.should_resplit`` rule, applied to this engine's
+        frozen dynamic-hybrid split: re-evaluate the candidate ladder on
+        the *mutated* graph's degree ranks and vote to re-rank only when
+        the predicted makespan improves by more than ``threshold``.  The
+        serving driver calls this per round and consumes a True vote as a
+        compaction (rebinding re-runs ``_plan_hybrid`` on the mutated
+        graph).  False on non-hybrid/static engines; the distributed
+        hybrid re-plans at its forced compactions anyway.
+        """
+        if self.dg is None or self.backend != HYBRID:
+            return False
+        from repro.core import perf_model
+        from repro.core.hybrid import edge_max_ranks
+
+        g = self.dg.mutated_csr()
+        resplit, info = perf_model.should_resplit(
+            edge_max_ranks(g), g.num_edges, self._hybrid_plan["candidates"],
+            current_k=self._hybrid_plan["k_dense"], threshold=threshold)
+        self.last_resplit_info = info
+        return resplit
+
+    def _hybrid_dyn_for(self, program: VertexProgram
+                        ) -> Tuple[_HybridCfg, dict]:
+        """The dynamic hybrid split: device arrays kept in sync with the
+        mutation log.
+
+        Deletions write ⊕-identity (or the post-delete combine of surviving
+        parallel edges) into the dense block / clear ELL entries; insertions
+        land in the dense block or in the **spare ELL columns** reserved at
+        build time.  The degree *ranking* stays frozen between compactions
+        (a stale split is a performance choice, never a correctness one —
+        ``perf_model.should_resplit`` decides when re-ranking pays).  A row
+        running out of spare columns triggers a full rebuild of this
+        split from the mutated CSR.
+        """
+        key = self._hybrid_key(program)
+        ent = self._hybrid_dyn_cache.get(key)
+        if ent is not None and ent["cursor"] < self.dg.log_floor:
+            # the bounded batch log no longer reaches back to this entry's
+            # cursor: rebuild from the mutated CSR
+            ent = None
+            self.hybrid_dyn_rebuilds += 1
+        if ent is None:
+            ent = self._build_hybrid_dyn(program)
+            self._hybrid_dyn_cache[key] = ent
+        pending = [rec for rec in self.dg._batch_log
+                   if rec["index"] > ent["cursor"]]
+        if pending:
+            pairs = set()
+            for rec in pending:
+                b = rec["batch"]
+                pairs.update(zip(b.src.tolist(), b.dst.tolist()))
+            try:
+                self._reconcile_hybrid(ent, key, pairs)
+            except _EllOverflow:
+                ent = self._build_hybrid_dyn(program)
+                self._hybrid_dyn_cache[key] = ent
+                self.hybrid_dyn_rebuilds += 1
+            ent["cursor"] = self.dg.num_batches
+        return ent["cfg"], ent["arrs"]
+
+    def _build_hybrid_dyn(self, program: VertexProgram) -> dict:
+        from repro.kernels.ell_spmv import SEMIRINGS
+
+        cfg, arrs, hg = self._build_hybrid(program, self.dg.mutated_csr(),
+                                           with_push=False)
+        n = cfg.num_vertices
+        mul_ident = SEMIRINGS[cfg.semiring][3]
+        spare = self._dyn_ell_spare
+        ell_col = np.pad(hg.ell_col, ((0, 0), (0, spare)),
+                         constant_values=n)
+        ell_val = np.pad(hg.ell_val, ((0, 0), (0, spare)),
+                         constant_values=mul_ident)
+        arrs = dict(arrs, ell_col=ell_col, ell_val=ell_val)
+        return dict(
+            cfg=cfg,
+            arrs={k: jnp.asarray(v) for k, v in arrs.items()},
+            # host mirrors for entry location + free-slot scans
+            dense=np.asarray(arrs["dense"]).copy(),
+            ell_col=ell_col.copy(), ell_val=ell_val.copy(),
+            inv_perm=hg.inv_perm, mul_ident=float(mul_ident),
+            cursor=self.dg.num_batches)
+
+    def _reconcile_hybrid(self, ent: dict, key, pairs) -> None:
+        """Reconcile the split's ⊗ values for every touched (u, v) pair
+        against the ledger's current live multiset, then scatter the writes
+        into the device arrays (eager ``.at[]`` updates — the compiled
+        superstep only ever sees the arrays as operands)."""
+        from repro.core.hybrid import add_identity
+
+        semiring, use_reverse, use_weight = key
+        cfg = ent["cfg"]
+        inv, k = ent["inv_perm"], cfg.k_dense
+        ident = add_identity(semiring)
+        n = cfg.num_vertices
+        dense_w, col_w, val_w = {}, {}, {}
+        for (u, v) in pairs:
+            a, b = (v, u) if use_reverse else (u, v)
+            ha, hb = int(inv[a]), int(inv[b])
+            weights = self.dg.ledger.alive_weights(u, v)
+            if semiring == "plus_times":
+                vals = [float(w) if use_weight else 1.0 for w in weights]
+            elif semiring == "min_plus":
+                vals = [float(w) if use_weight else 0.0 for w in weights]
+            else:
+                vals = [0.0] * len(weights)
+            if k and ha < k and hb < k:
+                if not vals:
+                    cell = ident
+                elif semiring == "plus_times":
+                    acc = np.float32(0.0)   # f32 accumulation, like add.at
+                    for x in vals:
+                        acc = np.float32(acc + np.float32(x))
+                    cell = float(acc)
+                else:
+                    cell = min(vals)
+                dense_w[ha * k + hb] = cell
+            else:
+                self._reconcile_ell_row(ent, hb, ha, vals, n,
+                                        col_w, val_w)
+        for flat, val in dense_w.items():
+            ent["dense"].reshape(-1)[flat] = val
+        if dense_w:
+            idx = jnp.asarray(list(dense_w.keys()), dtype=jnp.int32)
+            vals = jnp.asarray(list(dense_w.values()), dtype=jnp.float32)
+            d = ent["arrs"]["dense"]
+            ent["arrs"]["dense"] = d.reshape(-1).at[idx].set(
+                vals).reshape(d.shape)
+        for w_map, mkey in ((col_w, "ell_col"), (val_w, "ell_val")):
+            if not w_map:
+                continue
+            arr = ent["arrs"][mkey]
+            idx = jnp.asarray(list(w_map.keys()), dtype=jnp.int32)
+            vals = jnp.asarray(list(w_map.values()))
+            ent["arrs"][mkey] = arr.reshape(-1).at[idx].set(
+                vals.astype(arr.dtype)).reshape(arr.shape)
+            mirror = ent[mkey].reshape(-1)
+            for flat, val in w_map.items():
+                mirror[flat] = val
+
+    def _reconcile_ell_row(self, ent: dict, row: int, col: int, want,
+                           sentinel: int, col_w: dict, val_w: dict) -> None:
+        """Match row ``row``'s entries with column ``col`` to the live
+        multiset ``want`` (add into sentinel slots, clear extras)."""
+        col_row = ent["ell_col"][row]
+        val_row = ent["ell_val"][row]
+        kmax = col_row.shape[0]
+        have = [int(j) for j in np.flatnonzero(col_row == col)]
+        remaining = list(want)
+        keep = []
+        for j in have:
+            v = float(val_row[j])
+            if v in remaining:
+                remaining.remove(v)
+                keep.append(j)
+        extras = [j for j in have if j not in keep]
+        for j in extras:
+            flat = row * kmax + j
+            col_w[flat] = sentinel
+            val_w[flat] = ent["mul_ident"]
+            col_row[j] = sentinel          # keep the free-slot scan honest
+            val_row[j] = ent["mul_ident"]
+        if remaining:
+            free = [int(j) for j in np.flatnonzero(col_row == sentinel)]
+            if len(free) < len(remaining):
+                raise _EllOverflow(row)
+            for j, v in zip(free, remaining):
+                flat = row * kmax + j
+                col_w[flat] = col
+                val_w[flat] = v
+                col_row[j] = col
+                val_row[j] = v
+
+
+class _EllOverflow(RuntimeError):
+    """A dynamic hybrid ELL row ran out of spare columns (full rebuild)."""
+
 
 class DistributedBSPEngine(BSPEngine):
     """Partitions sharded over a mesh axis with shard_map.
@@ -799,14 +1219,51 @@ class DistributedBSPEngine(BSPEngine):
     route through the reverse outbox maps.
     """
 
-    def __init__(self, pg: PartitionedGraph, mesh: Mesh, axis: str = "parts",
-                 **kwargs):
-        if pg.num_parts % mesh.shape[axis]:
+    def __init__(self, pg, mesh: Mesh, axis: str = "parts", **kwargs):
+        from repro.core.dynamic import DynamicGraph
+
+        inner = pg.pg if isinstance(pg, DynamicGraph) else pg
+        if inner.num_parts % mesh.shape[axis]:
             raise ValueError("num_parts must divide mesh axis size")
         self.mesh = mesh
         self.axis = axis
-        self._hybrid_dist_cache: dict = {}
         super().__init__(pg, **kwargs)
+
+    def _bind(self, pg: PartitionedGraph) -> None:
+        self._hybrid_dist_cache: dict = {}
+        super()._bind(pg)
+
+    def _sync_dynamic(self) -> None:
+        # The distributed hybrid's compact-exchange maps (send_idx/recv_ids)
+        # are static used-slot sets: in-place deltas cannot extend them, so
+        # pending mutations are consumed through compaction instead (the
+        # in-place spare-slot exchange is future work — docs/dynamic.md).
+        if self.backend == HYBRID and self.dg.batches_in_version:
+            self.dg.compact()
+        super()._sync_dynamic()
+
+    def _run_batched_dyn(self, program: VertexProgram,
+                         state: BatchedState) -> Tuple[BatchedState, Array]:
+        self._sync_dynamic()
+        # The sharded path is already stale-constant-safe: edge arrays and
+        # the mutation payload travel as shard_map operands rebuilt from the
+        # engine's current binding on every call (see _dist_step_parts).
+        return DistributedBSPEngine.run_batched(self, program, state)
+
+    def should_resplit_hybrid(self, threshold: float = 0.10) -> bool:
+        # the distributed hybrid consumes mutations via forced compactions,
+        # each of which already re-runs plan_shards on the mutated graph
+        return False
+
+    def _run_fixed_batched_dyn(self, program: VertexProgram, num_steps: int,
+                               state: BatchedState) -> BatchedState:
+        # Fixed-step programs must ride the *sharded* path too (the base
+        # dynamic runner's local exchange/vote would silently unshard the
+        # run): a never-finished program variant turns the distributed
+        # while_loop into an exact num_steps round count.
+        state, _ = self._run_batched_dyn(
+            _fixed_step_program(program, num_steps), state)
+        return state
 
     # ------------------- distributed hybrid plumbing -----------------------
 
@@ -938,14 +1395,30 @@ class DistributedBSPEngine(BSPEngine):
 
     def _dist_step_parts(self, program: VertexProgram):
         """Shared run()/superstep() dispatch: the sharded extra operands
-        (hybrid shard arrays — already device_put — or edge arrays) and a
-        factory building the per-shard step function from them."""
+        (hybrid shard arrays — already device_put — or edge arrays, plus the
+        dynamic mutation payload when the graph mutates) and a factory
+        building the per-shard step function from them."""
         if self._uses_hybrid(program):
             shd, arrs = self._hybrid_dist_for(program)
             return arrs, (lambda extra:
                           self._hybrid_step_fn(program, shd, extra)), True
         edges = self.edges_for(program)
         dims = self.dims_for(edges)
+
+        if self.dg is not None:
+            # tomb/delta/inbox arrays share the edges' partition axis, so
+            # they shard under the same spec and slice per device.
+            extra = {"edges": edges,
+                     "dyn": self.dg.payload(program.use_reverse)}
+
+            def make_dyn(ex):
+                return functools.partial(_superstep, dims, program,
+                                         ex["edges"], self._dist_exchange,
+                                         self._dist_finished,
+                                         self.fused_cfg_for(program),
+                                         dyn=ex["dyn"])
+
+            return extra, make_dyn, False
 
         def make(extra):
             return functools.partial(_superstep, dims, program, extra,
@@ -994,6 +1467,8 @@ class DistributedBSPEngine(BSPEngine):
         """One jitted distributed superstep ``f(state, step) -> (state,
         finished)`` — the benchmarking hook (state is device_put on entry;
         unbatched contract, runs as a Q=1 batch internally)."""
+        if self.dg is not None:
+            self._sync_dynamic()
         spec = P(None, self.axis)
         extra_spec = P(self.axis)
         sharding = jax.sharding.NamedSharding(self.mesh, spec)

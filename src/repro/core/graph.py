@@ -10,8 +10,9 @@ timed regions — the same methodology as the paper (§5, "Time Measurements").
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Optional
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -127,6 +128,178 @@ def uniform(scale: int, edge_factor: int = DEFAULT_EDGE_FACTOR,
     src = rng.integers(0, n, size=m, dtype=np.int64)
     dst = rng.integers(0, n, size=m, dtype=np.int64)
     return from_edge_list(src, dst, n)
+
+
+# ---------------------------------------------------------------------------
+# Edge mutations (the dynamic-graph subsystem, core/dynamic.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MutationBatch:
+    """One batch of edge mutations, applied atomically between supersteps.
+
+    ``insert[i]`` selects the operation for edge ``(src[i], dst[i])``: True
+    inserts a new instance, False deletes one *existing* instance (FIFO over
+    parallel edges — see :class:`EdgeLedger`; deleting an absent edge is an
+    error).  ``weight`` carries insert weights on weighted graphs and is
+    ignored for deletes.  Vertex ids must stay inside the graph's fixed
+    ``[0, n)`` id space: mutation is an edge-set axis, not a vertex axis.
+    """
+
+    src: np.ndarray                    # int64 [m]
+    dst: np.ndarray                    # int64 [m]
+    insert: np.ndarray                 # bool [m]
+    weight: Optional[np.ndarray] = None  # float32 [m] or None
+
+    def __post_init__(self):
+        self.src = np.asarray(self.src, dtype=np.int64).reshape(-1)
+        self.dst = np.asarray(self.dst, dtype=np.int64).reshape(-1)
+        self.insert = np.asarray(self.insert, dtype=bool).reshape(-1)
+        if self.weight is not None:
+            self.weight = np.asarray(self.weight,
+                                     dtype=np.float32).reshape(-1)
+
+    def __len__(self) -> int:
+        return len(self.src)
+
+    @property
+    def num_inserts(self) -> int:
+        return int(self.insert.sum())
+
+    @property
+    def num_deletes(self) -> int:
+        return len(self) - self.num_inserts
+
+    @property
+    def monotone(self) -> bool:
+        """Insert-only batches preserve min/min-plus monotonicity (adding
+        edges can only lower a least-fixpoint), so warm-starting from the
+        previous solution stays exact; any delete breaks that."""
+        return self.num_deletes == 0
+
+
+class EdgeLedger:
+    """The host-side multiset of live edge instances.
+
+    The single source of truth for *which* instance a delete removes:
+    parallel edges form a FIFO per ``(src, dst)`` pair (base instances in
+    CSR order, inserts in arrival order), and a delete pops the oldest live
+    instance.  Every consumer of mutation semantics — the dynamic graph's
+    delta planner, the edge-stream generator, and the from-scratch rebuild
+    oracle (:func:`apply_mutation_batches`) — shares this rule, so a
+    mutated graph has exactly one canonical CSR.
+    """
+
+    def __init__(self, g: CSRGraph):
+        src = g.edge_sources()
+        self._src: List[int] = src.tolist()
+        self._dst: List[int] = g.col.tolist()
+        self._w: Optional[List[float]] = (
+            g.weights.tolist() if g.weights is not None else None)
+        self._alive = np.ones(len(self._src), dtype=bool)
+        self._num_alive = len(self._src)
+        self.num_base = len(self._src)
+        # Vectorized FIFO build: group edge ids by (src, dst) with one
+        # stable lexsort — per-*pair* Python work instead of per-edge
+        # (construction and compact() both pay this at |E| scale).
+        self._fifo = collections.defaultdict(collections.deque)
+        if len(src):
+            order = np.lexsort((g.col, src))     # stable: ids stay FIFO
+            s_s, s_d = src[order], g.col[order]
+            cuts = np.flatnonzero((s_s[1:] != s_s[:-1])
+                                  | (s_d[1:] != s_d[:-1])) + 1
+            for grp in np.split(order, cuts):
+                self._fifo[(int(src[grp[0]]),
+                            int(g.col[grp[0]]))] = collections.deque(
+                    grp.tolist())
+
+    def __len__(self) -> int:
+        return self._num_alive
+
+    def insert(self, u: int, v: int, w: Optional[float]) -> int:
+        """Append a new instance; returns its instance id."""
+        iid = len(self._src)
+        self._src.append(int(u))
+        self._dst.append(int(v))
+        if self._w is not None:
+            self._w.append(float(w if w is not None else 1.0))
+        if iid >= len(self._alive):
+            self._alive = np.concatenate(
+                [self._alive, np.ones(max(len(self._alive), 64), dtype=bool)])
+        self._alive[iid] = True
+        self._num_alive += 1
+        self._fifo[(int(u), int(v))].append(iid)
+        return iid
+
+    def delete(self, u: int, v: int) -> Tuple[int, Optional[float]]:
+        """Remove the oldest live instance of ``(u, v)``; returns (iid, w)."""
+        q = self._fifo.get((int(u), int(v)))
+        if not q:
+            raise KeyError(f"delete of absent edge ({u}, {v})")
+        iid = q.popleft()
+        self._alive[iid] = False
+        self._num_alive -= 1
+        w = self._w[iid] if self._w is not None else None
+        return iid, w
+
+    def apply(self, batch: "MutationBatch") -> None:
+        """Replay one batch in order — THE mutation-semantics loop, shared
+        by the rebuild oracle and the stream generator (the dynamic graph
+        interleaves the same calls with its layout planning)."""
+        w = batch.weight
+        for i in range(len(batch)):
+            if batch.insert[i]:
+                self.insert(batch.src[i], batch.dst[i],
+                            w[i] if w is not None else None)
+            else:
+                self.delete(batch.src[i], batch.dst[i])
+
+    def alive_weights(self, u: int, v: int) -> List[float]:
+        """⊗-relevant weights of the live instances of ``(u, v)``, FIFO
+        order (1.0 each on unweighted graphs)."""
+        ids = self._fifo.get((int(u), int(v)), ())
+        if self._w is None:
+            return [1.0] * len(ids)
+        return [self._w[i] for i in ids]
+
+    def alive_count(self, u: int, v: int) -> int:
+        return len(self._fifo.get((int(u), int(v)), ()))
+
+    def edge_list(self):
+        """Live instances as (src, dst, weights-or-None) arrays, instance-id
+        (base-then-arrival) order."""
+        alive = self._alive[: len(self._src)]
+        src = np.asarray(self._src, dtype=np.int64)[alive]
+        dst = np.asarray(self._dst, dtype=np.int64)[alive]
+        w = (np.asarray(self._w, dtype=np.float32)[alive]
+             if self._w is not None else None)
+        return src, dst, w
+
+    def sample_alive(self, rng: np.random.Generator, k: int):
+        """Sample ``k`` distinct live instances (for delete streams);
+        returns (src, dst) arrays."""
+        ids = np.flatnonzero(self._alive[: len(self._src)])
+        pick = rng.choice(ids, size=min(k, len(ids)), replace=False)
+        src = np.asarray(self._src, dtype=np.int64)[pick]
+        dst = np.asarray(self._dst, dtype=np.int64)[pick]
+        return src, dst
+
+    def to_csr(self, num_vertices: int) -> CSRGraph:
+        """Canonical CSR of the live multiset (``from_edge_list`` order)."""
+        src, dst, w = self.edge_list()
+        return from_edge_list(src, dst, num_vertices, weights=w)
+
+
+def apply_mutation_batches(g: CSRGraph,
+                           batches: Sequence[MutationBatch]) -> CSRGraph:
+    """From-scratch rebuild oracle: replay ``batches`` over ``g`` through an
+    :class:`EdgeLedger` and emit the canonical mutated CSR.  The dynamic
+    graph's ``mutated_csr()`` must equal this for the same batches — the
+    incremental contract's ground truth."""
+    ledger = EdgeLedger(g)
+    for batch in batches:
+        ledger.apply(batch)
+    return ledger.to_csr(g.num_vertices)
 
 
 def to_dense(g: CSRGraph) -> np.ndarray:

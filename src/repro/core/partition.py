@@ -72,6 +72,10 @@ class EdgeArrays:
     outbox_mask: np.ndarray  # [P, P, o_max] bool
     inbox_dst: np.ndarray   # [P, P, o_max] = outbox_dst.transpose(1, 0, 2)
     num_edges: np.ndarray   # [P] true edge counts
+    # Original edge index of each slot (-1 padding): the dynamic layer's
+    # tombstone locator (core/dynamic.py).  None for arrays built before
+    # this field existed.
+    edge_id: Optional[np.ndarray] = None  # [P, e_max] int64
 
     @property
     def e_max(self) -> int:
@@ -124,6 +128,13 @@ class PartitionedGraph:
         for p, l2g in enumerate(self.assignment.l2g):
             out[p, : len(l2g)] = global_vals[l2g]
         return out
+
+    def scatter_dirty(self, dirty_global: np.ndarray) -> np.ndarray:
+        """Global [n] dirty-vertex mask (``DynamicGraph.dirty_since``) into
+        [P, v_max] layout — the warm-start seeding helper
+        (``BSPEngine.run_incremental``)."""
+        return self.scatter_global(np.asarray(dirty_global, dtype=bool),
+                                   False)
 
 
 def assign_vertices(g: CSRGraph, num_parts: int, strategy: str = RAND,
@@ -190,8 +201,15 @@ def boundary_edges(ea: EdgeArrays, p: int, v_max: int):
 
 
 def _build_edge_arrays(g: CSRGraph, asg: VertexAssignment, v_max: int,
-                       align: int) -> EdgeArrays:
-    """Construct the edge-parallel arrays + outbox maps for one direction."""
+                       align: int, spare_outbox: int = 0) -> EdgeArrays:
+    """Construct the edge-parallel arrays + outbox maps for one direction.
+
+    ``spare_outbox`` reserves that many unassigned outbox slots per
+    (partition, peer) pair — headroom the dynamic layer (core/dynamic.py)
+    assigns to inserted boundary edges targeting previously-unmessaged
+    remote vertices, without changing ``o_max`` (shape stability is the
+    zero-retrace contract).
+    """
     P = asg.num_parts
     src_g = g.edge_sources()
     dst_g = g.col
@@ -210,7 +228,7 @@ def _build_edge_arrays(g: CSRGraph, asg: VertexAssignment, v_max: int,
             uniq = np.unique(dst_g[m])
             remote_sets[p][q] = uniq
             o_req = max(o_req, len(uniq))
-    o_max = max(_round_up(o_req, align), align)
+    o_max = max(_round_up(o_req + spare_outbox, align), align)
 
     e_req = int(np.bincount(sp, minlength=P).max()) if len(sp) else 0
     e_max = max(_round_up(e_req, align), align)
@@ -220,12 +238,14 @@ def _build_edge_arrays(g: CSRGraph, asg: VertexAssignment, v_max: int,
     weight = (np.zeros((P, e_max), dtype=np.float32)
               if g.weights is not None else None)
     edge_mask = np.zeros((P, e_max), dtype=bool)
+    edge_id = np.full((P, e_max), -1, dtype=np.int64)
     outbox_dst = np.full((P, P, o_max), v_max, dtype=np.int32)  # pad → sink
     outbox_mask = np.zeros((P, P, o_max), dtype=bool)
     num_edges = np.zeros(P, dtype=np.int64)
 
     for p in range(P):
         em = sp == p
+        e_ids = np.flatnonzero(em)
         e_src = asg.local_id[src_g[em]].astype(np.int32)
         e_dst_g = dst_g[em]
         e_dp = dp[em]
@@ -259,6 +279,7 @@ def _build_edge_arrays(g: CSRGraph, asg: VertexAssignment, v_max: int,
         src[p, :k] = e_src[order]
         dst_ext[p, :k] = ext[order]
         edge_mask[p, :k] = True
+        edge_id[p, :k] = e_ids[order]
         if weight is not None:
             weight[p, :k] = g.weights[em][order]
         num_edges[p] = k
@@ -268,19 +289,22 @@ def _build_edge_arrays(g: CSRGraph, asg: VertexAssignment, v_max: int,
                       outbox_mask=outbox_mask,
                       inbox_dst=np.ascontiguousarray(
                           outbox_dst.transpose(1, 0, 2)),
-                      num_edges=num_edges)
+                      num_edges=num_edges, edge_id=edge_id)
 
 
 def partition(g: CSRGraph, num_parts: int, strategy: str = RAND,
               cpu_edge_fraction: Optional[float] = None, seed: int = 0,
               include_reverse: bool = False,
-              align: int = 8) -> PartitionedGraph:
-    """Partition ``g`` into ``num_parts`` fixed-shape partitions."""
+              align: int = 8, spare_outbox: int = 0) -> PartitionedGraph:
+    """Partition ``g`` into ``num_parts`` fixed-shape partitions.
+
+    ``spare_outbox`` reserves unassigned outbox slots per peer pair for the
+    dynamic layer's in-place edge inserts (see core/dynamic.py)."""
     asg = assign_vertices(g, num_parts, strategy, cpu_edge_fraction, seed)
     v_max = max(_round_up(int(asg.part_sizes.max()), align), align)
 
-    fwd = _build_edge_arrays(g, asg, v_max, align)
-    rev = (_build_edge_arrays(g.reverse(), asg, v_max, align)
+    fwd = _build_edge_arrays(g, asg, v_max, align, spare_outbox)
+    rev = (_build_edge_arrays(g.reverse(), asg, v_max, align, spare_outbox)
            if include_reverse else None)
 
     deg = g.out_degrees().astype(np.float32)
@@ -413,11 +437,18 @@ def build_block_metadata(ea: EdgeArrays, *, block_e: int = 1024,
 
 def memory_footprint_bytes(pg: PartitionedGraph, state_bytes: int = 4,
                            vid_bytes: int = 4,
-                           eid_bytes: int = 4) -> dict:
+                           eid_bytes: int = 4,
+                           dynamic=None) -> dict:
     """Per-partition memory footprint, the analogue of paper Table 5.
 
     Actual-size formula from §4.3.3:
     ``eid*|Vp| + vid*|Ep| (+ w*|Ep|) + (vid+s)*|Vi| + (vid+s)*|Vo|``.
+
+    ``dynamic`` (a ``core.dynamic.DynamicGraph`` wrapping ``pg``, or any
+    object with ``delta_slots``/``directions``/``weighted`` attributes) adds
+    the resident delta-slot and tombstone buffers per direction — without it
+    the serving driver's capacity planning under-reports a mutating graph's
+    true residency.
     """
     P = pg.num_parts
     res = {}
@@ -433,5 +464,14 @@ def memory_footprint_bytes(pg: PartitionedGraph, state_bytes: int = 4,
             inbox=(vid_bytes + state_bytes) * vi,
             state=state_bytes * vp,
         )
+        if dynamic is not None:
+            d_max = int(dynamic.delta_slots)
+            ndir = int(dynamic.directions)
+            dw = 4 if dynamic.weighted else 0
+            # delta slots: src + dst_ext (+ weight) per direction
+            res[p]["delta"] = ndir * d_max * (2 * vid_bytes + dw)
+            # tombstone masks: one byte per base edge slot per direction
+            tomb = pg.fwd.e_max + (pg.rev.e_max if pg.rev is not None else 0)
+            res[p]["tombstone"] = tomb
         res[p]["total"] = sum(res[p].values())
     return res

@@ -273,6 +273,32 @@ def plan_shards(shard_ranks, shard_edges, shard_slots, candidates,
                 bottleneck=bottleneck["shard"])
 
 
+def should_resplit(edge_max_rank: np.ndarray, num_edges: int, candidates,
+                   current_k: int, threshold: float = 0.10,
+                   **kwargs) -> "tuple[bool, dict]":
+    """Decide whether a drifted (mutated) graph warrants re-splitting.
+
+    The dynamic layer keeps the degree split frozen between compactions —
+    a stale split is a performance choice, never a correctness one — so the
+    expensive re-ranking (``choose_k_dense``, or ``plan_shards`` per shard)
+    should only run when it pays.  This evaluates the *current* split on the
+    *drifted* graph's ranks against the argmin over ``candidates`` and
+    votes to resplit only when the predicted makespan improves by more than
+    ``threshold`` (relative).  Returns ``(resplit, info)`` with
+    ``info = dict(current_makespan, best_makespan, best_k, improvement,
+    table)``.
+    """
+    cands = sorted(set(int(c) for c in candidates) | {int(current_k)})
+    table = rank_k_dense(edge_max_rank, num_edges, cands, **kwargs)
+    cur = next(r for r in table if r["k_dense"] == int(current_k))
+    best = min(table, key=lambda rec: rec["makespan"])
+    improvement = 1.0 - best["makespan"] / max(cur["makespan"], 1e-30)
+    return improvement > threshold, dict(
+        current_k=int(current_k), current_makespan=cur["makespan"],
+        best_k=best["k_dense"], best_makespan=best["makespan"],
+        improvement=improvement, table=table)
+
+
 def split_mode(k_dense: int, num_vertices: int, e_sparse: int) -> str:
     """Classify a chosen split: the engine runs dense, sparse, or both."""
     if k_dense == 0:

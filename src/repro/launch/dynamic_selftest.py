@@ -1,0 +1,129 @@
+"""Dynamic-graph parity self-test: the incremental contract across the full
+backend × strategy matrix at a forced device count.
+
+For every backend {reference, fused, hybrid} × strategy {rand, high, low}:
+apply a deterministic mutation stream (inserts + deletes,
+``data.graphs.edge_stream``) to a resident :class:`DynamicGraph`, then
+assert that running on the mutated-in-place layout equals a from-scratch
+partition + run of the canonically mutated graph — bitwise for the min /
+min-plus algorithms (BFS, SSSP), f32-allclose for the sum path (PageRank,
+whose delta tail / dense-block writes legitimately reassociate).  An
+insert-only window then checks monotone warm-start parity, and the jit
+cache is asserted not to grow across mutation batches (the zero-retrace
+contract).  With >1 device the same matrix runs through
+``DistributedBSPEngine`` (the hybrid backend consumes mutations via
+compaction there — docs/dynamic.md).  Invoked in a subprocess so the
+forced device count never leaks:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      python -m repro.launch.dynamic_selftest [--scale 8] [--parts 4]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=8)
+    ap.add_argument("--edge-factor", type=int, default=4)
+    ap.add_argument("--parts", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=13)
+    ap.add_argument("--batches", type=int, default=3)
+    ap.add_argument("--batch-size", type=int, default=24)
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.core import bsp
+    from repro.core import graph as G
+    from repro.core import partition as PT
+    from repro.core.bsp import BSPEngine, DistributedBSPEngine
+    from repro.core.dynamic import DynamicGraph
+    from repro.core.graph import apply_mutation_batches
+    from repro.data.graphs import edge_stream
+    from repro.algorithms.bfs import bfs_batched, bfs_incremental
+    from repro.algorithms.sssp import sssp_batched, sssp_incremental
+    from repro.algorithms.pagerank import pagerank
+
+    n_dev = len(jax.devices())
+    assert args.parts % n_dev == 0, (args.parts, n_dev)
+    mesh = jax.make_mesh((n_dev,), ("parts",))
+    distributed = n_dev > 1
+
+    g = G.rmat(args.scale, args.edge_factor,
+               seed=args.seed).with_uniform_weights(seed=1)
+    stream = edge_stream(g, args.batches, args.batch_size, churn=0.7,
+                         seed=args.seed)
+    g_mut = apply_mutation_batches(g, stream)
+    sources = [0, 3, 17, 91]
+
+    backends = {"reference": dict(), "fused": dict(fused=True, block_e=256),
+                "hybrid": dict(backend="hybrid")}
+    for strategy in PT.STRATEGIES:
+        pg_mut = PT.partition(g_mut, args.parts, strategy)
+        want_bfs, _ = bfs_batched(BSPEngine(pg_mut), sources)
+        want_sssp, _ = sssp_batched(BSPEngine(pg_mut), sources)
+        want_pr = pagerank(BSPEngine(pg_mut), num_iterations=8)
+        for name, kw in backends.items():
+            dg = DynamicGraph(g, args.parts, strategy,
+                              mutation_capacity=4 * args.batch_size)
+            if distributed:
+                eng = DistributedBSPEngine(dg, mesh, **kw)
+            else:
+                eng = BSPEngine(dg, **kw)
+            # compile the retrace-gated programs before the stream starts
+            # (pagerank builds a fresh program object per call — a per-call
+            # retrace by construction, identical on the static engine, so
+            # it sits outside the guard)
+            bfs_batched(eng, sources)
+            sssp_batched(eng, sources)
+            caches = [bsp._run_dyn_jit, bsp._run_dyn_hybrid_jit]
+            entries0 = sum(f._cache_size() for f in caches)
+            for mb in stream:
+                dg.apply_mutations(mb)
+            # mutate-then-rerun == from-scratch rebuild of the mutated graph
+            got_bfs, _ = bfs_batched(eng, sources)
+            np.testing.assert_array_equal(got_bfs, want_bfs)      # min
+            got_sssp, _ = sssp_batched(eng, sources)
+            np.testing.assert_array_equal(got_sssp, want_sssp)    # min-plus
+            if not distributed and dg.compactions == 0:
+                # zero-retrace contract: same-shape batches reuse the
+                # compiled loops (distributed shard_map closures are
+                # per-call; the single-device runner is the gated path)
+                grown = sum(f._cache_size() for f in caches) - entries0
+                assert grown == 0, (name, strategy, grown)
+            got_pr = pagerank(eng, num_iterations=8)
+            np.testing.assert_allclose(got_pr, want_pr, rtol=1e-5,
+                                       atol=1e-8)                 # f32 sum
+
+            # monotone warm start from the current fixpoint
+            mark = dg.mark()
+            ins = edge_stream(dg.mutated_csr(), 1, args.batch_size,
+                              churn=1.0, seed=args.seed + 7)[0]
+            dg.apply_mutations(ins)
+            dirty, monotone = dg.dirty_since(mark)
+            assert monotone
+            warm_bfs, wsteps = bfs_incremental(eng, got_bfs, dirty)
+            cold_bfs, csteps = bfs_batched(eng, sources)
+            np.testing.assert_array_equal(warm_bfs, cold_bfs)     # bitwise
+            assert int(wsteps.max()) <= int(csteps.max())
+            warm_sssp, _ = sssp_incremental(eng, got_sssp, dirty)
+            cold_sssp, _ = sssp_batched(eng, sources)
+            np.testing.assert_array_equal(warm_sssp, cold_sssp)   # bitwise
+
+            # compaction round-trip: fold everything, rerun, same answer
+            dg.compact()
+            post_bfs, _ = bfs_batched(eng, sources)
+            np.testing.assert_array_equal(post_bfs, cold_bfs)
+        print(f"{strategy:>4}: bfs/sssp/pagerank mutate-rerun parity + "
+              f"warm-start + compaction over {n_dev} device(s)", flush=True)
+
+    print("DYNAMIC SELFTEST OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

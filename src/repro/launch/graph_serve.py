@@ -119,23 +119,241 @@ def serve(engine, alg: str, sources: np.ndarray, batch: int,
     return report
 
 
-def build_engine(args):
+def build_engine(args, dynamic: bool = False):
     from repro.core import graph as G
     from repro.core import partition as PT
     from repro.core.bsp import BSPEngine
+    from repro.core.dynamic import DynamicGraph
 
     gen = G.rmat if args.graph == "rmat" else G.uniform
     g = gen(args.scale, args.edge_factor, seed=args.seed)
     if args.alg == "sssp":
         g = g.with_uniform_weights(seed=args.seed + 1)
-    pg = PT.partition(g, args.parts, args.strategy,
-                      include_reverse=(args.alg == "bc"))
     kw = {}
     if args.backend == "fused":
         kw = dict(fused=True, block_e=args.block_e)
     elif args.backend == "hybrid":
         kw = dict(backend="hybrid")
+    if dynamic:
+        dg = DynamicGraph(g, args.parts, args.strategy,
+                          include_reverse=(args.alg == "bc"),
+                          mutation_capacity=args.mutation_batch)
+        return g, dg, BSPEngine(dg, **kw)
+    pg = PT.partition(g, args.parts, args.strategy,
+                      include_reverse=(args.alg == "bc"))
     return g, pg, BSPEngine(pg, **kw)
+
+
+def estimate_depth_order(g, sources: np.ndarray) -> np.ndarray:
+    """Order ``sources`` by estimated traversal depth, shallow first.
+
+    A batch runs ``max_q(steps_q)`` supersteps, so one deep query taxes
+    every shallow query sharing its batch.  The proxy: BFS from a hub
+    reaches the massive component in few levels, BFS from a fringe vertex
+    walks long chains first — out-degree (cheap, already resident) orders
+    hubs before fringe.  Returns indices into ``sources``.
+    """
+    deg = g.out_degrees()[np.asarray(sources)]
+    return np.argsort(-deg, kind="stable")
+
+
+def serve_depth_bucketed(engine, g, alg: str, sources: np.ndarray,
+                         batch: int, num_buckets: int = 4) -> dict:
+    """Depth-bucketing scheduler: drain the stream in estimated-depth order
+    so shallow queries never ride a deep query's superstep count.
+
+    Runs the same stream twice — arrival order (baseline: batches mix
+    depths) and depth-bucketed — and reports per-bucket p50/p99 per-query
+    latency for both (a query's latency is its batch's wall time).  The
+    shallow buckets' p99 is the win; the deep buckets pay what they always
+    paid.
+    """
+    order = estimate_depth_order(g, sources)
+    num = len(sources)
+    num_buckets = max(1, min(num_buckets, num))  # every bucket non-empty
+    bucket_of = np.empty(num, dtype=np.int64)   # by stream position
+    for b in range(num_buckets):
+        lo = b * num // num_buckets
+        hi = (b + 1) * num // num_buckets
+        bucket_of[order[lo:hi]] = b
+
+    run_query_batch(engine, alg, np.asarray(sources[:batch]))  # warm compile
+
+    def drain(stream_idx):
+        lat = np.empty(num, dtype=np.float64)
+        for i in range(0, num, batch):
+            idx = stream_idx[i: i + batch]
+            srcs = np.asarray(sources)[idx]
+            if len(srcs) < batch:                 # pad the tail batch
+                srcs = np.resize(srcs, batch)
+            t0 = time.perf_counter()
+            run_query_batch(engine, alg, srcs)
+            lat[idx] = (time.perf_counter() - t0) * 1e3
+        return lat
+
+    lat_base = drain(np.arange(num))              # arrival order (mixed)
+    lat_buck = drain(order)                       # depth-homogeneous batches
+    buckets = []
+    for b in range(num_buckets):
+        m = bucket_of == b
+        buckets.append(dict(
+            bucket=b, queries=int(m.sum()),
+            min_degree=int(g.out_degrees()[sources[m]].min()),
+            baseline_p50_ms=_percentile(lat_base[m], 50),
+            baseline_p99_ms=_percentile(lat_base[m], 99),
+            bucketed_p50_ms=_percentile(lat_buck[m], 50),
+            bucketed_p99_ms=_percentile(lat_buck[m], 99)))
+    return dict(num_buckets=num_buckets, batch=batch,
+                baseline_p99_ms=_percentile(lat_base, 99),
+                bucketed_p99_ms=_percentile(lat_buck, 99),
+                buckets=buckets)
+
+
+def refresh_standing(engine, dg, alg: str, sources, prev, mark) -> dict:
+    """Refresh a standing query set after mutations: warm-start when the
+    window allows (monotone program + insert-only batches), cold otherwise.
+    Runs the cold path too, so the report can state the superstep savings
+    honestly.  Returns the new results + metrics.
+    """
+    from repro.algorithms import (bfs_batched, bfs_incremental, sssp_batched,
+                                  sssp_incremental)
+
+    dirty, monotone = dg.dirty_since(mark)
+    incremental = {"bfs": (bfs_incremental, bfs_batched),
+                   "sssp": (sssp_incremental, sssp_batched)}.get(alg)
+    cold_fn = (incremental[1] if incremental
+               else (lambda e, s: (run_query_batch(e, alg, s), None)))
+    t0 = time.perf_counter()
+    cold_out = cold_fn(engine, sources)
+    cold_ms = (time.perf_counter() - t0) * 1e3
+    cold_res, cold_steps = cold_out if incremental else (cold_out[0], None)
+    rec = dict(mode="cold", cold_ms=cold_ms,
+               cold_steps=(None if cold_steps is None
+                           else [int(s) for s in cold_steps]))
+    result = cold_res
+    if incremental is not None and monotone:
+        warm_fn = incremental[0]
+        t0 = time.perf_counter()
+        warm_res, warm_steps = warm_fn(engine, prev, dirty)
+        rec.update(mode="incremental", warm_ms=(time.perf_counter() - t0)
+                   * 1e3, warm_steps=[int(s) for s in warm_steps],
+                   bitwise_equal=bool(np.array_equal(warm_res, cold_res)))
+        result = warm_res
+    return dict(rec, result=result)
+
+
+def serve_mutating(engine, dg, alg: str, *, batches, batch: int,
+                   standing: int, query_batches_per_round: int,
+                   seed: int = 1, compact: bool = True,
+                   skew_drift_threshold: float = 0.5,
+                   resplit_threshold: float = 0.10) -> dict:
+    """Interleave mutation batches with query batches against the resident
+    graph — the evolving-graph serving regime end to end.
+
+    Per round: one mutation batch is applied in place (edges/s), fresh
+    random queries are served cold, and a *standing* query set is kept
+    fresh — warm-started from its previous fixpoint when the window is
+    monotone, recomputed cold otherwise — under the zero-retrace contract
+    (the dynamic runner's jit cache must not grow after warmup; a
+    compaction pause is the one excepted, separately-reported event).
+    Compactions trigger on the staleness signals (including degree-skew
+    drift at ``skew_drift_threshold``) or, on the hybrid backend, on
+    ``engine.should_resplit_hybrid`` — the ``perf_model.should_resplit``
+    vote that the drifted degree ranking beats the frozen split's
+    predicted makespan by ``resplit_threshold``.
+    """
+    from repro.core import bsp
+
+    rng = np.random.default_rng(seed)
+    n = dg.pg.num_vertices
+    standing_sources = rng.integers(0, n, size=standing)
+
+    # warm-up: compile the cold path + serve loop before timing
+    prev = run_query_batch(engine, alg, standing_sources)
+    mark = dg.mark()
+    cache_fns = [bsp._run_dyn_jit, bsp._run_dyn_hybrid_jit]
+
+    def cache_entries():
+        return sum(f._cache_size() for f in cache_fns)
+
+    rounds, lat_ms = [], []
+    mut_edges = mut_s = 0.0
+    compact_ms = 0.0
+    resplits = 0
+    warm_steps_all, cold_steps_all = [], []
+    retraces = 0
+    entries_prev = rebinds_prev = rebuilds_prev = None
+    warm_versions = set()     # graph versions whose warm path has compiled
+    t_all = time.perf_counter()
+    for i, mb in enumerate(batches):
+        rep = dg.apply_mutations(mb)
+        mut_edges += rep["num_edges"]
+        mut_s += rep["apply_ms"] / 1e3
+        if rep["compacted"]:
+            # capacity-overflow auto-compaction inside apply_mutations —
+            # --no-compact only disables the *threshold-driven* kind
+            compact_ms += dg.last_compaction_ms
+        if compact and dg.should_compact(
+                max_skew_drift=skew_drift_threshold):
+            compact_ms += dg.compact()
+        elif compact and engine.should_resplit_hybrid(resplit_threshold):
+            # re-ranking the degree split rides a compaction: the rebind
+            # re-runs the perf-model plan on the mutated graph
+            compact_ms += dg.compact()
+            resplits += 1
+        for _ in range(query_batches_per_round):
+            srcs = rng.integers(0, n, size=batch)
+            t0 = time.perf_counter()
+            run_query_batch(engine, alg, srcs)
+            lat_ms.append((time.perf_counter() - t0) * 1e3)
+        ref = refresh_standing(engine, dg, alg, standing_sources, prev, mark)
+        prev = ref.pop("result")
+        mark = dg.mark()
+        if ref.get("warm_steps"):
+            warm_steps_all.append(max(ref["warm_steps"]))
+        if ref.get("cold_steps"):
+            cold_steps_all.append(max(ref["cold_steps"]))
+        rounds.append(dict(round=i, mutation=dict(
+            (k, v) for k, v in rep.items() if k != "dirty"), refresh=ref))
+        # Zero-retrace accounting, per round: cache growth counts as a
+        # retrace unless something legitimately new compiled this round —
+        # a compaction rebind (shape-changed loops recompile), or the warm
+        # path's first run at the current graph version (its relaxation
+        # program compiles once per shape).  Those rounds just reset the
+        # baseline; the gate stays armed for every other round (round 0
+        # seeds the baseline after warm-up compiles).
+        legit = (engine.dynamic_rebinds != rebinds_prev
+                 or engine.hybrid_dyn_rebuilds != rebuilds_prev)
+        if (ref.get("mode") == "incremental"
+                and dg.version not in warm_versions):
+            warm_versions.add(dg.version)
+            legit = True
+        if entries_prev is not None and not legit:
+            retraces += cache_entries() - entries_prev
+        entries_prev = cache_entries()
+        rebinds_prev = engine.dynamic_rebinds
+        rebuilds_prev = engine.hybrid_dyn_rebuilds
+    wall_s = time.perf_counter() - t_all
+
+    report = dict(
+        algorithm=alg, batch=batch, rounds=len(rounds),
+        standing=standing,
+        mutation_edges_per_sec=(mut_edges / mut_s) if mut_s else None,
+        mutation_edges=int(mut_edges),
+        incremental_steps=(int(np.mean(warm_steps_all))
+                           if warm_steps_all else None),
+        cold_steps=(int(np.mean(cold_steps_all))
+                    if cold_steps_all else None),
+        batch_p50_ms=_percentile(lat_ms, 50),
+        batch_p99_ms=_percentile(lat_ms, 99),
+        compactions=dg.compactions, compaction_pause_ms=compact_ms,
+        resplits=resplits,
+        dynamic_rebinds=engine.dynamic_rebinds,
+        hybrid_rebuilds=engine.hybrid_dyn_rebuilds,
+        retraces=retraces,
+        wall_s=wall_s, per_round=rounds,
+        staleness=dg.staleness())
+    return report
 
 
 def main(argv=None) -> int:
@@ -159,11 +377,74 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default=None, help="write the report JSON here")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI (scale 8, 3 batches of 4)")
+    # --- dynamic-graph serving (docs/dynamic.md) ---
+    ap.add_argument("--mutate", action="store_true",
+                    help="interleave edge-mutation batches with query "
+                         "batches against a resident DynamicGraph")
+    ap.add_argument("--mutation-batch", type=int, default=256,
+                    help="edges per mutation batch")
+    ap.add_argument("--mutation-rounds", type=int, default=8,
+                    help="mutation batches in the stream")
+    ap.add_argument("--churn", type=float, default=0.7,
+                    help="insert fraction of each mutation batch (the rest "
+                         "deletes; 1.0 keeps warm starts monotone)")
+    ap.add_argument("--standing", type=int, default=8,
+                    help="standing query set kept fresh across mutations")
+    ap.add_argument("--no-compact", action="store_true",
+                    help="disable threshold-driven compaction (capacity-"
+                         "overflow auto-compaction still applies; its "
+                         "pauses are reported either way)")
+    # --- depth-bucketing scheduler (ROADMAP open item) ---
+    ap.add_argument("--depth-buckets", type=int, default=0, metavar="B",
+                    help="serve the stream in B estimated-depth buckets and "
+                         "report per-bucket p99 vs the unbucketed baseline")
     args = ap.parse_args(argv)
     if args.smoke:
         args.scale = min(args.scale, 8)
         args.batch = min(args.batch, 4)
         args.num_queries = min(args.num_queries, 3 * args.batch)
+        args.mutation_batch = min(args.mutation_batch, 32)
+        args.mutation_rounds = min(args.mutation_rounds, 3)
+        args.standing = min(args.standing, 4)
+
+    if args.mutate:
+        from repro.data.graphs import edge_stream
+
+        g, dg, engine = build_engine(args, dynamic=True)
+        print(f"resident dynamic graph: |V|={g.num_vertices:,} "
+              f"|E|={g.num_edges:,} parts={args.parts} "
+              f"strategy={args.strategy} backend={args.backend} "
+              f"delta_slots={dg.delta_slots}/partition", flush=True)
+        stream = edge_stream(g, args.mutation_rounds, args.mutation_batch,
+                             churn=args.churn, seed=args.seed)
+        report = serve_mutating(
+            engine, dg, args.alg, batches=stream, batch=args.batch,
+            standing=args.standing, query_batches_per_round=2,
+            seed=args.seed, compact=not args.no_compact)
+        inc = report["incremental_steps"]
+        cold = report["cold_steps"]
+        savings = (f"{inc} vs {cold} supersteps "
+                   f"({cold / max(inc, 1):.1f}x fewer)"
+                   if inc is not None and cold else "n/a (non-monotone)")
+        print(f"{args.alg}: {report['rounds']} mutation rounds x "
+              f"{args.mutation_batch} edges -> "
+              f"{report['mutation_edges_per_sec']:.0f} edges/s applied; "
+              f"incremental refresh {savings}; query batch "
+              f"p50={report['batch_p50_ms']:.1f} "
+              f"p99={report['batch_p99_ms']:.1f} ms; "
+              f"compactions={report['compactions']} "
+              f"({report['compaction_pause_ms']:.0f} ms paused); "
+              f"retraces={report['retraces']}", flush=True)
+        if report["retraces"]:
+            print(f"WARNING: {report['retraces']} compile-cache entries "
+                  f"added after warmup without a compaction — mutation "
+                  f"batches are retracing", file=sys.stderr)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(dict(vars(args), **report), f, indent=2)
+            print(f"wrote {args.out}")
+        print("GRAPH SERVE OK")
+        return 0
 
     g, pg, engine = build_engine(args)
     print(f"resident graph: |V|={g.num_vertices:,} |E|={g.num_edges:,} "
@@ -172,6 +453,27 @@ def main(argv=None) -> int:
 
     rng = np.random.default_rng(args.seed)
     sources = rng.integers(0, g.num_vertices, size=args.num_queries)
+
+    if args.depth_buckets:
+        rep = serve_depth_bucketed(engine, g, args.alg, sources, args.batch,
+                                   num_buckets=args.depth_buckets)
+        for b in rep["buckets"]:
+            print(f"bucket {b['bucket']} (deg>={b['min_degree']}, "
+                  f"{b['queries']} queries): p99 "
+                  f"{b['baseline_p99_ms']:.1f} -> "
+                  f"{b['bucketed_p99_ms']:.1f} ms "
+                  f"(p50 {b['baseline_p50_ms']:.1f} -> "
+                  f"{b['bucketed_p50_ms']:.1f})", flush=True)
+        print(f"stream p99 {rep['baseline_p99_ms']:.1f} -> "
+              f"{rep['bucketed_p99_ms']:.1f} ms with {args.depth_buckets} "
+              f"depth buckets", flush=True)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(dict(vars(args), **rep), f, indent=2)
+            print(f"wrote {args.out}")
+        print("GRAPH SERVE OK")
+        return 0
+
     report = serve(engine, args.alg, sources, args.batch)
 
     if report["ms_per_query"] is None:

@@ -1,0 +1,378 @@
+"""Dynamic-graph subsystem: the incremental contract end to end.
+
+The backbone is the parity matrix — every backend {reference, fused,
+hybrid} × {1, 2, 4} forced host devices × {RAND, HIGH, LOW}, in
+subprocesses (``repro.launch.dynamic_selftest``): apply an insert+delete
+mutation stream in place, then assert mutate-then-rerun equals a
+from-scratch partition+run of the mutated graph (bitwise for min/min-plus,
+allclose for the f32 sum path), monotone warm-start parity vs cold, a
+compaction round trip, and the zero-retrace guard across ≥3 mutation
+batches.  The in-process tests cover the pieces that don't need a
+multi-device runtime: ledger/mutation semantics, delta/outbox capacity and
+auto-compaction, staleness signals, ``perf_model.should_resplit``, the
+footprint fix, and the mutating / depth-bucketed serving smokes.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core import partition as PT
+from repro.core import perf_model
+from repro.core.bsp import BSPEngine
+from repro.core.dynamic import CapacityError, DynamicGraph
+from repro.core.graph import (EdgeLedger, MutationBatch,
+                              apply_mutation_batches)
+from repro.data.graphs import edge_stream
+
+INTERP = dict(interpret=True)
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(ndev: int, module: str, *args, timeout=900):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={ndev}",
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH",
+                                                            ""))
+    return subprocess.run([sys.executable, "-m", module, *args],
+                          capture_output=True, text=True, env=env,
+                          timeout=timeout)
+
+
+@pytest.mark.parametrize("ndev", [1, 2, 4])
+def test_distributed_dynamic_parity(ndev):
+    """reference/fused/hybrid × RAND/HIGH/LOW: mutate-then-rerun equals a
+    from-scratch rebuild, warm-start parity, compaction round trip, and the
+    retrace guard — per forced device count."""
+    r = _run(ndev, "repro.launch.dynamic_selftest", "--parts", "4")
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "DYNAMIC SELFTEST OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# mutation semantics (ledger + canonical rebuild)
+# ---------------------------------------------------------------------------
+
+def test_ledger_fifo_delete_of_parallel_edges():
+    """Deletes pop the *oldest* live instance of a (u, v) pair — base
+    instances in CSR order, then inserts in arrival order."""
+    g = G.from_edge_list(np.array([0, 0, 1]), np.array([1, 1, 2]), 4,
+                        weights=np.array([5.0, 9.0, 1.0], np.float32))
+    led = EdgeLedger(g)
+    led.insert(0, 1, 2.0)
+    assert led.alive_weights(0, 1) == [5.0, 9.0, 2.0]
+    iid, w = led.delete(0, 1)
+    assert w == 5.0                       # base instance first
+    assert led.alive_weights(0, 1) == [9.0, 2.0]
+    led.delete(0, 1)
+    assert led.alive_weights(0, 1) == [2.0]   # then the insert
+    with pytest.raises(KeyError):
+        led.delete(3, 0)
+
+
+def test_mutated_csr_matches_rebuild_oracle():
+    g = G.rmat(7, 4, seed=3).with_uniform_weights(seed=1)
+    stream = edge_stream(g, 3, 16, churn=0.6, seed=5)
+    dg = DynamicGraph(g, 2, PT.RAND, mutation_capacity=64)
+    for b in stream:
+        dg.apply_mutations(b)
+    want = apply_mutation_batches(g, stream)
+    got = dg.mutated_csr()
+    np.testing.assert_array_equal(got.row_ptr, want.row_ptr)
+    np.testing.assert_array_equal(got.col, want.col)
+    np.testing.assert_array_equal(got.weights, want.weights)
+
+
+def test_edge_stream_is_deterministic_and_deletes_are_valid():
+    g = G.rmat(7, 4, seed=3)
+    a = edge_stream(g, 4, 32, churn=0.5, seed=9)
+    b = edge_stream(g, 4, 32, churn=0.5, seed=9)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x.src, y.src)
+        np.testing.assert_array_equal(x.dst, y.dst)
+        np.testing.assert_array_equal(x.insert, y.insert)
+    # replay never raises (every delete targets a live instance)
+    apply_mutation_batches(g, a)
+    assert any(x.num_deletes for x in a) and any(x.num_inserts for x in a)
+
+
+def test_edge_stream_symmetric_keeps_graph_symmetric():
+    from repro.algorithms.cc import symmetrize
+
+    gs = symmetrize(G.rmat(7, 4, seed=3))
+    stream = edge_stream(gs, 3, 20, churn=0.5, symmetric=True, seed=4)
+    g2 = apply_mutation_batches(gs, stream)
+    a = G.to_dense(g2)
+    np.testing.assert_array_equal(a, a.T)
+
+
+# ---------------------------------------------------------------------------
+# capacity, spare slots, compaction triggers
+# ---------------------------------------------------------------------------
+
+def test_batch_larger_than_capacity_raises():
+    g = G.rmat(6, 4, seed=3)
+    dg = DynamicGraph(g, 2, PT.RAND, mutation_capacity=8)
+    big = MutationBatch(np.zeros(9, np.int64), np.ones(9, np.int64),
+                        np.ones(9, bool))
+    with pytest.raises(CapacityError):
+        dg.apply_mutations(big)
+
+
+def test_delta_overflow_auto_compacts():
+    g = G.rmat(6, 4, seed=3)
+    dg = DynamicGraph(g, 2, PT.RAND, mutation_capacity=16, delta_slots=16)
+    rng = np.random.default_rng(0)
+    applied = []
+    for i in range(6):                     # 6×16 inserts >> 16 delta slots
+        b = MutationBatch(rng.integers(0, g.num_vertices, 16),
+                          rng.integers(0, g.num_vertices, 16),
+                          np.ones(16, bool))
+        applied.append(b)
+        dg.apply_mutations(b)
+    assert dg.compactions >= 1             # overflow forced a compaction
+    want = apply_mutation_batches(g, applied)
+    got = dg.mutated_csr()
+    np.testing.assert_array_equal(got.col, want.col)
+
+
+def test_spare_outbox_slot_assignment_routes_new_boundary_edge():
+    """An inserted cross-partition edge to a previously-unmessaged remote
+    vertex claims a spare slot; the symmetric inbox entry must route its
+    messages (BFS reaches through the new edge)."""
+    from repro.algorithms.bfs import bfs
+
+    # a path graph partitioned in halves: plenty of unmessaged remotes
+    n = 32
+    src = np.arange(n - 1)
+    g = G.from_edge_list(src, src + 1, n)
+    dg = DynamicGraph(g, 2, PT.RAND, mutation_capacity=8)
+    eng = BSPEngine(dg, **INTERP)
+    part_of = dg.pg.assignment.part_of
+    # find (u, v) in different partitions with no existing edge u->v
+    u = int(np.argmax(part_of == 0))
+    v = int(np.argmax(part_of == 1))
+    dg.apply_mutations(MutationBatch([u], [v], [True]))
+    lv, _ = bfs(eng, u)
+    assert np.isfinite(lv[v]) and lv[v] == 1.0
+
+
+def test_staleness_signals_and_should_compact():
+    g = G.rmat(7, 4, seed=3)
+    dg = DynamicGraph(g, 2, PT.RAND, mutation_capacity=32, delta_slots=64)
+    assert not dg.should_compact()
+    rng = np.random.default_rng(1)
+    for _ in range(3):
+        dg.apply_mutations(MutationBatch(
+            rng.integers(0, g.num_vertices, 32),
+            rng.integers(0, g.num_vertices, 32), np.ones(32, bool)))
+    s = dg.staleness()
+    assert s["delta_occupancy"] > 0.5
+    assert dg.should_compact()
+    dg.compact()
+    assert dg.staleness()["delta_occupancy"] == 0.0
+    assert isinstance(dg.skew_drift(), float)
+
+
+# ---------------------------------------------------------------------------
+# perf_model.should_resplit
+# ---------------------------------------------------------------------------
+
+def test_should_resplit_false_when_current_is_argmin():
+    from repro.core.hybrid import edge_max_ranks
+
+    g = G.rmat(9, 4, seed=13)
+    ranks = edge_max_ranks(g)
+    cands = perf_model.k_dense_candidates(g.num_vertices)
+    best, _ = perf_model.choose_k_dense(ranks, g.num_edges, cands)
+    resplit, info = perf_model.should_resplit(ranks, g.num_edges, cands,
+                                              current_k=best)
+    assert not resplit and info["improvement"] <= 1e-12
+    assert info["best_k"] == best
+
+
+def test_engine_should_resplit_hybrid_wiring():
+    """The engine-level vote: False for non-hybrid backends and for a
+    fresh (undrifted) hybrid split; the info record lands on the engine."""
+    g = G.rmat(8, 4, seed=13)
+    dg = DynamicGraph(g, 2, PT.HIGH, mutation_capacity=16)
+    assert not BSPEngine(dg, **INTERP).should_resplit_hybrid()
+    hyb = BSPEngine(DynamicGraph(g, 2, PT.HIGH, mutation_capacity=16),
+                    backend="hybrid", **INTERP)
+    assert not hyb.should_resplit_hybrid()    # freshly planned = argmin
+    assert hyb.last_resplit_info["improvement"] <= 1e-12
+
+
+def test_should_compact_skew_drift_signal():
+    g = G.rmat(7, 4, seed=3)
+    dg = DynamicGraph(g, 2, PT.RAND, mutation_capacity=32,
+                      delta_slots=4096)
+    assert not dg.should_compact(max_skew_drift=1e9)
+    # an impossible-to-miss threshold trips as soon as any drift exists
+    stream = edge_stream(g, 2, 32, churn=1.0, skew=2.0, seed=1)
+    for b in stream:
+        dg.apply_mutations(b)
+    assert dg.should_compact(max_skew_drift=0.0) or dg.skew_drift() == 0.0
+
+
+def test_should_resplit_fires_on_drifted_split():
+    """Evaluating a deliberately bad split against the ladder must trip the
+    threshold; a huge threshold must suppress it."""
+    from repro.core.hybrid import edge_max_ranks
+
+    g = G.rmat(9, 4, seed=13)
+    ranks = edge_max_ranks(g)
+    cands = perf_model.k_dense_candidates(g.num_vertices)
+    best, table = perf_model.choose_k_dense(ranks, g.num_edges, cands)
+    worst = max(table, key=lambda r: r["makespan"])["k_dense"]
+    assert worst != best
+    resplit, info = perf_model.should_resplit(ranks, g.num_edges, cands,
+                                              current_k=worst)
+    assert resplit and info["best_k"] == best
+    quiet, _ = perf_model.should_resplit(ranks, g.num_edges, cands,
+                                         current_k=worst, threshold=1e9)
+    assert not quiet
+
+
+# ---------------------------------------------------------------------------
+# footprint fix (capacity planning must see the dynamic buffers)
+# ---------------------------------------------------------------------------
+
+def test_memory_footprint_accounts_delta_and_tombstones():
+    g = G.rmat(7, 4, seed=3).with_uniform_weights(seed=1)
+    dg = DynamicGraph(g, 2, PT.RAND, mutation_capacity=32)
+    static = PT.memory_footprint_bytes(dg.pg)
+    dyn = PT.memory_footprint_bytes(dg.pg, dynamic=dg)
+    for p in static:
+        assert "delta" in dyn[p] and "tombstone" in dyn[p]
+        assert dyn[p]["delta"] == dg.delta_slots * (2 * 4 + 4)  # weighted
+        assert dyn[p]["tombstone"] == dg.pg.fwd.e_max
+        assert dyn[p]["total"] > static[p]["total"]
+
+
+# ---------------------------------------------------------------------------
+# incremental API + retrace guard (single device, quick)
+# ---------------------------------------------------------------------------
+
+def test_run_incremental_returns_none_without_incremental_form():
+    from repro.algorithms.pagerank import make_pagerank_program
+
+    g = G.rmat(6, 4, seed=3)
+    dg = DynamicGraph(g, 2, PT.RAND, mutation_capacity=8)
+    eng = BSPEngine(dg, **INTERP)
+    program = make_pagerank_program(g.num_vertices)
+    assert program.incremental is None
+    assert eng.run_incremental(program, {}, np.zeros((2, 8), bool)) is None
+
+
+def test_warm_start_bitwise_and_fewer_supersteps():
+    from repro.algorithms import bfs_batched, bfs_incremental
+
+    g = G.rmat(8, 4, seed=13)
+    dg = DynamicGraph(g, 4, PT.HIGH, mutation_capacity=64)
+    eng = BSPEngine(dg, **INTERP)
+    sources = [0, 5, 40]
+    prev, _ = bfs_batched(eng, sources)
+    mark = dg.mark()
+    stream = edge_stream(g, 1, 24, churn=1.0, seed=2)
+    dg.apply_mutations(stream[0])
+    dirty, monotone = dg.dirty_since(mark)
+    assert monotone
+    warm, wsteps = bfs_incremental(eng, prev, dirty)
+    cold, csteps = bfs_batched(eng, sources)
+    np.testing.assert_array_equal(warm, cold)           # bitwise
+    assert int(wsteps.max()) <= int(csteps.max())
+
+
+def test_dirty_since_reports_deletions_as_non_monotone():
+    g = G.rmat(6, 4, seed=3)
+    dg = DynamicGraph(g, 2, PT.RAND, mutation_capacity=16)
+    mark = dg.mark()
+    dg.apply_mutations(MutationBatch([1], [2], [True]))
+    _, mono = dg.dirty_since(mark)
+    assert mono
+    dg.apply_mutations(MutationBatch([int(g.edge_sources()[0])],
+                                     [int(g.col[0])], [False]))
+    dirty, mono = dg.dirty_since(mark)
+    assert not mono and dirty[1]
+
+
+def test_three_mutation_batches_do_not_retrace():
+    from repro.core import bsp
+    from repro.algorithms import bfs_batched
+
+    g = G.rmat(7, 4, seed=2)
+    dg = DynamicGraph(g, 2, PT.RAND, mutation_capacity=32)
+    eng = BSPEngine(dg, **INTERP)
+    bfs_batched(eng, [0, 1, 2, 3])                       # compiles
+    before = bsp._run_dyn_jit._cache_size()
+    for b in edge_stream(g, 3, 16, churn=0.7, seed=6):
+        dg.apply_mutations(b)
+        bfs_batched(eng, [4, 5, 6, 7])
+    assert bsp._run_dyn_jit._cache_size() == before
+    assert dg.compactions == 0
+
+
+@pytest.mark.parametrize("backend", ["reference", "fused", "hybrid"])
+def test_reverse_direction_deltas_bc_cold(backend):
+    """BC exercises the *reverse* edge arrays: tombstones/deltas must track
+    both directions (non-monotone program → cold rerun on the mutated
+    layout)."""
+    from repro.algorithms import betweenness_centrality_batched
+
+    kw = {"reference": dict(), "fused": dict(fused=True, block_e=256),
+          "hybrid": dict(backend="hybrid")}[backend]
+    g = G.rmat(7, 4, seed=13)
+    stream = edge_stream(g, 2, 20, churn=0.6, seed=3)
+    g2 = apply_mutation_batches(g, stream)
+    dg = DynamicGraph(g, 2, PT.HIGH, include_reverse=True,
+                      mutation_capacity=64)
+    eng = BSPEngine(dg, **kw, **INTERP)
+    for b in stream:
+        dg.apply_mutations(b)
+    got, _ = betweenness_centrality_batched(eng, [0, 5])
+    want, _ = betweenness_centrality_batched(
+        BSPEngine(PT.partition(g2, 2, PT.HIGH, include_reverse=True),
+                  **kw, **INTERP), [0, 5])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# serving driver smokes
+# ---------------------------------------------------------------------------
+
+def test_graph_serve_mutating_smoke(tmp_path):
+    """The mutating driver: edges/s applied, warm-vs-cold superstep
+    savings, zero retraces, end to end."""
+    import json
+
+    from repro.launch.graph_serve import main
+
+    out = tmp_path / "serve_mut.json"
+    assert main(["--smoke", "--mutate", "--churn", "1.0", "--alg", "bfs",
+                 "--backend", "reference", "--out", str(out)]) == 0
+    rep = json.loads(out.read_text())
+    assert rep["retraces"] == 0
+    assert rep["mutation_edges_per_sec"] > 0
+    assert rep["incremental_steps"] is not None
+    assert rep["incremental_steps"] <= rep["cold_steps"]
+    for rnd in rep["per_round"]:
+        assert rnd["refresh"].get("bitwise_equal", True)
+
+
+def test_graph_serve_depth_buckets_smoke(tmp_path):
+    import json
+
+    from repro.launch.graph_serve import main
+
+    out = tmp_path / "serve_buckets.json"
+    assert main(["--smoke", "--depth-buckets", "2", "--alg", "bfs",
+                 "--backend", "reference", "--out", str(out)]) == 0
+    rep = json.loads(out.read_text())
+    assert len(rep["buckets"]) == 2
+    for b in rep["buckets"]:
+        assert b["bucketed_p99_ms"] > 0 and b["baseline_p99_ms"] > 0
