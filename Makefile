@@ -8,7 +8,7 @@ BASELINE := BENCH_superstep.prev.json
 BENCH_THRESHOLD ?= 0.75
 
 .PHONY: test lint bench bench-quick bench-batched bench-dist bench-dynamic \
-	bench-gate bench-check serve serve-mutate ci
+	bench-checkpoint bench-gate bench-check serve serve-mutate chaos ci
 
 test:            ## tier-1 suite
 	$(PY) -m pytest -x -q
@@ -23,8 +23,9 @@ lint:            ## fast critical-rule lint (skips if ruff absent)
 bench:           ## reference-vs-fused superstep timings -> BENCH_superstep.json
 	$(PY) benchmarks/superstep_bench.py
 
-bench-quick:     ## smallest scale only (the CI bench job; batched + dynamic)
-	$(PY) benchmarks/superstep_bench.py --quick --batched --mutations
+bench-quick:     ## smallest scale only (the CI bench job; batched + dynamic + checkpoint)
+	$(PY) benchmarks/superstep_bench.py --quick --batched --mutations \
+	  --checkpoint
 
 bench-batched:   ## query-throughput column only (Q in {1,8,32}) + gate
 	$(PY) benchmarks/superstep_bench.py --quick --batched
@@ -40,6 +41,14 @@ serve:           ## batched query-serving driver (resident graph, q/s report)
 serve-mutate:    ## mutating serving driver (resident DynamicGraph)
 	$(PY) -m repro.launch.graph_serve --scale 12 --batch 32 --alg bfs \
 	  --mutate --churn 1.0
+
+bench-checkpoint: ## fault-tolerance column (snapshot overhead, recovery) + gate
+	$(PY) benchmarks/superstep_bench.py --quick --checkpoint
+	$(MAKE) bench-gate
+
+chaos:           ## fault-injection drill: crash/recover/replay, parity asserts
+	$(PY) -m repro.launch.graph_serve --smoke --chaos --alg bfs \
+	  --backend fused
 
 bench-dist:      ## multi-device column (8 forced host devices, quick scale)
 	$(PY) benchmarks/superstep_bench.py --quick --distributed --devices 8 \

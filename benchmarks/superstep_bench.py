@@ -290,6 +290,102 @@ def bench_mutations_cell(g, scale: int, parts: int, strategy: str,
         hybrid_rebuilds=eng.hybrid_dyn_rebuilds, retraces=retraces)
 
 
+def bench_checkpoint_cell(pg, scale: int, parts: int, strategy: str,
+                          seed: int, chunk: int = 2, q: int = 8) -> dict:
+    """One fault-tolerance cell: snapshot overhead + recovery time of the
+    checkpointable chunked run mode (docs/robustness.md).
+
+    Runs a Q-query BFS batch three ways on the same engine: the resident
+    while_loop (the reference result), the chunked mode bare, and the
+    chunked mode with a blocking ``save_tree`` snapshot at every chunk
+    boundary + the quarantine scan.  Records the per-superstep snapshot
+    overhead, the recovery time (restore the *first* snapshot and resume
+    to the fixpoint), and the deterministic halves gated by
+    scripts/bench_check.py: ``resume_bitwise`` (the resumed fixpoint
+    equals the resident loop's bitwise), ``chunk_retraces`` (chunked
+    windows reuse one compile), and ``quarantined`` (0 on the clean path).
+    """
+    import tempfile
+    import time
+
+    from repro.checkpoint import CheckpointManager
+    from repro.runtime import QuarantinePolicy
+
+    eng = BSPEngine(pg)
+    rng = np.random.default_rng(seed)
+    sources = rng.integers(0, pg.num_vertices, size=(q, 1))
+    from repro.algorithms.bfs import multi_source_state
+    state0 = {"level": jnp.asarray(multi_source_state(pg, sources))}
+    ref_state, ref_steps = eng.run_batched(BFS_PROGRAM, dict(state0))
+
+    def wall(fn, iters=3):
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - t0)
+        return sorted(times)[len(times) // 2]
+
+    # warm the chunked windows, then hold the compile-cache baseline
+    eng.run_batched_chunked(BFS_PROGRAM, dict(state0),
+                            checkpoint_every=chunk)
+    entries0 = BSPEngine._run_chunk._cache_size()
+    bare_s = wall(lambda: eng.run_batched_chunked(
+        BFS_PROGRAM, dict(state0), checkpoint_every=chunk))
+
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, keep=4096)   # keep every snapshot
+        quar = QuarantinePolicy(superstep_budget=int(pg.num_vertices))
+        quar.begin(q)
+        ckpt_ms = []
+
+        def on_chunk(snap):
+            t0 = time.perf_counter()
+            mgr.save_tree(snap["step"],
+                          {"state": snap["state"], "fin": snap["fin"],
+                           "steps_q": snap["steps_q"]}, blocking=True)
+            ckpt_ms.append((time.perf_counter() - t0) * 1e3)
+            return quar.scan(snap)
+
+        t0 = time.perf_counter()
+        st, sq, info = eng.run_batched_chunked(
+            BFS_PROGRAM, dict(state0), checkpoint_every=chunk,
+            on_chunk=on_chunk)
+        ckpt_run_s = time.perf_counter() - t0
+
+        # recovery: restore the FIRST snapshot, resume to the fixpoint
+        like = {"state": {"level": np.zeros_like(np.asarray(st["level"]))},
+                "fin": np.zeros(q, bool), "steps_q": np.zeros(q, np.int32)}
+        t0 = time.perf_counter()
+        step, tree = mgr.restore_tree(like, chunk)
+        final, fsq, _ = eng.run_batched_chunked(
+            BFS_PROGRAM, tree["state"], checkpoint_every=chunk,
+            start_step=step, fin=tree["fin"], steps_q=tree["steps_q"])
+        recovery_s = time.perf_counter() - t0
+
+    resume_bitwise = bool(
+        np.array_equal(np.asarray(final["level"]),
+                       np.asarray(ref_state["level"]))
+        and np.array_equal(np.asarray(fsq), np.asarray(ref_steps))
+        and np.array_equal(np.asarray(st["level"]),
+                           np.asarray(ref_state["level"])))
+    supersteps = max(info["final_step"], 1)
+    return dict(
+        scale=scale, parts=parts, strategy=strategy, algorithm="bfs",
+        combine="min", mode="checkpoint", block_e=None, q=q,
+        checkpoint_every=chunk, v_max=pg.v_max,
+        supersteps=info["final_step"], chunks=info["chunks"],
+        chunked_ms=bare_s * 1e3,
+        chunked_ckpt_ms=ckpt_run_s * 1e3,
+        ckpt_ms_per_superstep=sum(ckpt_ms) / supersteps,
+        ckpt_overhead_ratio=(ckpt_run_s / max(bare_s, 1e-12)),
+        recovery_ms=recovery_s * 1e3,
+        snapshots=len(ckpt_ms),
+        resume_bitwise=int(resume_bitwise),
+        quarantined=len(quar.quarantined),
+        chunk_retraces=BSPEngine._run_chunk._cache_size() - entries0)
+
+
 def bench_distributed_cell(pg, scale: int, parts: int, strategy: str,
                            alg: str, n_dev: int) -> dict:
     """One multi-device cell: sharded fused vs sharded hybrid superstep,
@@ -373,6 +469,13 @@ def main(argv=None) -> int:
     ap.add_argument("--mutations-backend", default="reference",
                     choices=("reference", "fused", "hybrid"),
                     help="engine backend for the --mutations column")
+    ap.add_argument("--checkpoint", action="store_true",
+                    help="add the fault-tolerance column: per-superstep "
+                         "snapshot overhead + recovery time of the chunked "
+                         "run mode, with the bitwise-resume and clean-path "
+                         "zero-quarantine guards")
+    ap.add_argument("--checkpoint-every", type=int, default=2,
+                    help="supersteps per chunk for --checkpoint")
     ap.add_argument("--distributed", action="store_true",
                     help="add multi-device cells (sharded fused vs sharded "
                          "hybrid + exchanged-bytes accounting)")
@@ -517,6 +620,35 @@ def main(argv=None) -> int:
                         f"mutations {strategy}: incremental refresh ran "
                         f"{mrec['incremental_steps']} supersteps, more "
                         f"than cold {mrec['cold_steps']}")
+            if args.checkpoint:
+                crec = bench_checkpoint_cell(pg, scale, args.parts, strategy,
+                                             args.seed,
+                                             chunk=args.checkpoint_every)
+                results.append(crec)
+                print(f"scale={scale} {strategy:>4} checkpoint: "
+                      f"{crec['ckpt_ms_per_superstep']:.2f} ms/superstep "
+                      f"snapshot overhead ({crec['snapshots']} snapshots, "
+                      f"{crec['ckpt_overhead_ratio']:.2f}x bare chunked), "
+                      f"recovery {crec['recovery_ms']:.0f} ms, "
+                      f"resume_bitwise={crec['resume_bitwise']} "
+                      f"quarantined={crec['quarantined']} "
+                      f"chunk_retraces={crec['chunk_retraces']}", flush=True)
+                # Fault-tolerance contract, deterministic halves: the
+                # resumed fixpoint is bitwise identical to the resident
+                # loop, chunk windows reuse one compile, and nothing is
+                # quarantined on a clean run.
+                if not crec["resume_bitwise"]:
+                    failures.append(
+                        f"checkpoint {strategy}: resumed fixpoint is not "
+                        f"bitwise identical to the resident while_loop")
+                if crec["quarantined"] != 0:
+                    failures.append(
+                        f"checkpoint {strategy}: {crec['quarantined']} "
+                        f"queries quarantined on the clean path")
+                if crec["chunk_retraces"] != 0:
+                    failures.append(
+                        f"checkpoint {strategy}: chunked windows retraced "
+                        f"{crec['chunk_retraces']}x after warmup")
             if args.batched:
                 for q in args.batch_sizes:
                     brec = bench_batched_cell(pg, scale, args.parts,

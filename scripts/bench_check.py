@@ -69,11 +69,14 @@ def main(argv=None) -> int:
                          "these instead of --field)")
     ap.add_argument("--byte-fields", nargs="*",
                     default=["exchanged_bytes", "fused_temp_bytes",
-                             "retraces", "incremental_steps", "cold_steps"],
+                             "retraces", "incremental_steps", "cold_steps",
+                             "quarantined", "chunk_retraces"],
                     help="deterministic metrics gated at --byte-threshold "
                          "regardless of timing noise (retraces must stay "
                          "0: any growth fails; the mutation column's "
-                         "superstep counts are deterministic too)")
+                         "superstep counts and the checkpoint column's "
+                         "clean-path quarantine/retrace counts are "
+                         "deterministic too)")
     ap.add_argument("--byte-threshold", type=float, default=0.20,
                     help="max allowed fractional growth in --byte-fields")
     args = ap.parse_args(argv)

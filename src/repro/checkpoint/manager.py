@@ -52,13 +52,22 @@ class CheckpointManager:
 
     # -- save ---------------------------------------------------------------
 
-    def save(self, step: int, params: Any, opt_state: Any = None,
-             extra: Optional[dict] = None, blocking: bool = True) -> Path:
+    def save_tree(self, step: int, tree: Any,
+                  extra: Optional[dict] = None,
+                  blocking: bool = True) -> Path:
+        """Persist an **arbitrary** pytree of arrays.
+
+        The generic entry point: serving snapshots (vertex state, per-query
+        step counters, finished votes, dynamic-graph delta/tombstone
+        payloads) and train states alike.  ``save`` wraps it in the
+        train-shaped ``{"params", "opt_state"}`` tree for back-compat.
+        ``extra`` lands in the manifest JSON (small host metadata: replay
+        cursors, round indices) and reads back via :meth:`manifest_extra`.
+        """
         self.wait()
-        tree = {"params": params}
-        if opt_state is not None:
-            tree["opt_state"] = opt_state
         flat = _flatten(tree)
+        if "" in flat:                       # bare-leaf tree
+            flat = {"_": flat.pop("")}
         host = {k: np.asarray(v) for k, v in flat.items()}
 
         def write():
@@ -81,6 +90,14 @@ class CheckpointManager:
             self._thread.start()
         return self.dir / f"step_{step:08d}.npz"
 
+    def save(self, step: int, params: Any, opt_state: Any = None,
+             extra: Optional[dict] = None, blocking: bool = True) -> Path:
+        """Train-shaped adapter over :meth:`save_tree`."""
+        tree = {"params": params}
+        if opt_state is not None:
+            tree["opt_state"] = opt_state
+        return self.save_tree(step, tree, extra=extra, blocking=blocking)
+
     def wait(self):
         if self._thread is not None:
             self._thread.join()
@@ -102,10 +119,9 @@ class CheckpointManager:
             return None
         return int(valid[-1].stem.split("_")[1])
 
-    def restore(self, like: Any, step: Optional[int] = None
-                ) -> Tuple[int, Any]:
-        """Restore into the structure of ``like`` ({"params":..,
-        "opt_state":..})."""
+    def restore_tree(self, like: Any, step: Optional[int] = None
+                     ) -> Tuple[int, Any]:
+        """Restore an arbitrary pytree into the structure of ``like``."""
         self.wait()
         step = step if step is not None else self.latest_step()
         if step is None:
@@ -113,9 +129,30 @@ class CheckpointManager:
         data = np.load(self.dir / f"step_{step:08d}.npz")
         flat = {k.replace("|", "/"): data[k] for k in data.files}
         leaves, treedef = jax.tree.flatten(like)
-        names = list(_flatten(like))
+        names = [n or "_" for n in _flatten(like)]
+        missing = [n for n in names if n not in flat]
+        if missing:
+            raise KeyError(
+                f"checkpoint step {step} in {self.dir} lacks leaves "
+                f"{missing[:4]} (have {sorted(flat)[:4]}...) — was the "
+                f"snapshot written with a different tree structure?")
         restored = [flat[n] for n in names]
         return step, jax.tree.unflatten(treedef, restored)
+
+    def restore(self, like: Any, step: Optional[int] = None
+                ) -> Tuple[int, Any]:
+        """Restore into the structure of ``like`` ({"params":..,
+        "opt_state":..}).  Adapter over :meth:`restore_tree`."""
+        return self.restore_tree(like, step)
+
+    def manifest_extra(self, step: Optional[int] = None) -> dict:
+        """Host metadata saved alongside a snapshot (replay cursor, round)."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        manifest = self.dir / f"step_{step:08d}.json"
+        return json.loads(manifest.read_text()).get("extra", {})
 
 
 def restore_resharded(manager: CheckpointManager, like: Any, mesh,

@@ -46,6 +46,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.compat import shard_map
+from repro.runtime import chaos
 from repro.core.partition import (BlockMetadata, EdgeArrays, PartitionedGraph,
                                   build_block_metadata)
 
@@ -226,6 +227,7 @@ def _superstep_hybrid(program: VertexProgram, cfg: _HybridCfg, arrs: dict,
     """
     from repro.core.hybrid import add_identity, hybrid_spmv
 
+    chaos.visit("kernel.hybrid", distributed=False)
     spec = program.edge_msg
     ident = add_identity(cfg.semiring)
     q = state[spec.gather[0]].shape[0]
@@ -301,6 +303,7 @@ def _superstep_hybrid_dist(program: VertexProgram, shd, arrs: dict,
     from repro.core.hybrid import add_identity, hybrid_spmv
     from repro.kernels.ops import outbox_reduce_op
 
+    chaos.visit("kernel.hybrid", distributed=True)
     spec = program.edge_msg
     ident = add_identity(shd.semiring)
     pl = shd.parts_per_shard
@@ -414,6 +417,11 @@ def _compute_fused(dims: _Dims, program: VertexProgram, edges: dict,
     """Fused compute: one Pallas pass per (query, edge block), no
     [Q, Pl, e_max] HBM message array (kernels/fused_superstep.py)."""
     from repro.kernels.ops import fused_superstep_op
+
+    # trace-time injection seam: a raise here aborts the compile, leaves no
+    # jit-cache entry, and surfaces to the dispatching host as a kernel
+    # fault — the degradation ladder's retry re-traces (and may re-fire)
+    chaos.visit("kernel.fused", block_e=cfg.block_e)
 
     spec = program.edge_msg
     pl = edges["src"].shape[0]
@@ -564,6 +572,40 @@ def _run_batched_loop(step_fn: Callable, max_steps: int,
     return state, steps_q
 
 
+def _run_chunked_loop(step_fn: Callable, chunk: int, max_steps: int,
+                      state: BatchedState, step0: Array, fin0: Array,
+                      steps_q0: Array):
+    """A bounded window of ``_run_batched_loop``: advance at most ``chunk``
+    supersteps from a mid-run carry.
+
+    Identical body (freeze-masked apply, per-query vote and step
+    accounting); the cond additionally stops at ``step0 + chunk``.  Because
+    ``step0`` is a **traced** operand, one compiled trace serves every
+    window, and chaining windows end to end executes the exact same
+    superstep sequence as the single resident loop — the carry that escapes
+    to host between windows (state, step, finished votes, per-query step
+    counters) is the checkpointable snapshot.  Returns the full carry.
+    """
+    def freeze(fin, new, old):
+        return jnp.where(fin.reshape(fin.shape + (1,) * (new.ndim - 1)),
+                         old, new)
+
+    def body(carry):
+        st, step, fin, steps_q = carry
+        new_st, vote = step_fn(st, step)
+        new_st = jax.tree.map(functools.partial(freeze, fin), new_st, st)
+        steps_q = steps_q + jnp.logical_not(fin).astype(jnp.int32)
+        return new_st, step + 1, jnp.logical_or(fin, vote), steps_q
+
+    def cond(carry):
+        _, step, fin, _ = carry
+        return jnp.logical_and(
+            ~jnp.all(fin),
+            jnp.logical_and(step < max_steps, step < step0 + chunk))
+
+    return jax.lax.while_loop(cond, body, (state, step0, fin0, steps_q0))
+
+
 @functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4))
 def _run_dyn_jit(dims: _Dims, program: VertexProgram,
                  fused_cfg: Optional[FusedConfig], max_steps: int,
@@ -587,6 +629,21 @@ def _run_dyn_jit(dims: _Dims, program: VertexProgram,
             return st
         return jax.lax.fori_loop(0, fixed_steps, body, state)
     return _run_batched_loop(step_fn, max_steps, state, num_queries(state))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4))
+def _run_dyn_chunk_jit(dims: _Dims, program: VertexProgram,
+                       fused_cfg: Optional[FusedConfig], max_steps: int,
+                       chunk: int, edges: dict, dyn: dict,
+                       state: BatchedState, step: Array, fin: Array,
+                       steps_q: Array):
+    """Chunked window of ``_run_dyn_jit`` (same traced-operand contract:
+    mutation batches and engine rebuilds after a restart reuse one trace)."""
+    step_fn = functools.partial(_superstep, dims, program, edges,
+                                BSPEngine._exchange,
+                                BSPEngine._all_finished, fused_cfg, dyn=dyn)
+    return _run_chunked_loop(step_fn, chunk, max_steps, state, step, fin,
+                             steps_q)
 
 
 def _vote_never(apply_fn):
@@ -624,6 +681,18 @@ def _run_dyn_hybrid_jit(program: VertexProgram, cfg: _HybridCfg,
             return st
         return jax.lax.fori_loop(0, fixed_steps, body, state)
     return _run_batched_loop(step_fn, max_steps, state, num_queries(state))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _run_dyn_hybrid_chunk_jit(program: VertexProgram, cfg: _HybridCfg,
+                              max_steps: int, chunk: int, arrs: dict,
+                              state: BatchedState, step: Array, fin: Array,
+                              steps_q: Array):
+    """Chunked window of ``_run_dyn_hybrid_jit``."""
+    step_fn = functools.partial(_superstep_hybrid, program, cfg, arrs,
+                                BSPEngine._all_finished)
+    return _run_chunked_loop(step_fn, chunk, max_steps, state, step, fin,
+                             steps_q)
 
 
 REFERENCE = "reference"
@@ -743,6 +812,7 @@ class BSPEngine:
 
         self._hybrid_cache: dict = {}
         self._hybrid_dyn_cache: dict = {}
+        self._chunk_jits: dict = {}
         self._hybrid_plan: Optional[dict] = None
         if self.backend == HYBRID:
             if pg.source is None:
@@ -960,6 +1030,90 @@ class BSPEngine:
         """Fixed-iteration algorithms (PageRank); Q=1 wrapper."""
         return unbatch_state(
             self.run_fixed_batched(program, num_steps, batch_state(state)))
+
+    # ---------------------- checkpointable run mode ------------------------
+
+    @functools.partial(jax.jit, static_argnums=(0, 1, 2))
+    def _run_chunk(self, program: VertexProgram, chunk: int,
+                   state: BatchedState, step: Array, fin: Array,
+                   steps_q: Array):
+        edges = self._edges_or_none(program)
+        step_fn = self._step_fn(program, edges, self._exchange,
+                                self._all_finished)
+        return _run_chunked_loop(step_fn, chunk, program.max_steps, state,
+                                 step, fin, steps_q)
+
+    def _chunk_call(self, program: VertexProgram, chunk: int,
+                    state: BatchedState, step: Array, fin: Array,
+                    steps_q: Array):
+        """Dispatch one chunk window; overridden by the distributed engine."""
+        if self.dg is not None:
+            self._sync_dynamic()
+            if self._uses_hybrid(program):
+                cfg, arrs = self._hybrid_dyn_for(program)
+                return _run_dyn_hybrid_chunk_jit(
+                    program, cfg, program.max_steps, chunk, arrs, state,
+                    step, fin, steps_q)
+            edges = self.edges_for(program)
+            dyn = self.dg.payload(program.use_reverse)
+            return _run_dyn_chunk_jit(
+                self.dims_for(edges), program, self.fused_cfg_for(program),
+                program.max_steps, chunk, edges, dyn, state, step, fin,
+                steps_q)
+        return self._run_chunk(program, chunk, state, step, fin, steps_q)
+
+    def run_batched_chunked(self, program: VertexProgram,
+                            state: BatchedState, *, checkpoint_every: int,
+                            on_chunk: Optional[Callable] = None,
+                            start_step: int = 0, fin=None, steps_q=None,
+                            max_chunks: Optional[int] = None,
+                            chaos_ctx: Optional[dict] = None):
+        """``run_batched`` in bounded ``checkpoint_every``-superstep chunks.
+
+        Chains :func:`_run_chunked_loop` windows, so the full superstep
+        sequence — and every query's result and step count — is **bitwise
+        identical** to the single resident while_loop; between windows the
+        carry escapes to host.  ``on_chunk(snap)`` receives ``{"state",
+        "step", "fin", "steps_q"}`` per chunk and may snapshot it
+        (``CheckpointManager.save_tree``) and/or return a ``[Q]`` bool mask
+        of queries to force-finish (quarantine: masked queries freeze
+        bitwise exactly like converged ones).  Resume a snapshot by passing
+        its ``start_step``/``fin``/``steps_q``.  Returns ``(state, steps_q,
+        info)`` with ``info = {"chunks", "final_step", "finished"}``.
+        """
+        if checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1, got {checkpoint_every}")
+        q = num_queries(state)
+        # restored snapshots arrive as numpy leaves; canonicalize so the
+        # resume hits the same jit cache entry as the original run
+        state = jax.tree.map(jnp.asarray, state)
+        fin = (jnp.zeros((q,), jnp.bool_) if fin is None
+               else jnp.asarray(fin, jnp.bool_).reshape(q))
+        steps_q = (jnp.zeros((q,), jnp.int32) if steps_q is None
+                   else jnp.asarray(steps_q, jnp.int32).reshape(q))
+        step = jnp.int32(start_step)
+        chunks = 0
+        while True:
+            chaos.visit("superstep.chunk", step=int(step), chunk=chunks,
+                        **(chaos_ctx or {}))
+            state, step, fin, steps_q = self._chunk_call(
+                program, int(checkpoint_every), state, step, fin, steps_q)
+            chunks += 1
+            if on_chunk is not None:
+                kill = on_chunk(dict(state=state, step=int(step),
+                                     fin=np.asarray(fin),
+                                     steps_q=np.asarray(steps_q)))
+                if kill is not None:
+                    fin = jnp.logical_or(
+                        fin, jnp.asarray(kill, jnp.bool_).reshape(q))
+            if bool(jnp.all(fin)) or int(step) >= program.max_steps:
+                break
+            if max_chunks is not None and chunks >= max_chunks:
+                break
+        info = dict(chunks=chunks, final_step=int(step),
+                    finished=np.asarray(fin))
+        return state, steps_q, info
 
     # ---------------------- dynamic-graph plumbing -------------------------
 
@@ -1354,6 +1508,7 @@ class DistributedBSPEngine(BSPEngine):
         # input is treated as a single query).
         if outbox.ndim == 3:
             return self._dist_exchange(outbox[None])[0]
+        chaos.visit("exchange", axis=self.axis)
         q, pl, peers, o = outbox.shape
         n_dev = self.mesh.shape[self.axis]
         if peers != n_dev * pl:
@@ -1458,6 +1613,57 @@ class DistributedBSPEngine(BSPEngine):
             extra = jax.tree.map(lambda x: jax.device_put(x, ex_shard),
                                  extra)
         return jax.jit(sharded)(state, extra)
+
+    def _chunk_call(self, program: VertexProgram, chunk: int,
+                    state: BatchedState, step: Array, fin: Array,
+                    steps_q: Array):
+        """Sharded chunk window for ``run_batched_chunked``.
+
+        The scalar step / replicated fin / steps_q carry rides through
+        ``P()`` specs; the jitted shard_map closure is cached per
+        (program, chunk, shapes) — cleared on rebind — so chunks and
+        restart-rebuilt engines reuse one compile.
+        """
+        if self.dg is not None:
+            self._sync_dynamic()
+        self._validate_state(state)
+        chaos.visit(
+            "worker.chunk", step=int(step),
+            shards=tuple(range(self.mesh.shape[self.axis])))
+        spec = P(None, self.axis)
+        extra_spec = P(self.axis)
+        sharding = jax.sharding.NamedSharding(self.mesh, spec)
+        extra, make_step, hybrid = self._dist_step_parts(program)
+
+        def sig(tree):
+            return tuple(
+                (jax.tree_util.keystr(p), tuple(x.shape))
+                for p, x in jax.tree_util.tree_leaves_with_path(tree))
+
+        key = (program, chunk, sig(state), sig(extra))
+        jitted = self._chunk_jits.get(key)
+        if jitted is None:
+            def local_fn(state, extra, step, fin, steps_q):
+                return _run_chunked_loop(make_step(extra), chunk,
+                                         program.max_steps, state, step,
+                                         fin, steps_q)
+
+            sharded = shard_map(
+                local_fn, mesh=self.mesh,
+                in_specs=(jax.tree.map(lambda _: spec, state),
+                          jax.tree.map(lambda _: extra_spec, extra),
+                          P(), P(), P()),
+                out_specs=(jax.tree.map(lambda _: spec, state),
+                           P(), P(), P()),
+                check_vma=False)
+            jitted = jax.jit(sharded)
+            self._chunk_jits[key] = jitted
+        state = jax.device_put(state, sharding)
+        if not hybrid:
+            ex_shard = jax.sharding.NamedSharding(self.mesh, extra_spec)
+            extra = jax.tree.map(lambda x: jax.device_put(x, ex_shard),
+                                 extra)
+        return jitted(state, extra, jnp.int32(step), fin, steps_q)
 
     def run(self, program: VertexProgram, state: State) -> Tuple[State, Array]:
         state, steps = self.run_batched(program, batch_state(state))

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import CSRGraph, EdgeLedger, MutationBatch
+from repro.runtime import chaos
 from repro.core.partition import (EdgeArrays, build_block_metadata, partition,
                                   _round_up)
 
@@ -283,6 +284,8 @@ class DynamicGraph:
         ``dirty`` (global sources of inserted edges — the warm-start
         frontier seed), and ``monotone``.
         """
+        chaos.visit("mutation.apply", index=self.num_batches)
+        batch.validate(self.pg.num_vertices)
         if len(batch) > self.mutation_capacity:
             raise CapacityError(
                 f"batch of {len(batch)} edges exceeds mutation_capacity="
@@ -332,6 +335,11 @@ class DynamicGraph:
                             p * self.delta_slots + pos, self.pg.v_max)
                 self.pg.out_deg[asg.part_of[u], asg.local_id[u]] -= 1.0
 
+        # mid-mutation-batch injection point: host planning done, device
+        # scatter not yet issued — a fault here leaves the batch
+        # unacknowledged and the host mirrors partially advanced, so
+        # recovery MUST rebuild from base + replay the acknowledged log.
+        chaos.visit("mutation.scatter", index=self.num_batches)
         for ds, reverse in self._dirs():
             self._payload[reverse] = self._apply_device(
                 self._payload[reverse], upds[reverse])
@@ -524,3 +532,33 @@ class DynamicGraph:
     def mark(self) -> int:
         """Current batch clock, to pass back into :meth:`dirty_since`."""
         return self.num_batches
+
+    # ------------------------------------------------------------------
+    # checkpointing
+    # ------------------------------------------------------------------
+
+    def snapshot(self) -> Tuple[dict, dict]:
+        """(tree, extra) for ``CheckpointManager.save_tree``.
+
+        The tree holds the device mutation payload per direction (delta
+        src/dst slots, tombstones, live inbox maps, delta weights); the
+        extra carries the replay cursor (``num_batches`` — how many batches
+        the snapshot has absorbed) plus version/log_floor.  Restore does
+        NOT write the payload back: the host-side mirrors (slot maps, free
+        lists, the ledger) are not in the snapshot, so recovery rebuilds
+        the graph from base and replays the acknowledged mutation log up
+        to the cursor — construction is deterministic, so the replayed
+        payload is bitwise identical to the snapshotted one, which the
+        serving driver asserts as its zero-lost-mutations check.
+        """
+        tree = {("rev" if reverse else "fwd"): dict(self._payload[reverse])
+                for reverse in self._payload}
+        extra = dict(cursor=self.num_batches, version=self.version,
+                     log_floor=self.log_floor)
+        return tree, extra
+
+    def replay(self, batches: List[MutationBatch]) -> None:
+        """Recovery path: apply acknowledged batches in log order onto a
+        freshly-built instance."""
+        for b in batches:
+            self.apply_mutations(b)

@@ -72,10 +72,43 @@ class CSRGraph:
         return CSRGraph(self.row_ptr, self.col, w)
 
 
+def _validate_edge_list(src: np.ndarray, dst: np.ndarray, num_vertices: int,
+                        weights: Optional[np.ndarray], what: str):
+    """Actionable errors for malformed edge input — without this, bad ids
+    fail deep inside partitioning with an opaque shape/index error."""
+    if len(src) != len(dst):
+        raise ValueError(
+            f"{what}: src/dst length mismatch — len(src)={len(src)} vs "
+            f"len(dst)={len(dst)}; each edge needs one entry in both")
+    if weights is not None and len(weights) != len(src):
+        raise ValueError(
+            f"{what}: weights length {len(weights)} != num edges "
+            f"{len(src)}; pass one weight per edge or None")
+    if len(src):
+        lo = int(min(src.min(), dst.min()))
+        hi = int(max(src.max(), dst.max()))
+        if lo < 0 or hi >= num_vertices:
+            raise ValueError(
+                f"{what}: vertex ids must lie in [0, num_vertices="
+                f"{num_vertices}); got min={lo}, max={hi} — negative ids "
+                f"or ids >= num_vertices corrupt the CSR row pointer")
+    if weights is not None:
+        w = np.asarray(weights, dtype=np.float64)
+        bad = np.flatnonzero(~np.isfinite(w))
+        if len(bad):
+            i = int(bad[0])
+            raise ValueError(
+                f"{what}: weights must be finite — weights[{i}] = {w[i]} "
+                f"({len(bad)} non-finite entries); NaN/inf weights poison "
+                f"every shortest-path query touching the edge")
+
+
 def from_edge_list(src: np.ndarray, dst: np.ndarray, num_vertices: int,
                    weights: Optional[np.ndarray] = None,
                    dedup: bool = False) -> CSRGraph:
     """Build CSR from a (src, dst) edge list.  Sorts by (src, dst)."""
+    src, dst = np.asarray(src), np.asarray(dst)
+    _validate_edge_list(src, dst, num_vertices, weights, "from_edge_list")
     order = np.lexsort((dst, src))
     src, dst = src[order], dst[order]
     if weights is not None:
@@ -158,6 +191,40 @@ class MutationBatch:
         if self.weight is not None:
             self.weight = np.asarray(self.weight,
                                      dtype=np.float32).reshape(-1)
+        m = len(self.src)
+        for name in ("dst", "insert"):
+            arr = getattr(self, name)
+            if len(arr) != m:
+                raise ValueError(
+                    f"MutationBatch: len({name})={len(arr)} != len(src)="
+                    f"{m}; every edge needs one src, dst, and insert entry")
+        if self.weight is not None:
+            if len(self.weight) != m:
+                raise ValueError(
+                    f"MutationBatch: len(weight)={len(self.weight)} != "
+                    f"len(src)={m}; pass one weight per edge or None")
+            bad = np.flatnonzero(~np.isfinite(self.weight))
+            if len(bad):
+                i = int(bad[0])
+                raise ValueError(
+                    f"MutationBatch: weight[{i}] = {self.weight[i]} is not "
+                    f"finite ({len(bad)} such entries); NaN/inf insert "
+                    f"weights poison shortest-path state")
+        if m and (int(self.src.min()) < 0 or int(self.dst.min()) < 0):
+            raise ValueError(
+                "MutationBatch: negative vertex ids — ids must lie in the "
+                "graph's fixed [0, n) id space")
+
+    def validate(self, num_vertices: int):
+        """Range-check ids against a concrete graph (called on apply)."""
+        if len(self) == 0:
+            return
+        hi = int(max(self.src.max(), self.dst.max()))
+        if hi >= num_vertices:
+            raise ValueError(
+                f"MutationBatch: vertex id {hi} out of range for a graph "
+                f"with num_vertices={num_vertices}; mutation is an edge-set "
+                f"axis, not a vertex axis — grow the graph by rebuilding")
 
     def __len__(self) -> int:
         return len(self.src)

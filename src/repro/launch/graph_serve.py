@@ -60,13 +60,30 @@ def run_query_batch(engine, alg: str, sources: np.ndarray) -> np.ndarray:
 
 
 def serve(engine, alg: str, sources: np.ndarray, batch: int,
-          check_fn=None) -> dict:
+          check_fn=None, deadline_ms=None, queue_capacity=None) -> dict:
     """Drain ``sources`` in batches of ``batch``; returns the metrics dict.
 
     ``check_fn(sources, results)`` optionally validates a batch (the
     selftest hook).  The query stream is padded to a whole number of
     batches with repeats of its head so every batch compiles to the same Q.
+
+    ``queue_capacity`` bounds admission: sources beyond it are rejected
+    with a reason (``report["admission"]``) instead of growing tail
+    latency.  ``deadline_ms`` is a per-query SLA: a query's latency is its
+    queue wait plus its batch's wall time (batch-synchronous serving);
+    queries over deadline are counted in ``report["sla"]``.
     """
+    admission = None
+    if queue_capacity is not None:
+        from repro.runtime import AdmissionController
+        ctl = AdmissionController(queue_capacity)
+        for s in np.asarray(sources).reshape(-1):
+            ctl.offer(int(s), deadline_ms)
+        sources = np.asarray(ctl.take(len(ctl)))
+        admission = dict(capacity=queue_capacity, admitted=ctl.admitted,
+                         rejected=len(ctl.rejected),
+                         reject_reasons=sorted(
+                             {r["reason"] for r in ctl.rejected}))
     num = len(sources)
     pad = (-num) % batch
     # np.resize repeats the stream cyclically, so padding works even when
@@ -77,12 +94,14 @@ def serve(engine, alg: str, sources: np.ndarray, batch: int,
     cache_fn = type(engine).run_batched
     entries0 = None
     lat_ms, cold_ms = [], None
+    batch_done_ms = []                  # cumulative wall at batch completion
     served = 0
     t_all = time.perf_counter()
     for i, srcs in enumerate(batches):
         t0 = time.perf_counter()
         out = run_query_batch(engine, alg, srcs)
         dt = (time.perf_counter() - t0) * 1e3
+        batch_done_ms.append((time.perf_counter() - t_all) * 1e3)
         if i == 0:
             cold_ms = dt               # includes compilation
             try:
@@ -116,6 +135,16 @@ def serve(engine, alg: str, sources: np.ndarray, batch: int,
         backend=getattr(engine, "backend", None),
         engine=type(engine).__name__,
     )
+    if admission is not None:
+        report["admission"] = admission
+    if deadline_ms is not None:
+        # query i rides batch i // batch; its latency is that batch's
+        # completion time (queue wait included)
+        lat_q = np.asarray(batch_done_ms)[
+            np.arange(num) // batch] if num else np.zeros(0)
+        misses = int((lat_q > deadline_ms).sum())
+        report["sla"] = dict(deadline_ms=deadline_ms, misses=misses,
+                             met=num - misses)
     return report
 
 
@@ -356,6 +385,319 @@ def serve_mutating(engine, dg, alg: str, *, batches, batch: int,
     return report
 
 
+# ---------------------------------------------------------------------------
+# fault-tolerant serving (docs/robustness.md)
+# ---------------------------------------------------------------------------
+
+def chunked_refresh(engine, alg: str, sources, *, chunk: int,
+                    on_chunk=None, round_i: int = 0):
+    """Refresh a standing query set through the checkpointable chunked run
+    mode.  Returns ([Q, n] results, steps [Q], info)."""
+    import jax.numpy as jnp
+
+    from repro.algorithms.bfs import (BFS_PROGRAM, gather_batch,
+                                      multi_source_state)
+    from repro.algorithms.sssp import SSSP_PROGRAM
+    from repro.runtime import chaos
+
+    pg = engine.pg
+    if alg == "bfs":
+        program, key = BFS_PROGRAM, "level"
+        state = {"level": jnp.asarray(multi_source_state(pg, sources))}
+    elif alg == "sssp":
+        program, key = SSSP_PROGRAM, "dist"
+        d0 = multi_source_state(pg, sources)
+        state = {"dist": jnp.asarray(d0),
+                 "active": jnp.asarray(np.isfinite(d0))}
+    else:
+        raise ValueError(f"chunked refresh supports bfs/sssp, not {alg!r}")
+    if chaos.visit("query.poison", round=round_i):
+        # data-level fault drill: corrupt query 0's initial state — the
+        # quarantine scan must catch it at the first chunk boundary
+        arr = np.asarray(state[key]).copy()
+        arr[0] = np.nan
+        state[key] = jnp.asarray(arr)
+    state, steps_q, info = engine.run_batched_chunked(
+        program, state, checkpoint_every=chunk, on_chunk=on_chunk,
+        chaos_ctx={"round": round_i})
+    return gather_batch(pg, state[key]), np.asarray(steps_q), info
+
+
+def serve_fault_tolerant(args, manager, *, midrun_manager=None,
+                         hard_limit_s=None):
+    """Mutating serving session that survives injected (or real) faults.
+
+    Per round: apply one mutation batch (acknowledged only after the
+    device scatter completes), serve a fresh query batch through the
+    degradation ladder (primary backend → retry → reference fallback),
+    refresh the standing set through the chunked run mode with the
+    quarantine scan and the superstep watchdog at every chunk boundary,
+    then snapshot ``{standing results, dynamic payload}`` +
+    ``{round, acked cursor}`` via ``save_tree``.
+
+    Recovery (on a retryable fault anywhere in the round): exponential
+    backoff, rebuild the graph from base, **replay the acknowledged
+    mutation log**, restore the latest round snapshot, and assert the
+    replayed device payload is bitwise identical to the snapshotted one —
+    a crash between compactions loses no acknowledged mutation.  The
+    watchdog's ``hard_limit_s`` triggers checkpoint-now: the in-flight
+    chunk carry is snapshotted to ``midrun_manager`` without waiting for
+    the round boundary.
+
+    Returns (report, standing results [Q, n], quarantined query-id set).
+    """
+    from repro.core import bsp
+    from repro.core.bsp import BSPEngine
+    from repro.core.dynamic import DynamicGraph
+    from repro.core.graph import apply_mutation_batches
+    from repro.data.graphs import edge_stream
+    from repro.runtime import (DegradationLadder, QuarantinePolicy,
+                               RestartPolicy, StepWatchdog, chaos)
+
+    from repro.core import graph as G
+
+    gen = G.rmat if args.graph == "rmat" else G.uniform
+    g = gen(args.scale, args.edge_factor, seed=args.seed)
+    if args.alg == "sssp":
+        g = g.with_uniform_weights(seed=args.seed + 1)
+    kw = {}
+    if args.backend == "fused":
+        kw = dict(fused=True, block_e=args.block_e)
+    elif args.backend == "hybrid":
+        kw = dict(backend="hybrid")
+
+    rounds = args.mutation_rounds
+    stream = edge_stream(g, rounds, args.mutation_batch, churn=args.churn,
+                         seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    standing = rng.integers(0, g.num_vertices, size=(args.standing, 1))
+
+    def build_session():
+        dg = DynamicGraph(g, args.parts, args.strategy,
+                          mutation_capacity=args.mutation_batch)
+        primary = BSPEngine(dg, **kw)
+        fallback = BSPEngine(dg) if kw else primary
+        return dg, primary, fallback
+
+    policy = RestartPolicy(max_failures=args.max_restarts,
+                           backoff_s=args.restart_backoff_s)
+    quar = QuarantinePolicy(superstep_budget=args.superstep_budget)
+    ladder = DegradationLadder(retries=1)
+    wd = StepWatchdog(warmup_steps=2, hard_limit_s=hard_limit_s)
+    midrun_snapshots = 0
+
+    dg, engine, fb_engine = build_session()
+    # warm both rungs of the ladder so later downgrades reuse the caches
+    warm = rng.integers(0, g.num_vertices, size=args.batch)
+    run_query_batch(engine, args.alg, warm)
+    if fb_engine is not engine:
+        run_query_batch(fb_engine, args.alg, warm)
+
+    cache_fns = [bsp._run_dyn_jit, bsp._run_dyn_hybrid_jit,
+                 bsp._run_dyn_chunk_jit, bsp._run_dyn_hybrid_chunk_jit]
+
+    def cache_entries():
+        return sum(f._cache_size() for f in cache_fns)
+
+    acked = 0                 # durable cursor: stream[:acked] acknowledged
+    round_i = 0
+    prev = None
+    snapshots = 0
+    entries0 = None
+    n = g.num_vertices
+
+    def recover():
+        nonlocal dg, engine, fb_engine, round_i, prev
+        dg, engine, fb_engine = build_session()
+        if acked:
+            dg.replay(stream[:acked])   # the durable log IS the truth
+        latest = manager.latest_step()
+        if latest is None:
+            round_i, prev = 0, None
+            return
+        dyn_tree, dyn_extra = dg.snapshot()
+        like = {"standing": np.zeros((args.standing, n), np.float32),
+                "dyn": dyn_tree}
+        _, tree = manager.restore_tree(like, latest)
+        extra = manager.manifest_extra(latest)
+        round_i = int(extra["round"])
+        prev = tree["standing"]
+        if (int(extra["cursor"]) == dyn_extra["cursor"]
+                and int(extra["version"]) == dyn_extra["version"]):
+            # zero-lost-mutations proof: rebuilding from base + replaying
+            # the acked log reproduces the snapshotted delta/tombstone
+            # payload bitwise
+            from repro.checkpoint.manager import _flatten
+            snap_flat = _flatten(tree["dyn"])
+            live_flat = {k: np.asarray(v)
+                         for k, v in _flatten(dyn_tree).items()}
+            for name, a in snap_flat.items():
+                if not np.array_equal(np.asarray(a), live_flat[name]):
+                    raise RuntimeError(
+                        f"replayed payload leaf {name!r} differs from the "
+                        f"snapshot — a mutation was lost or double-applied")
+
+    while round_i < rounds:
+        try:
+            chaos.visit("serve.round", round=round_i)
+            if round_i >= acked:
+                dg.apply_mutations(stream[round_i])
+                acked = round_i + 1
+            # fresh queries ride the degradation ladder
+            srcs = np.random.default_rng(
+                args.seed + 100 + round_i).integers(0, n, size=args.batch)
+            r = round_i
+
+            def primary():
+                chaos.visit("kernel.dispatch", round=r,
+                            backend=args.backend)
+                return run_query_batch(engine, args.alg, srcs)
+
+            ladder.run(primary,
+                       lambda: run_query_batch(fb_engine, args.alg, srcs),
+                       label=f"round{r}:{args.alg}")
+
+            # standing refresh through the checkpointable chunked mode
+            quar.begin(args.standing)
+            t_chunk = [time.perf_counter()]
+
+            def on_chunk(snap):
+                nonlocal midrun_snapshots
+                now = time.perf_counter()
+                flagged = wd.report(snap["step"], now - t_chunk[0])
+                t_chunk[0] = now
+                if flagged and midrun_manager is not None:
+                    # checkpoint-now: persist the in-flight chunk carry
+                    midrun_manager.save_tree(
+                        snap["step"],
+                        {"state": snap["state"], "fin": snap["fin"],
+                         "steps_q": snap["steps_q"]},
+                        extra={"round": r, "step": snap["step"],
+                               "mid_run": True}, blocking=True)
+                    midrun_snapshots += 1
+                return quar.scan(snap)
+
+            prev, steps_q, info = chunked_refresh(
+                engine, args.alg, standing, chunk=args.checkpoint_every,
+                on_chunk=on_chunk, round_i=round_i)
+
+            dyn_tree, dyn_extra = dg.snapshot()
+            manager.save_tree(
+                round_i + 1,
+                {"standing": np.asarray(prev), "dyn": dyn_tree},
+                extra=dict(round=round_i + 1, acked=acked, **dyn_extra),
+                blocking=True)
+            snapshots += 1
+            round_i += 1
+            if entries0 is None:
+                entries0 = cache_entries()
+        except Exception as e:
+            sleep_s = policy.handle(e, context=dict(round=round_i))
+            if sleep_s:
+                time.sleep(sleep_s)
+            recover()
+
+    # ledger-vs-oracle audit: the served graph equals a from-scratch apply
+    # of every acknowledged batch
+    mut = dg.mutated_csr()
+    oracle = apply_mutation_batches(g, stream[:acked])
+    if not (np.array_equal(mut.row_ptr, oracle.row_ptr)
+            and np.array_equal(mut.col, oracle.col)):
+        raise RuntimeError("mutated CSR diverged from the mutation-log "
+                           "oracle — acknowledged mutations were lost")
+
+    retraces = (cache_entries() - entries0) if entries0 is not None else 0
+    report = dict(
+        rounds=rounds, acked=acked, snapshots=snapshots,
+        midrun_snapshots=midrun_snapshots,
+        failures=policy.failures, restarts=policy.restarts,
+        downgrades=ladder.downgrades, quarantined=quar.quarantined,
+        stragglers=len(wd.stragglers), retraces=retraces,
+        backend=args.backend, algorithm=args.alg)
+    quarantined_ids = {rec["query"] for rec in quar.quarantined}
+    return report, np.asarray(prev), quarantined_ids
+
+
+def run_chaos_drill(args) -> int:
+    """``--chaos``: clean session vs fault-injected session, with recovery
+    and parity asserts (the CI chaos job).
+
+    Injected faults: a crash between mutation batches (``serve.round``), a
+    shard/worker death mid-refresh (``superstep.chunk``), a crash
+    mid-mutation-batch before the device scatter (``mutation.scatter``), a
+    kernel-dispatch fault that exhausts its retry (``kernel.dispatch`` ×2 →
+    reference fallback), and a poisoned query (``query.poison`` → NaN
+    state, quarantined every round).  Asserts: the session recovers within
+    the restart budget, the mutation log replays with zero lost mutations,
+    non-quarantined standing results are **bitwise identical** to the
+    uninjected run, retraces stay bounded by restarts, and the clean path
+    quarantines nothing.
+    """
+    import tempfile
+
+    from repro.checkpoint import CheckpointManager
+    from repro.runtime import FaultInjector, chaos
+
+    rounds = args.mutation_rounds
+    with tempfile.TemporaryDirectory() as td:
+        clean_rep, clean_res, clean_quar = serve_fault_tolerant(
+            args, CheckpointManager(td + "/clean", keep=3))
+        print(f"clean session: rounds={clean_rep['rounds']} "
+              f"snapshots={clean_rep['snapshots']} "
+              f"retraces={clean_rep['retraces']} "
+              f"quarantined={len(clean_rep['quarantined'])}", flush=True)
+        assert clean_rep["failures"] == 0 and not clean_quar
+        assert clean_rep["retraces"] == 0, \
+            f"clean path retraced: {clean_rep['retraces']}"
+
+        inj = FaultInjector(sites={
+            "serve.round": [{"round": min(1, rounds - 1)}],
+            "superstep.chunk": [{"round": min(1, rounds - 1), "chunk": 1}],
+            "mutation.scatter": [{"index": min(2, rounds - 1)}],
+            "kernel.dispatch": [{"round": min(2, rounds - 1)},
+                                {"round": min(2, rounds - 1)}],
+            "query.poison": [{"round": r, "flag": True}
+                             for r in range(rounds)],
+        })
+        with chaos.active(inj):
+            faulty_rep, faulty_res, faulty_quar = serve_fault_tolerant(
+                args, CheckpointManager(td + "/faulty", keep=3),
+                midrun_manager=CheckpointManager(td + "/midrun", keep=3),
+                hard_limit_s=0.0)
+
+    print(f"faulty session: failures={faulty_rep['failures']} "
+          f"restarts={[r.get('round') for r in faulty_rep['restarts']]} "
+          f"downgrades={len(faulty_rep['downgrades'])} "
+          f"quarantined={sorted(faulty_quar)} "
+          f"midrun_snapshots={faulty_rep['midrun_snapshots']} "
+          f"retraces={faulty_rep['retraces']}", flush=True)
+
+    assert faulty_rep["failures"] >= 3, \
+        "expected >=3 injected worker faults to fire"
+    assert faulty_rep["acked"] == rounds, "mutation log not fully replayed"
+    assert len(faulty_rep["downgrades"]) == 1, \
+        "kernel fault did not fall back to the reference backend"
+    assert faulty_quar == {0}, \
+        f"poisoned query 0 not quarantined: {faulty_quar}"
+    assert any(rec["reason"] == "nan" for rec in faulty_rep["quarantined"])
+    assert faulty_rep["midrun_snapshots"] > 0, \
+        "watchdog checkpoint-now never fired"
+    assert faulty_rep["retraces"] <= faulty_rep["failures"], \
+        (f"retraces ({faulty_rep['retraces']}) exceed restarts "
+         f"({faulty_rep['failures']})")
+
+    ok = np.ones(len(clean_res), bool)
+    for q in faulty_quar | clean_quar:
+        ok[q] = False
+    assert np.array_equal(clean_res[ok], faulty_res[ok]), \
+        "recovered results diverge from the uninjected run"
+    print(f"chaos parity: {int(ok.sum())}/{len(ok)} standing queries "
+          f"bitwise identical to the uninjected run "
+          f"(quarantined: {sorted(faulty_quar)})", flush=True)
+    print("CHAOS OK")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=12)
@@ -398,6 +740,27 @@ def main(argv=None) -> int:
     ap.add_argument("--depth-buckets", type=int, default=0, metavar="B",
                     help="serve the stream in B estimated-depth buckets and "
                          "report per-bucket p99 vs the unbucketed baseline")
+    # --- fault tolerance & SLA (docs/robustness.md) ---
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-injection drill: a clean mutating "
+                         "session, then the same session with injected "
+                         "crashes; assert recovery, zero lost mutations, "
+                         "and bitwise parity")
+    ap.add_argument("--checkpoint-every", type=int, default=2,
+                    help="supersteps per checkpointable chunk in the "
+                         "fault-tolerant refresh path")
+    ap.add_argument("--superstep-budget", type=int, default=64,
+                    help="quarantine standing queries still unconverged "
+                         "after this many supersteps (divergence watchdog)")
+    ap.add_argument("--max-restarts", type=int, default=5,
+                    help="retryable-failure budget for the serving session")
+    ap.add_argument("--restart-backoff-s", type=float, default=0.0,
+                    help="base exponential-backoff sleep between restarts")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-query SLA deadline; misses are reported")
+    ap.add_argument("--queue-capacity", type=int, default=None,
+                    help="admission-control bound on the query queue; "
+                         "overflow is rejected with a reason")
     args = ap.parse_args(argv)
     if args.smoke:
         args.scale = min(args.scale, 8)
@@ -406,6 +769,9 @@ def main(argv=None) -> int:
         args.mutation_batch = min(args.mutation_batch, 32)
         args.mutation_rounds = min(args.mutation_rounds, 3)
         args.standing = min(args.standing, 4)
+
+    if args.chaos:
+        return run_chaos_drill(args)
 
     if args.mutate:
         from repro.data.graphs import edge_stream
@@ -474,7 +840,18 @@ def main(argv=None) -> int:
         print("GRAPH SERVE OK")
         return 0
 
-    report = serve(engine, args.alg, sources, args.batch)
+    report = serve(engine, args.alg, sources, args.batch,
+                   deadline_ms=args.deadline_ms,
+                   queue_capacity=args.queue_capacity)
+    if "admission" in report:
+        a = report["admission"]
+        print(f"admission: {a['admitted']} admitted, {a['rejected']} "
+              f"rejected ({', '.join(a['reject_reasons']) or 'none'}) at "
+              f"capacity {a['capacity']}", flush=True)
+    if "sla" in report:
+        s = report["sla"]
+        print(f"SLA {s['deadline_ms']:.0f} ms: {s['met']} met, "
+              f"{s['misses']} missed", flush=True)
 
     if report["ms_per_query"] is None:
         # Single-batch stream: everything landed in the cold batch.

@@ -1,4 +1,13 @@
 from repro.runtime.watchdog import StepWatchdog
-from repro.runtime.failures import run_with_restarts, FaultInjector
+from repro.runtime.failures import (
+    run_with_restarts, FaultInjector, WorkerFailure, RestartPolicy,
+    RETRYABLE_EXCEPTIONS)
+from repro.runtime.sla import (
+    AdmissionController, QuarantinePolicy, DegradationLadder)
+from repro.runtime import chaos
 
-__all__ = ["StepWatchdog", "run_with_restarts", "FaultInjector"]
+__all__ = [
+    "StepWatchdog", "run_with_restarts", "FaultInjector", "WorkerFailure",
+    "RestartPolicy", "RETRYABLE_EXCEPTIONS", "AdmissionController",
+    "QuarantinePolicy", "DegradationLadder", "chaos",
+]

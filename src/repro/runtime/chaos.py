@@ -1,0 +1,103 @@
+"""Failure-injection site registry (the chaos drill's control plane).
+
+The engine stack is instrumented with named *sites* — host-visible seams
+where a worker fault would surface in a real deployment:
+
+- ``superstep.chunk``   chunk boundary of the checkpointable run mode
+                        (``run_batched_chunked``); ctx: step, chunk, plus
+                        caller context (e.g. serving round)
+- ``worker.chunk``      distributed chunk dispatch; ctx: shards, step
+- ``exchange``          inside the distributed outbox exchange (trace-time)
+- ``kernel.fused``      inside the fused-kernel compute (trace-time)
+- ``kernel.hybrid``     inside the hybrid two-engine superstep (trace-time)
+- ``kernel.dispatch``   host-side dispatch of a query batch to the primary
+                        backend (the degradation ladder's retry point)
+- ``mutation.apply``    entry of ``DynamicGraph.apply_mutations``
+- ``mutation.scatter``  mid-mutation-batch, after host planning but before
+                        the device scatter — a crash here leaves the batch
+                        unacknowledged (recovery must rebuild + replay)
+- ``serve.round``       top of a serving round
+- ``query.poison``      non-raising flag: the serving driver poisons a
+                        query's initial state (NaN) when this fires
+
+``visit(site, **ctx)`` is a cheap no-op until an injector is installed
+(``install``); injectors decide per-visit whether to raise (worker fault)
+or to return a flag (data-level poison).  Visit counts per site are global
+and monotone, so a drill's arming (``{"at": n}`` / ``{"round": r}``) is
+deterministic for a fixed seed and schedule.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Dict, List, Tuple
+
+
+class ChaosRegistry:
+    def __init__(self):
+        self._injectors: List = []
+        self.counts: Dict[str, int] = {}
+        self.fired_log: List[Tuple[str, int]] = []
+
+    @property
+    def armed(self) -> bool:
+        return bool(self._injectors)
+
+    def install(self, injector):
+        """Install an injector exposing ``on_visit(site, count, ctx)``."""
+        self._injectors.append(injector)
+        return injector
+
+    def remove(self, injector):
+        if injector in self._injectors:
+            self._injectors.remove(injector)
+
+    def clear(self):
+        self._injectors.clear()
+
+    def reset(self):
+        """Forget visit counts and the fired log (injectors stay)."""
+        self.counts.clear()
+        self.fired_log.clear()
+
+    def visit(self, site: str, **ctx) -> bool:
+        """Record a visit; let injectors raise or flag.  Returns True when a
+        non-raising (flag) injection fired at this visit."""
+        if not self._injectors:
+            return False
+        n = self.counts.get(site, 0)
+        self.counts[site] = n + 1
+        flagged = False
+        for inj in list(self._injectors):
+            if inj.on_visit(site, n, ctx):      # may raise a worker fault
+                flagged = True
+        if flagged:
+            self.fired_log.append((site, n))
+        return flagged
+
+
+registry = ChaosRegistry()
+
+
+def visit(site: str, **ctx) -> bool:
+    return registry.visit(site, **ctx)
+
+
+def install(injector):
+    return registry.install(injector)
+
+
+def clear():
+    registry.clear()
+
+
+@contextmanager
+def active(*injectors):
+    """Scope injectors to a block; resets counts on exit."""
+    for inj in injectors:
+        registry.install(inj)
+    try:
+        yield registry
+    finally:
+        for inj in injectors:
+            registry.remove(inj)
+        registry.reset()

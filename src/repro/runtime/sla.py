@@ -1,0 +1,161 @@
+"""Serving SLA policies: admission control, query quarantine, degradation.
+
+The serving driver treats the host as the reliability tier (the paper's
+hybrid split applied to operations): accelerator work is optimistic, the
+host enforces the contract.
+
+- :class:`AdmissionController` — bounded queue in front of the query
+  stream; when full, offers are rejected **with a reason** instead of
+  growing latency unboundedly.
+- :class:`QuarantinePolicy` — the divergence watchdog for the batched
+  while_loop.  Runs at chunk boundaries of the checkpointable run mode
+  (``run_batched_chunked``'s ``on_chunk`` hook): NaN-producing queries and
+  queries exceeding a superstep budget are force-finished (frozen bitwise,
+  exactly like converged queries) and reported — a poisoned query never
+  pins the batch.
+- :class:`DegradationLadder` — primary backend, bounded retry, then the
+  reference backend for the affected batch; every downgrade is reported.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.runtime.failures import RETRYABLE_EXCEPTIONS
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AdmissionController:
+    """Bounded admission queue: reject-with-reason when full."""
+    capacity: int
+    admitted: int = 0
+    rejected: List[dict] = dataclasses.field(default_factory=list)
+    _queue: deque = dataclasses.field(default_factory=deque)
+
+    def offer(self, query: Any, deadline_ms: Optional[float] = None) -> bool:
+        if len(self._queue) >= self.capacity:
+            self.rejected.append({
+                "query": query, "reason": "queue_full",
+                "detail": f"admission queue at capacity "
+                          f"{self.capacity}; resubmit or raise capacity"})
+            return False
+        self._queue.append((query, deadline_ms))
+        self.admitted += 1
+        return True
+
+    def take(self, k: int) -> List[Any]:
+        out = []
+        while self._queue and len(out) < k:
+            out.append(self._queue.popleft()[0])
+        return out
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+
+# ---------------------------------------------------------------------------
+# quarantine (divergence watchdog)
+# ---------------------------------------------------------------------------
+
+def nan_queries(state) -> np.ndarray:
+    """[Q] bool: queries whose vertex state contains a NaN in any leaf."""
+    masks = []
+    for leaf in jax.tree.leaves(state):
+        arr = np.asarray(leaf)
+        if not np.issubdtype(arr.dtype, np.floating):
+            continue
+        masks.append(np.isnan(arr.reshape(arr.shape[0], -1)).any(axis=1))
+    if not masks:
+        return np.zeros(0, bool)
+    out = masks[0].copy()
+    for m in masks[1:]:
+        out |= m
+    return out
+
+
+@dataclasses.dataclass
+class QuarantinePolicy:
+    """Chunk-boundary scan: quarantine NaN / over-budget queries.
+
+    Use as the ``on_chunk`` hook: ``engine.run_batched_chunked(..,
+    on_chunk=policy.scan)`` after ``policy.begin(q)``.  ``quarantined``
+    accumulates (query, reason, step) reports across runs; ``begin`` resets
+    only the per-run kill mask, so a standing query re-poisoned on every
+    refresh is re-quarantined each run but reported once per
+    (query, reason).
+    """
+    superstep_budget: Optional[int] = None
+    check_nan: bool = True
+    quarantined: List[dict] = dataclasses.field(default_factory=list)
+    _killed: Optional[np.ndarray] = None
+    _reported: set = dataclasses.field(default_factory=set)
+
+    def begin(self, num_queries: int):
+        self._killed = np.zeros(num_queries, bool)
+
+    def scan(self, snap: dict) -> Optional[np.ndarray]:
+        fin = np.asarray(snap["fin"])
+        steps_q = np.asarray(snap["steps_q"])
+        q = len(fin)
+        if self._killed is None or len(self._killed) != q:
+            self._killed = np.zeros(q, bool)
+        kill = np.zeros(q, bool)
+        reasons: Dict[int, str] = {}
+        if self.check_nan:
+            nan = nan_queries(snap["state"])
+            if len(nan) == q:
+                for i in np.flatnonzero(nan & ~self._killed):
+                    kill[i] = True
+                    reasons[int(i)] = "nan"
+        if self.superstep_budget is not None:
+            over = (steps_q >= self.superstep_budget) & ~fin & ~self._killed
+            for i in np.flatnonzero(over):
+                kill[i] = True
+                reasons.setdefault(int(i), "superstep_budget")
+        for i, reason in sorted(reasons.items()):
+            if (i, reason) not in self._reported:
+                self._reported.add((i, reason))
+                self.quarantined.append(
+                    {"query": i, "reason": reason,
+                     "step": int(snap["step"]),
+                     "steps_q": int(steps_q[i])})
+        self._killed |= kill
+        return kill if kill.any() else None
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DegradationLadder:
+    """Primary → bounded retry → reference fallback for one query batch."""
+    retries: int = 1
+    backoff_s: float = 0.0
+    retryable: tuple = RETRYABLE_EXCEPTIONS
+    downgrades: List[dict] = dataclasses.field(default_factory=list)
+
+    def run(self, primary: Callable[[], Any], fallback: Callable[[], Any],
+            label: str = "") -> Any:
+        errors = []
+        for attempt in range(1 + self.retries):
+            try:
+                return primary()
+            except self.retryable as e:
+                errors.append(repr(e))
+                if self.backoff_s:
+                    time.sleep(self.backoff_s * (2 ** attempt))
+        self.downgrades.append(
+            {"label": label, "errors": errors,
+             "detail": "primary backend failed on retry; batch served by "
+                       "the reference backend"})
+        return fallback()

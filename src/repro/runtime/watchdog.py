@@ -20,6 +20,10 @@ class StepWatchdog:
     threshold: float = 3.0             # flag at mean + threshold·std
     warmup_steps: int = 5              # ignore compile/first steps
     on_straggler: Optional[Callable[[int, float, float], None]] = None
+    # absolute ceiling: flag regardless of warmup/EWMA (serving drivers use
+    # this as the checkpoint-now trigger — a step this slow may be a dying
+    # worker, snapshot before it takes the batch down)
+    hard_limit_s: Optional[float] = None
 
     _mean: float = 0.0
     _var: float = 0.0
@@ -37,13 +41,18 @@ class StepWatchdog:
 
     def report(self, step: int, dur: float) -> bool:
         self._count += 1
+        hard = self.hard_limit_s is not None and dur > self.hard_limit_s
         if self._count <= self.warmup_steps:
             self._mean = dur if self._count == 1 else \
                 self._mean + (dur - self._mean) / self._count
-            return False
+            if hard:
+                self.stragglers.append(step)
+                if self.on_straggler:
+                    self.on_straggler(step, dur, self._mean)
+            return hard
         std = max(self._var ** 0.5, 1e-9)
-        flagged = dur > self._mean + self.threshold * std \
-            and dur > 1.5 * self._mean
+        flagged = hard or (dur > self._mean + self.threshold * std
+                           and dur > 1.5 * self._mean)
         if flagged:
             self.stragglers.append(step)
             if self.on_straggler:

@@ -1,0 +1,345 @@
+"""Fault-tolerant serving runtime: checkpointable chunked supersteps,
+failure injection + recovery, and deadline-driven degradation.
+
+The contract under test (docs/robustness.md):
+
+- the chunked run mode is **bitwise identical** to the resident
+  while_loop, per backend, and a chunk carry resumes mid-run — including
+  through a ``CheckpointManager`` round trip and across a different device
+  count (``repro.launch.ft_selftest`` subprocesses);
+- engine rebuild after a restart reuses the module-level jit caches
+  (restart ≠ recompile);
+- injected faults (worker death, mid-mutation crash, kernel fault,
+  poisoned query) are recovered through bounded retry + mutation-log
+  replay with zero lost mutations and bitwise parity on surviving
+  queries (the ``--chaos`` drill);
+- the SLA layer: admission control rejects with a reason, NaN and
+  over-budget queries are quarantined without pinning their batch, the
+  degradation ladder falls back to the reference backend;
+- malformed inputs fail fast with actionable errors instead of device
+  asserts.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms.bfs import (BFS_PROGRAM, bfs_batched, gather_batch,
+                                  multi_source_state)
+from repro.checkpoint import CheckpointManager
+from repro.core import graph as G
+from repro.core import partition as PT
+from repro.core.bsp import BSPEngine
+from repro.core.dynamic import DynamicGraph
+from repro.core.graph import MutationBatch
+from repro.data.graphs import edge_stream
+from repro.runtime import (AdmissionController, DegradationLadder,
+                           FaultInjector, QuarantinePolicy, WorkerFailure,
+                           chaos)
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(ndev: int, module: str, *args, timeout=900):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={ndev}",
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH",
+                                                            ""))
+    return subprocess.run([sys.executable, "-m", module, *args],
+                          capture_output=True, text=True, env=env,
+                          timeout=timeout)
+
+
+def _setup(scale=7, parts=2, queries=3, seed=0):
+    g = G.rmat(scale, 8, seed=seed)
+    pg = PT.partition(g, parts, "high")
+    rng = np.random.default_rng(seed + 1)
+    sources = rng.integers(0, g.num_vertices, size=(queries, 1))
+    return g, pg, sources
+
+
+# ---------------------------------------------------------------------------
+# chunked run mode: parity + resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [{}, {"fused": True, "block_e": 128},
+                                {"backend": "hybrid"}],
+                         ids=["reference", "fused", "hybrid"])
+def test_chunked_matches_resident_loop(kw):
+    """run_batched_chunked chains windows of the same compiled body — the
+    fixpoint and per-query superstep counts are bitwise identical."""
+    g, pg, sources = _setup()
+    eng = BSPEngine(pg, **kw)
+    state0 = {"level": jnp.asarray(multi_source_state(pg, sources))}
+    ref_state, ref_steps = eng.run_batched(BFS_PROGRAM, dict(state0))
+    st, sq, info = eng.run_batched_chunked(BFS_PROGRAM, dict(state0),
+                                           checkpoint_every=2)
+    np.testing.assert_array_equal(np.asarray(st["level"]),
+                                  np.asarray(ref_state["level"]))
+    np.testing.assert_array_equal(np.asarray(sq), np.asarray(ref_steps))
+    assert info["finished"].all() and info["chunks"] >= 2
+
+
+def test_chunk_carry_resumes_through_checkpoint(tmp_path):
+    """Persist the carry after one chunk via save_tree, restore into a
+    fresh engine, resume with a *different* chunk size — still bitwise."""
+    g, pg, sources = _setup()
+    eng = BSPEngine(pg)
+    state0 = {"level": jnp.asarray(multi_source_state(pg, sources))}
+    ref_state, ref_steps = eng.run_batched(BFS_PROGRAM, dict(state0))
+
+    st, sq, info = eng.run_batched_chunked(BFS_PROGRAM, dict(state0),
+                                           checkpoint_every=2, max_chunks=1)
+    mgr = CheckpointManager(tmp_path)
+    mgr.save_tree(info["final_step"],
+                  {"state": st, "fin": info["finished"], "steps_q": sq},
+                  extra={"step": info["final_step"]})
+
+    like = {"state": {"level": np.zeros_like(np.asarray(st["level"]))},
+            "fin": np.zeros(len(sources), bool),
+            "steps_q": np.zeros(len(sources), np.int32)}
+    step, tree = CheckpointManager(tmp_path).restore_tree(like)
+    eng2 = BSPEngine(pg)          # a restarted process rebuilds the engine
+    final, fsq, _ = eng2.run_batched_chunked(
+        BFS_PROGRAM, tree["state"], checkpoint_every=3, start_step=step,
+        fin=tree["fin"], steps_q=tree["steps_q"])
+    np.testing.assert_array_equal(np.asarray(final["level"]),
+                                  np.asarray(ref_state["level"]))
+    np.testing.assert_array_equal(np.asarray(fsq), np.asarray(ref_steps))
+
+
+def test_dynamic_chunked_parity_and_no_recompile_on_rebuild():
+    """Chunked == resident on a mutated DynamicGraph, and rebuilding the
+    engine (the restart path) adds zero chunk-jit cache entries."""
+    from repro.core import bsp
+
+    g, _, sources = _setup()
+    dg = DynamicGraph(g, 2, "high", mutation_capacity=64)
+    dg.apply_mutations(edge_stream(g, 1, 32, churn=1.0, seed=3)[0])
+    eng = BSPEngine(dg)
+    state0 = {"level": jnp.asarray(multi_source_state(eng.pg, sources))}
+    ref_state, ref_steps = eng.run_batched(BFS_PROGRAM, dict(state0))
+    st, sq, _ = eng.run_batched_chunked(BFS_PROGRAM, dict(state0),
+                                        checkpoint_every=2)
+    np.testing.assert_array_equal(np.asarray(st["level"]),
+                                  np.asarray(ref_state["level"]))
+    np.testing.assert_array_equal(np.asarray(sq), np.asarray(ref_steps))
+
+    entries = bsp._run_dyn_chunk_jit._cache_size()
+    eng2 = BSPEngine(dg)          # restart: same shapes, same trace
+    st2, sq2, _ = eng2.run_batched_chunked(BFS_PROGRAM, dict(state0),
+                                           checkpoint_every=2)
+    np.testing.assert_array_equal(np.asarray(st2["level"]),
+                                  np.asarray(st["level"]))
+    assert bsp._run_dyn_chunk_jit._cache_size() == entries
+
+
+@pytest.mark.parametrize("ndev", [1, 2])
+def test_elastic_snapshot_resumes_on_fewer_devices(tmp_path, ndev):
+    """A 4-device chunked snapshot resumes bitwise on 1 and 2 devices
+    (forced host platform device counts, fresh subprocesses)."""
+    snap = _run(4, "repro.launch.ft_selftest", "--mode", "snapshot",
+                "--ckpt", str(tmp_path))
+    assert snap.returncode == 0, snap.stderr[-3000:]
+    assert "FT SNAPSHOT OK devices=4" in snap.stdout
+    res = _run(ndev, "repro.launch.ft_selftest", "--mode", "resume",
+               "--ckpt", str(tmp_path))
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert f"FT RESUME OK devices=4->{ndev}" in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# SLA: quarantine, admission, degradation
+# ---------------------------------------------------------------------------
+
+def test_quarantine_kills_nan_query_and_freezes_rest():
+    """A NaN-poisoned query is force-finished at the first chunk boundary;
+    the other queries' results are bitwise unaffected."""
+    g, pg, sources = _setup(queries=3)
+    eng = BSPEngine(pg)
+    clean0 = {"level": jnp.asarray(multi_source_state(pg, sources))}
+    ref_state, _ = eng.run_batched(BFS_PROGRAM, dict(clean0))
+
+    poisoned = np.asarray(clean0["level"]).copy()
+    poisoned[0] = np.nan
+    quar = QuarantinePolicy()
+    quar.begin(3)
+    st, _, info = eng.run_batched_chunked(
+        BFS_PROGRAM, {"level": jnp.asarray(poisoned)},
+        checkpoint_every=2, on_chunk=quar.scan)
+    assert [r["query"] for r in quar.quarantined] == [0]
+    assert quar.quarantined[0]["reason"] == "nan"
+    assert info["finished"].all()
+    np.testing.assert_array_equal(np.asarray(st["level"])[1:],
+                                  np.asarray(ref_state["level"])[1:])
+
+
+def test_quarantine_superstep_budget():
+    """A query that won't converge inside the budget is quarantined with
+    reason ``superstep_budget``; queries that finish in time are not."""
+    # a directed path: BFS from vertex 0 needs num_vertices-1 supersteps,
+    # from the tail it finishes immediately
+    n = 24
+    g = G.from_edge_list(np.arange(n - 1), np.arange(1, n), n)
+    pg = PT.partition(g, 2, "rand")
+    eng = BSPEngine(pg)
+    state0 = {"level": jnp.asarray(
+        multi_source_state(pg, np.array([[0], [n - 1]])))}
+    quar = QuarantinePolicy(superstep_budget=4)
+    quar.begin(2)
+    _, sq, info = eng.run_batched_chunked(
+        BFS_PROGRAM, state0, checkpoint_every=2, on_chunk=quar.scan)
+    assert [(r["query"], r["reason"]) for r in quar.quarantined] == \
+        [(0, "superstep_budget")]
+    assert info["finished"].all()
+    assert int(sq[0]) <= 6        # killed at a chunk boundary, not at n-1
+
+
+def test_admission_rejects_overflow_with_reason():
+    ctl = AdmissionController(capacity=2)
+    assert ctl.offer(1) and ctl.offer(2)
+    assert not ctl.offer(3)
+    assert ctl.rejected[0]["reason"] == "queue_full"
+    assert ctl.take(4) == [1, 2]
+
+
+def test_serve_reports_admission_and_sla():
+    g, pg, _ = _setup()
+    eng = BSPEngine(pg)
+    from repro.launch.graph_serve import serve
+    sources = np.arange(8) % g.num_vertices
+    rep = serve(eng, "bfs", sources, batch=2, deadline_ms=1e7,
+                queue_capacity=4)
+    assert rep["admission"]["admitted"] == 4
+    assert rep["admission"]["rejected"] == 4
+    assert rep["admission"]["reject_reasons"] == ["queue_full"]
+    assert rep["sla"]["met"] == 4 and rep["sla"]["misses"] == 0
+
+
+def test_degradation_ladder_falls_back_then_propagates_bugs():
+    calls = []
+
+    def flaky():
+        calls.append("p")
+        raise WorkerFailure("kernel died")
+
+    ladder = DegradationLadder(retries=1)
+    out = ladder.run(flaky, lambda: "reference", label="batch0")
+    assert out == "reference" and calls == ["p", "p"]
+    assert len(ladder.downgrades) == 1
+
+    def buggy():
+        raise ValueError("bad program")
+
+    with pytest.raises(ValueError):        # not retryable, no fallback
+        ladder.run(buggy, lambda: "reference")
+    assert len(ladder.downgrades) == 1
+
+
+# ---------------------------------------------------------------------------
+# chaos sites + injector matching
+# ---------------------------------------------------------------------------
+
+def test_chaos_site_scoped_injection():
+    inj = FaultInjector(sites={
+        "exchange": [{"at": 2}],
+        "worker.chunk": [{"shard": 1}],
+        "query.poison": [{"round": 3, "flag": True}]})
+    with chaos.active(inj):
+        assert not chaos.visit("exchange", axis="parts")   # visit 0
+        assert not chaos.visit("exchange", axis="parts")   # visit 1
+        with pytest.raises(WorkerFailure):
+            chaos.visit("exchange", axis="parts")          # visit 2: armed
+        chaos.visit("exchange", axis="parts")      # specs fire once
+        with pytest.raises(WorkerFailure):
+            chaos.visit("worker.chunk", shards=(0, 1))
+        assert not chaos.visit("query.poison", round=2)
+        assert chaos.visit("query.poison", round=3)
+    assert not chaos.registry._injectors          # context manager removes
+    assert len(inj.site_fired) == 3
+
+
+def test_injected_shard_failure_recovered_by_chunk_retry():
+    """A worker death inside the chunked loop is retryable: rerun from the
+    persisted carry, result still bitwise equal to the clean run."""
+    g, pg, sources = _setup()
+    eng = BSPEngine(pg)
+    state0 = {"level": jnp.asarray(multi_source_state(pg, sources))}
+    ref_state, ref_steps = eng.run_batched(BFS_PROGRAM, dict(state0))
+
+    carry = dict(state=dict(state0), step=0,
+                 fin=np.zeros(len(sources), bool),
+                 steps_q=np.zeros(len(sources), np.int32))
+
+    def on_chunk(snap):
+        carry.update(snap)
+
+    inj = FaultInjector(sites={"superstep.chunk": [{"chunk": 1}]})
+    with chaos.active(inj):
+        with pytest.raises(WorkerFailure):
+            eng.run_batched_chunked(BFS_PROGRAM, dict(state0),
+                                    checkpoint_every=2, on_chunk=on_chunk)
+        st, sq, _ = eng.run_batched_chunked(   # resume from last good carry
+            BFS_PROGRAM, carry["state"], checkpoint_every=2,
+            start_step=carry["step"], fin=carry["fin"],
+            steps_q=carry["steps_q"])
+    np.testing.assert_array_equal(np.asarray(st["level"]),
+                                  np.asarray(ref_state["level"]))
+    np.testing.assert_array_equal(np.asarray(sq), np.asarray(ref_steps))
+
+
+def test_chaos_drill_smoke():
+    """The full ``--chaos`` drill: clean vs injected session, recovery,
+    zero lost mutations, parity (the CI chaos job, in a subprocess)."""
+    r = _run(1, "repro.launch.graph_serve", "--smoke", "--chaos",
+             "--alg", "bfs", "--backend", "fused")
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-3000:])
+    assert "CHAOS OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# input validation: fail fast with actionable errors
+# ---------------------------------------------------------------------------
+
+class TestValidation:
+    def test_from_edge_list_rejects_out_of_range_ids(self):
+        with pytest.raises(ValueError, match="must lie in"):
+            G.from_edge_list([0, 7], [1, 2], num_vertices=4)
+        with pytest.raises(ValueError, match="negative"):
+            G.from_edge_list([0, -1], [1, 2], num_vertices=4)
+
+    def test_from_edge_list_rejects_length_mismatch(self):
+        with pytest.raises(ValueError, match="length mismatch"):
+            G.from_edge_list([0, 1], [1], num_vertices=4)
+        with pytest.raises(ValueError, match="weights"):
+            G.from_edge_list([0, 1], [1, 2], num_vertices=4,
+                             weights=np.array([1.0]))
+
+    def test_from_edge_list_rejects_nan_weights(self):
+        with pytest.raises(ValueError, match="finite"):
+            G.from_edge_list([0, 1], [1, 2], num_vertices=4,
+                             weights=np.array([1.0, np.nan]))
+
+    def test_mutation_batch_rejects_malformed(self):
+        with pytest.raises(ValueError):
+            MutationBatch(src=np.array([0, 1]), dst=np.array([1]),
+                          insert=np.array([True, True]))
+        with pytest.raises(ValueError, match="negative"):
+            MutationBatch(src=np.array([-2]), dst=np.array([1]),
+                          insert=np.array([True]))
+        with pytest.raises(ValueError, match="finite"):
+            MutationBatch(src=np.array([0]), dst=np.array([1]),
+                          insert=np.array([True]),
+                          weight=np.array([np.inf]))
+
+    def test_apply_mutations_rejects_out_of_range_vertex(self):
+        g = G.rmat(6, 8, seed=0)
+        dg = DynamicGraph(g, 2, "rand", mutation_capacity=8)
+        bad = MutationBatch(src=np.array([g.num_vertices + 3]),
+                            dst=np.array([0]), insert=np.array([True]))
+        with pytest.raises(ValueError, match="num_vertices"):
+            dg.apply_mutations(bad)

@@ -58,6 +58,48 @@ class TestCheckpoint:
         ckpts = sorted(tmp_path.glob("step_*.npz"))
         assert len(ckpts) == 2  # retention
 
+    @pytest.mark.filterwarnings(
+        "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+    def test_crash_mid_save_keeps_previous_checkpoint(self, tmp_path,
+                                                      monkeypatch):
+        """A crash during the npz write must not tear the latest pointer:
+        the partial file stays a ``.tmp``, never a published step."""
+        mgr = CheckpointManager(tmp_path)
+        mgr.save_tree(1, {"w": jnp.ones((4,))})
+        assert mgr.latest_step() == 1
+
+        real_savez = np.savez
+
+        def torn_savez(f, **arrs):
+            f.write(b"PK\x03\x04 torn")       # partial bytes, then die
+            raise OSError("disk died mid-write")
+
+        monkeypatch.setattr(np, "savez", torn_savez)
+        mgr.save_tree(2, {"w": jnp.full((4,), 2.0)}, blocking=False)
+        mgr.wait()                             # crash happens on the thread
+        monkeypatch.setattr(np, "savez", real_savez)
+
+        assert mgr.latest_step() == 1          # step 2 never published
+        step, tree = mgr.restore_tree({"w": np.zeros(4, np.float32)})
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(tree["w"]), np.ones(4))
+        published = list(tmp_path.glob("step_*.npz"))
+        assert all("00000002" not in p.name for p in published)
+
+    def test_save_tree_arbitrary_pytree_roundtrip(self, tmp_path):
+        """save_tree/restore_tree handle non-train-shaped pytrees (the
+        serving snapshot shape) including manifest extra metadata."""
+        mgr = CheckpointManager(tmp_path)
+        tree = {"standing": np.arange(12.0, dtype=np.float32).reshape(3, 4),
+                "dyn": {"fwd": {"col": np.arange(5, dtype=np.int32)},
+                        "counts": (np.int64(7), np.int64(9))}}
+        mgr.save_tree(4, tree, extra={"round": 2, "acked": 2})
+        step, got = mgr.restore_tree(jax.tree.map(np.zeros_like, tree))
+        assert step == 4
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(tree)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert mgr.manifest_extra(4) == {"round": 2, "acked": 2}
+
     def test_elastic_reshard_restore(self, tmp_path):
         """Checkpoint written unsharded restores under a different mesh."""
         from repro.checkpoint.manager import restore_resharded
@@ -109,6 +151,43 @@ class TestRestart:
         with pytest.raises(RuntimeError):
             run_with_restarts(step, {"params": {"w": jnp.zeros(())}}, 5,
                               CheckpointManager(tmp_path), max_failures=2)
+
+    def test_restarts_generic_pytree_state(self, tmp_path):
+        """State is any pytree, not the train-shaped dict — a serving
+        carry {standing results, counters} restarts identically."""
+        def make_step(injector=None):
+            def step(i, state):
+                if injector:
+                    injector.maybe_fail(i)
+                return {"res": state["res"] + i,
+                        "meta": (state["meta"][0] + 1,)}, {}
+            return step
+
+        init = {"res": jnp.zeros((2, 3)), "meta": (jnp.zeros((), jnp.int32),)}
+        clean, _ = run_with_restarts(
+            make_step(), init, 9, CheckpointManager(tmp_path / "a"),
+            checkpoint_every=3)
+        faulty, summary = run_with_restarts(
+            make_step(FaultInjector({4})), init, 9,
+            CheckpointManager(tmp_path / "b"), checkpoint_every=3)
+        assert summary["failures"] == 1
+        np.testing.assert_array_equal(np.asarray(clean["res"]),
+                                      np.asarray(faulty["res"]))
+        assert int(clean["meta"][0]) == int(faulty["meta"][0]) == 9
+
+    def test_non_retryable_surfaces_immediately(self, tmp_path):
+        """Programming bugs are not in the retryable whitelist: no restart
+        is burned, the error propagates on the first occurrence."""
+        calls = []
+
+        def step(i, state):
+            calls.append(i)
+            raise ValueError("a bug, not a dead worker")
+
+        with pytest.raises(ValueError):
+            run_with_restarts(step, {"w": jnp.zeros(())}, 5,
+                              CheckpointManager(tmp_path), max_failures=3)
+        assert calls == [0]   # never retried
 
 
 class TestWatchdog:
