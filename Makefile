@@ -8,7 +8,8 @@ BASELINE := BENCH_superstep.prev.json
 BENCH_THRESHOLD ?= 0.75
 
 .PHONY: test lint bench bench-quick bench-batched bench-dist bench-dynamic \
-	bench-checkpoint bench-gate bench-check serve serve-mutate chaos ci
+	bench-checkpoint bench-continuous bench-gate bench-check serve \
+	serve-mutate serve-continuous chaos ci
 
 test:            ## tier-1 suite
 	$(PY) -m pytest -x -q
@@ -23,9 +24,9 @@ lint:            ## fast critical-rule lint (skips if ruff absent)
 bench:           ## reference-vs-fused superstep timings -> BENCH_superstep.json
 	$(PY) benchmarks/superstep_bench.py
 
-bench-quick:     ## smallest scale only (the CI bench job; batched + dynamic + checkpoint)
+bench-quick:     ## smallest scale only (the CI bench job; batched + dynamic + checkpoint + continuous)
 	$(PY) benchmarks/superstep_bench.py --quick --batched --mutations \
-	  --checkpoint
+	  --checkpoint --continuous
 
 bench-batched:   ## query-throughput column only (Q in {1,8,32}) + gate
 	$(PY) benchmarks/superstep_bench.py --quick --batched
@@ -44,6 +45,14 @@ serve-mutate:    ## mutating serving driver (resident DynamicGraph)
 
 bench-checkpoint: ## fault-tolerance column (snapshot overhead, recovery) + gate
 	$(PY) benchmarks/superstep_bench.py --quick --checkpoint
+	$(MAKE) bench-gate
+
+serve-continuous: ## continuous-batching serving driver (resident ServeSession)
+	$(PY) -m repro.launch.graph_serve --scale 12 --batch 32 --alg bfs \
+	  --continuous
+
+bench-continuous: ## continuous-batching column (q/s + p99 vs drain) + gate
+	$(PY) benchmarks/superstep_bench.py --quick --continuous
 	$(MAKE) bench-gate
 
 chaos:           ## fault-injection drill: crash/recover/replay, parity asserts

@@ -386,6 +386,79 @@ def bench_checkpoint_cell(pg, scale: int, parts: int, strategy: str,
         chunk_retraces=BSPEngine._run_chunk._cache_size() - entries0)
 
 
+def bench_continuous_cell(pg, scale: int, parts: int, strategy: str,
+                          seed: int, chunk: int = 2, q: int = 8,
+                          stream_factor: int = 8) -> dict:
+    """One continuous-batching cell: q/s and p99-under-load of a resident
+    ``ServeSession`` (slot refill at chunk boundaries) vs fixed-batch
+    drain at the same Q, over a ``stream_factor``x-Q stream submitted up
+    front.
+
+    Timing is CPU-noisy; the deterministic halves are gated instead
+    (refill decisions depend only on superstep-indexed convergence, so
+    they are reproducible for a fixed seed): ``bitwise`` (every
+    completion equals its drain-batch row), ``retraces`` (0 after
+    warmup), ``refills`` (== stream - Q: every extra query rode a freed
+    slot) and ``min_slot_refills``.
+    """
+    import time
+
+    from repro.runtime import ServeSession, drain_reference
+
+    eng = BSPEngine(pg)
+    rng = np.random.default_rng(seed)
+    stream = rng.integers(0, pg.num_vertices, size=stream_factor * q)
+
+    # warm every compile outside the timed runs: one throwaway session
+    # (chunk jit + slot swap + one refill cycle) and one drain batch
+    ws = ServeSession(eng, "bfs", slots=q, chunk=chunk)
+    ws.submit(np.resize(stream, 2 * q))
+    ws.drain()
+    drain_reference(eng, "bfs", stream[:q], q)
+
+    # fixed-batch drain baseline: a query's latency is its batch's
+    # completion time (batch-synchronous serving)
+    drain_lat = []
+    want = []
+    t0 = time.perf_counter()
+    for i in range(0, len(stream), q):
+        want.append(drain_reference(eng, "bfs", stream[i:i + q], q))
+        done_ms = (time.perf_counter() - t0) * 1e3
+        drain_lat.extend([done_ms] * q)
+    drain_wall = time.perf_counter() - t0
+    want = np.concatenate(want, axis=0)
+
+    session = ServeSession(eng, "bfs", slots=q, chunk=chunk)
+    qids = session.submit(stream)
+    t0 = time.perf_counter()
+    rep = session.drain()
+    cont_wall = time.perf_counter() - t0
+    results = {r["query"]: r["result"] for r in session.poll()}
+    bitwise = int(
+        len(results) == len(stream)
+        and all(np.array_equal(results[qid], row)
+                for qid, row in zip(qids, want)))
+    cont_lat = sorted(session._latency_ms.values())
+
+    def pct(vals, p):
+        return float(np.percentile(vals, p, method="nearest"))
+
+    return dict(
+        scale=scale, parts=parts, strategy=strategy, algorithm="bfs",
+        combine="min", mode="continuous", block_e=None, q=q,
+        stream=len(stream), chunk=chunk, v_max=pg.v_max,
+        windows=rep["windows"], supersteps=rep["final_step"],
+        drain_qps=len(stream) / drain_wall,
+        drain_p50_ms=pct(drain_lat, 50), drain_p99_ms=pct(drain_lat, 99),
+        continuous_qps=len(stream) / cont_wall,
+        continuous_p50_ms=pct(cont_lat, 50),
+        continuous_p99_ms=pct(cont_lat, 99),
+        refills=rep["refills"],
+        min_slot_refills=rep["min_slot_refills"],
+        max_slot_refills=rep["max_slot_refills"],
+        retraces=rep["retraces"], bitwise=bitwise)
+
+
 def bench_distributed_cell(pg, scale: int, parts: int, strategy: str,
                            alg: str, n_dev: int) -> dict:
     """One multi-device cell: sharded fused vs sharded hybrid superstep,
@@ -476,6 +549,11 @@ def main(argv=None) -> int:
                          "zero-quarantine guards")
     ap.add_argument("--checkpoint-every", type=int, default=2,
                     help="supersteps per chunk for --checkpoint")
+    ap.add_argument("--continuous", action="store_true",
+                    help="add the continuous-batching column: resident-"
+                         "session q/s and p99-under-load vs fixed-batch "
+                         "drain at the same Q, with the bitwise-parity, "
+                         "zero-retrace and refill-count guards")
     ap.add_argument("--distributed", action="store_true",
                     help="add multi-device cells (sharded fused vs sharded "
                          "hybrid + exchanged-bytes accounting)")
@@ -649,6 +727,48 @@ def main(argv=None) -> int:
                     failures.append(
                         f"checkpoint {strategy}: chunked windows retraced "
                         f"{crec['chunk_retraces']}x after warmup")
+            if args.continuous:
+                srec = bench_continuous_cell(pg, scale, args.parts, strategy,
+                                             args.seed,
+                                             chunk=args.checkpoint_every)
+                results.append(srec)
+                print(f"scale={scale} {strategy:>4} continuous: "
+                      f"{srec['continuous_qps']:.0f} q/s vs drain "
+                      f"{srec['drain_qps']:.0f} q/s; p99 "
+                      f"{srec['continuous_p99_ms']:.0f} vs "
+                      f"{srec['drain_p99_ms']:.0f} ms; "
+                      f"refills={srec['refills']} "
+                      f"(min/slot={srec['min_slot_refills']}), "
+                      f"retraces={srec['retraces']} "
+                      f"bitwise={srec['bitwise']}", flush=True)
+                # Continuous-batching contract, deterministic halves
+                # (refill decisions are superstep-indexed, so they are
+                # reproducible; CPU timing is noisy and only recorded):
+                # every completion bitwise equals drain-batch, every
+                # extra query rode a freed slot, slots actually cycled,
+                # and nothing retraced after warmup.
+                if not srec["bitwise"]:
+                    failures.append(
+                        f"continuous {strategy}: completions diverge from "
+                        f"drain-batch run_batched")
+                if srec["retraces"] != 0:
+                    failures.append(
+                        f"continuous {strategy}: {srec['retraces']} "
+                        f"compile-cache entries added across refill "
+                        f"cycles — the slot swap is no longer "
+                        f"shape-stable")
+                if srec["refills"] != srec["stream"] - srec["q"]:
+                    failures.append(
+                        f"continuous {strategy}: {srec['refills']} refills "
+                        f"for a {srec['stream']}-query stream over "
+                        f"{srec['q']} slots — freed slots are not being "
+                        f"refilled")
+                if srec["min_slot_refills"] < 3:
+                    failures.append(
+                        f"continuous {strategy}: a slot was refilled only "
+                        f"{srec['min_slot_refills']}x over a "
+                        f"{srec['stream'] // srec['q']}x-Q stream — "
+                        f"refill is not reaching every slot")
             if args.batched:
                 for q in args.batch_sizes:
                     brec = bench_batched_cell(pg, scale, args.parts,

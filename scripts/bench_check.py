@@ -70,13 +70,15 @@ def main(argv=None) -> int:
     ap.add_argument("--byte-fields", nargs="*",
                     default=["exchanged_bytes", "fused_temp_bytes",
                              "retraces", "incremental_steps", "cold_steps",
-                             "quarantined", "chunk_retraces"],
+                             "quarantined", "chunk_retraces", "refills",
+                             "windows"],
                     help="deterministic metrics gated at --byte-threshold "
                          "regardless of timing noise (retraces must stay "
                          "0: any growth fails; the mutation column's "
-                         "superstep counts and the checkpoint column's "
-                         "clean-path quarantine/retrace counts are "
-                         "deterministic too)")
+                         "superstep counts, the checkpoint column's "
+                         "clean-path quarantine/retrace counts, and the "
+                         "continuous column's refill/window counts are "
+                         "superstep-indexed and deterministic too)")
     ap.add_argument("--byte-threshold", type=float, default=0.20,
                     help="max allowed fractional growth in --byte-fields")
     args = ap.parse_args(argv)

@@ -10,8 +10,11 @@ from repro.algorithms.cc import (cc_incremental, cc_reference,
 from repro.algorithms.bc import (bc_exact, bc_exact_sequential, bc_reference,
                                  betweenness_centrality,
                                  betweenness_centrality_batched)
+from repro.algorithms.continuous import (CONTINUOUS_FORMS, ContinuousForm,
+                                         continuous_form)
 
 __all__ = [
+    "CONTINUOUS_FORMS", "ContinuousForm", "continuous_form",
     "bfs", "bfs_batched", "bfs_incremental", "bfs_reference", "pagerank",
     "pagerank_reference", "personalized_pagerank",
     "personalized_pagerank_reference", "sssp", "sssp_batched",

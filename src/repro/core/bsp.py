@@ -606,6 +606,31 @@ def _run_chunked_loop(step_fn: Callable, chunk: int, max_steps: int,
     return jax.lax.while_loop(cond, body, (state, step0, fin0, steps_q0))
 
 
+@jax.jit
+def _slot_swap(state: BatchedState, new_rows: BatchedState, admit: Array,
+               fin: Array, steps_q: Array):
+    """Static-shape slot refill for continuous batching.
+
+    ``admit`` is a ``[Q]`` bool mask of slots taking a new tenant: their
+    state leaves are replaced wholesale by ``new_rows``' (a full-Q pytree
+    whose non-admitted rows are ignored), their finished votes cleared, and
+    their superstep counters zeroed — everything else passes through
+    **bitwise** unchanged.  Q is static and the carry shapes never change,
+    so one compiled trace serves every refill of a serving session; the
+    same trace serves ``DistributedBSPEngine`` (the query axis is
+    replicated — a per-slot swap needs no communication, and the next
+    chunk window re-shards the carry on entry).
+    """
+    def swap(new, old):
+        return jnp.where(admit.reshape(admit.shape + (1,) * (old.ndim - 1)),
+                         new, old)
+
+    state = jax.tree.map(swap, new_rows, state)
+    fin = jnp.where(admit, jnp.bool_(False), fin)
+    steps_q = jnp.where(admit, jnp.int32(0), steps_q)
+    return state, fin, steps_q
+
+
 @functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4))
 def _run_dyn_jit(dims: _Dims, program: VertexProgram,
                  fused_cfg: Optional[FusedConfig], max_steps: int,
@@ -989,6 +1014,80 @@ class BSPEngine:
         without ``include_reverse`` partitioning)."""
         return None if self._uses_hybrid(program) else self.edges_for(program)
 
+    def execute(self, program: VertexProgram, state: BatchedState, *,
+                num_steps: Optional[int] = None,
+                chunk: Optional[int] = None,
+                on_chunk: Optional[Callable] = None,
+                incremental=None,
+                start_step: int = 0, fin=None, steps_q=None,
+                max_chunks: Optional[int] = None,
+                chaos_ctx: Optional[dict] = None):
+        """THE engine entry point: one documented facade over every run
+        mode.  ``state`` is a batched ``[Q, Pl, v_max]`` pytree
+        (:func:`batch_state` lifts a single query).
+
+        Dispatch, by keyword:
+
+        - ``execute(program, state)`` — run-to-convergence: one resident
+          ``lax.while_loop``, per-query finished votes, returns
+          ``(state, steps_q [Q])``.
+        - ``execute(program, state, num_steps=n)`` — fixed-iteration
+          programs (PageRank): returns the final ``state``.
+        - ``execute(program, state, chunk=k)`` — checkpointable /
+          continuous mode: bounded ``k``-superstep windows whose
+          boundaries surface the carry to ``on_chunk`` (snapshotting,
+          quarantine kills, slot refills — see
+          :meth:`run_batched_chunked` for the hook protocol and the
+          ``start_step``/``fin``/``steps_q``/``max_chunks`` resume
+          operands).  Returns ``(state, steps_q, info)``.
+        - ``execute(program, prev_state, incremental=dirty)`` — warm
+          start from a previous fixpoint over a ``[Pl, v_max]`` dirty
+          mask; returns ``(state, steps_q)`` or ``None`` when the
+          program has no :class:`IncrementalForm`.
+
+        The legacy entry points (``run``, ``run_fixed``, ``run_batched``,
+        ``run_fixed_batched``, ``run_batched_chunked``,
+        ``run_incremental``) survive as thin deprecated aliases of these
+        modes — they stay because their jitted class attributes are the
+        compile-cache the zero-retrace serving contract introspects.
+        Incompatible keyword combinations raise with the fix spelled out.
+        """
+        modes = {"num_steps": num_steps is not None,
+                 "chunk": chunk is not None,
+                 "incremental": incremental is not None}
+        picked = [k for k, v in modes.items() if v]
+        if len(picked) > 1:
+            raise ValueError(
+                f"execute() got {' + '.join(picked)} — these select "
+                f"mutually exclusive run modes; pass exactly one (or none "
+                f"for run-to-convergence).  Fixed-step chunking is not a "
+                f"mode: restate the program with a never-voting apply "
+                f"(see _fixed_step_program) and pass chunk= alone.")
+        if not modes["chunk"]:
+            chunked_only = [
+                name for name, val in (("on_chunk", on_chunk),
+                                       ("fin", fin), ("steps_q", steps_q),
+                                       ("max_chunks", max_chunks),
+                                       ("chaos_ctx", chaos_ctx))
+                if val is not None] + (
+                    ["start_step"] if start_step != 0 else [])
+            if chunked_only:
+                raise ValueError(
+                    f"execute() got {', '.join(chunked_only)} without "
+                    f"chunk= — boundary hooks and resume carries only "
+                    f"exist in chunked mode; pass chunk=<supersteps per "
+                    f"window> (e.g. chunk=2).")
+        if modes["num_steps"]:
+            return self.run_fixed_batched(program, num_steps, state)
+        if modes["chunk"]:
+            return self.run_batched_chunked(
+                program, state, checkpoint_every=chunk, on_chunk=on_chunk,
+                start_step=start_step, fin=fin, steps_q=steps_q,
+                max_chunks=max_chunks, chaos_ctx=chaos_ctx)
+        if modes["incremental"]:
+            return self.run_incremental(program, state, incremental)
+        return self.run_batched(program, state)
+
     @functools.partial(jax.jit, static_argnums=(0, 1))
     def run_batched(self, program: VertexProgram,
                     state: BatchedState) -> Tuple[BatchedState, Array]:
@@ -996,7 +1095,11 @@ class BSPEngine:
         ``lax.while_loop`` until every query votes finish; returns the final
         batched state and per-query superstep counts [Q].  The compiled
         computation is cached on (program, state shape): batches of the same
-        Q never retrace, whatever their sources."""
+        Q never retrace, whatever their sources.
+
+        Deprecated alias: prefer ``execute(program, state)`` — kept (and
+        kept jitted) because this class attribute *is* the compile cache
+        the serving contract introspects."""
         edges = self._edges_or_none(program)
         step_fn = self._step_fn(program, edges, self._exchange,
                                 self._all_finished)
@@ -1007,14 +1110,16 @@ class BSPEngine:
         """Run supersteps until all partitions vote finish (lax.while_loop).
 
         Single-query compatibility wrapper: a Q=1 slice of the batched
-        path, bitwise-identical semantics to the pre-batching engine."""
+        path, bitwise-identical semantics to the pre-batching engine.
+        Deprecated alias: prefer ``execute(program, batch_state(state))``."""
         state, steps = self.run_batched(program, batch_state(state))
         return unbatch_state(state), steps[0]
 
     @functools.partial(jax.jit, static_argnums=(0, 1, 2))
     def run_fixed_batched(self, program: VertexProgram, num_steps: int,
                           state: BatchedState) -> BatchedState:
-        """Fixed-iteration algorithms (PageRank), batched over queries."""
+        """Fixed-iteration algorithms (PageRank), batched over queries.
+        Deprecated alias: prefer ``execute(program, state, num_steps=n)``."""
         edges = self._edges_or_none(program)
         step_fn = self._step_fn(program, edges, self._exchange,
                                 self._all_finished)
@@ -1027,7 +1132,8 @@ class BSPEngine:
 
     def run_fixed(self, program: VertexProgram, num_steps: int,
                   state: State) -> State:
-        """Fixed-iteration algorithms (PageRank); Q=1 wrapper."""
+        """Fixed-iteration algorithms (PageRank); Q=1 wrapper.
+        Deprecated alias: prefer ``execute(..., num_steps=n)``."""
         return unbatch_state(
             self.run_fixed_batched(program, num_steps, batch_state(state)))
 
@@ -1075,11 +1181,29 @@ class BSPEngine:
         identical** to the single resident while_loop; between windows the
         carry escapes to host.  ``on_chunk(snap)`` receives ``{"state",
         "step", "fin", "steps_q"}`` per chunk and may snapshot it
-        (``CheckpointManager.save_tree``) and/or return a ``[Q]`` bool mask
-        of queries to force-finish (quarantine: masked queries freeze
-        bitwise exactly like converged ones).  Resume a snapshot by passing
-        its ``start_step``/``fin``/``steps_q``.  Returns ``(state, steps_q,
-        info)`` with ``info = {"chunks", "final_step", "finished"}``.
+        (``CheckpointManager.save_tree``) and/or steer the carry:
+
+        - return a ``[Q]`` bool mask → force-finish those queries
+          (quarantine: masked queries freeze bitwise exactly like
+          converged ones);
+        - return a dict → the continuous-batching boundary protocol:
+          ``{"kill": mask}`` as above, ``{"refill": (new_rows, admit)}``
+          swaps admitted slots' state in via :func:`_slot_swap` (clearing
+          their votes and zeroing their step counters — a refilled slot
+          joins the resident loop as a fresh query), ``{"stop": True}``
+          ends the run at this boundary.  Kills apply before refills, so a
+          hook may quarantine a slot and hand it to a new tenant at the
+          same boundary.
+
+        The all-finished exit re-checks *after* the hook: a refill that
+        clears votes keeps the loop resident, so one ``run_batched_chunked``
+        call (and one compiled chunk trace) serves an unbounded query
+        stream.  Resume a snapshot by passing its
+        ``start_step``/``fin``/``steps_q``.  Returns ``(state, steps_q,
+        info)`` with ``info = {"chunks", "final_step", "finished",
+        "refilled"}``.
+
+        Deprecated alias: prefer ``execute(program, state, chunk=k, ...)``.
         """
         if checkpoint_every < 1:
             raise ValueError(
@@ -1094,6 +1218,8 @@ class BSPEngine:
                    else jnp.asarray(steps_q, jnp.int32).reshape(q))
         step = jnp.int32(start_step)
         chunks = 0
+        refilled = 0
+        stop = False
         while True:
             chaos.visit("superstep.chunk", step=int(step), chunk=chunks,
                         **(chaos_ctx or {}))
@@ -1101,18 +1227,32 @@ class BSPEngine:
                 program, int(checkpoint_every), state, step, fin, steps_q)
             chunks += 1
             if on_chunk is not None:
-                kill = on_chunk(dict(state=state, step=int(step),
-                                     fin=np.asarray(fin),
-                                     steps_q=np.asarray(steps_q)))
-                if kill is not None:
+                out = on_chunk(dict(state=state, step=int(step),
+                                    fin=np.asarray(fin),
+                                    steps_q=np.asarray(steps_q)))
+                if isinstance(out, dict):
+                    kill = out.get("kill")
+                    if kill is not None:
+                        fin = jnp.logical_or(
+                            fin, jnp.asarray(kill, jnp.bool_).reshape(q))
+                    refill = out.get("refill")
+                    if refill is not None:
+                        new_rows, admit = refill
+                        new_rows = jax.tree.map(jnp.asarray, new_rows)
+                        admit = jnp.asarray(admit, jnp.bool_).reshape(q)
+                        state, fin, steps_q = _slot_swap(
+                            state, new_rows, admit, fin, steps_q)
+                        refilled += int(np.asarray(admit).sum())
+                    stop = bool(out.get("stop"))
+                elif out is not None:        # legacy bare kill mask
                     fin = jnp.logical_or(
-                        fin, jnp.asarray(kill, jnp.bool_).reshape(q))
-            if bool(jnp.all(fin)) or int(step) >= program.max_steps:
+                        fin, jnp.asarray(out, jnp.bool_).reshape(q))
+            if stop or bool(jnp.all(fin)) or int(step) >= program.max_steps:
                 break
             if max_chunks is not None and chunks >= max_chunks:
                 break
         info = dict(chunks=chunks, final_step=int(step),
-                    finished=np.asarray(fin))
+                    finished=np.asarray(fin), refilled=refilled)
         return state, steps_q, info
 
     # ---------------------- dynamic-graph plumbing -------------------------
@@ -1168,6 +1308,9 @@ class BSPEngine:
         window itself (``dirty_since`` reports it): a deletion invalidates
         the previous fixpoint as an over-approximation, so warm-starting
         across one is unsound.
+
+        Deprecated alias: prefer ``execute(program, prev_state,
+        incremental=dirty)``.
         """
         inc = program.incremental
         if inc is None:

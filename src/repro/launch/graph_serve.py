@@ -25,13 +25,25 @@ concurrent queries.  This driver is that regime end to end:
 ``--smoke`` shrinks everything for CI.  The first batch per algorithm pays
 compilation and is reported separately (``cold_ms``); steady-state numbers
 exclude it.
+
+Serving modes compose through a validated :class:`ServeConfig` (built from
+the CLI flags; incompatible combinations fail fast with the flag to add).
+``--continuous`` swaps drain-batch scheduling for a resident
+:class:`~repro.runtime.session.ServeSession`: converged query slots are
+compacted out and refilled from the admission queue at chunk boundaries
+inside one compiled loop (zero retraces), and the report compares
+``continuous_qps``/p99 against the drain-batch baseline on the same
+stream.  ``--mutate`` and ``--depth-buckets`` compose with it; see
+``docs/serving.md`` for the slot lifecycle and the API migration table.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
 import time
+from typing import Optional
 
 import numpy as np
 
@@ -40,6 +52,104 @@ def _percentile(vals, p: float) -> float:
     if not len(vals):
         return float("nan")
     return float(np.percentile(vals, p, method="nearest"))
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """The validated serving-mode surface — one place for the flags that
+    used to sprawl across ``main()``'s dispatch order.
+
+    The old dispatch silently ignored combinations (``--chaos`` dropped
+    ``--depth-buckets``; ``--mutate`` dropped ``--deadline-ms``/
+    ``--queue-capacity``); :meth:`validate` makes every incompatible pair
+    an actionable error instead, and names the spelling that *does*
+    compose (usually ``--continuous``, whose :class:`ServeSession` takes
+    the other knobs as options).
+    """
+    alg: str = "bfs"
+    batch: int = 32
+    mutate: bool = False
+    chaos: bool = False
+    continuous: bool = False
+    depth_buckets: int = 0
+    deadline_ms: Optional[float] = None
+    queue_capacity: Optional[int] = None
+    chunk: int = 2
+
+    @classmethod
+    def from_args(cls, args) -> "ServeConfig":
+        return cls(alg=args.alg, batch=args.batch, mutate=args.mutate,
+                   chaos=args.chaos, continuous=args.continuous,
+                   depth_buckets=args.depth_buckets,
+                   deadline_ms=args.deadline_ms,
+                   queue_capacity=args.queue_capacity,
+                   chunk=args.checkpoint_every).validate()
+
+    def validate(self) -> "ServeConfig":
+        def bad(combo: str, why: str, instead: str):
+            raise ValueError(f"incompatible serving flags: {combo} — {why}. "
+                             f"{instead}")
+
+        if self.chaos:
+            for name, on in (("--mutate", self.mutate),
+                             ("--continuous", self.continuous),
+                             ("--depth-buckets", bool(self.depth_buckets)),
+                             ("--deadline-ms", self.deadline_ms is not None),
+                             ("--queue-capacity",
+                              self.queue_capacity is not None)):
+                if on:
+                    bad(f"--chaos + {name}",
+                        "the chaos drill is a self-contained mutating "
+                        "session with its own injection schedule",
+                        "Run --chaos alone; fault tolerance for continuous "
+                        "sessions is serve_with_restarts (see "
+                        "tests/test_continuous.py).")
+        if self.continuous and self.alg not in ("bfs", "sssp"):
+            raise ValueError(
+                f"--continuous serves step-translatable programs only "
+                f"(bfs, sssp), not {self.alg!r}: slot refill re-seeds a "
+                f"query mid-loop in the global step frame "
+                f"(algorithms/continuous.py).  Drop --continuous to "
+                f"drain-batch {self.alg!r}.")
+        if not self.continuous:
+            if self.mutate:
+                for name, on in (("--depth-buckets",
+                                  bool(self.depth_buckets)),
+                                 ("--deadline-ms",
+                                  self.deadline_ms is not None),
+                                 ("--queue-capacity",
+                                  self.queue_capacity is not None)):
+                    if on:
+                        bad(f"--mutate + {name}",
+                            "the drain-batch mutating driver has no "
+                            "admission queue or scheduler",
+                            "Add --continuous: ServeSession composes "
+                            "mutations with deadlines, admission and the "
+                            "depth scheduler in one resident engine.")
+            elif self.depth_buckets:
+                for name, on in (("--deadline-ms",
+                                  self.deadline_ms is not None),
+                                 ("--queue-capacity",
+                                  self.queue_capacity is not None)):
+                    if on:
+                        bad(f"--depth-buckets + {name}",
+                            "the bucketed A/B driver re-runs the stream "
+                            "twice and reports buckets, not SLA",
+                            "Add --continuous to schedule depth-first "
+                            "under a deadline, or drop --depth-buckets.")
+        return self
+
+    @property
+    def mode(self) -> str:
+        if self.chaos:
+            return "chaos"
+        if self.continuous:
+            return "continuous"
+        if self.mutate:
+            return "mutate"
+        if self.depth_buckets:
+            return "depth"
+        return "drain"
 
 
 def run_query_batch(engine, alg: str, sources: np.ndarray) -> np.ndarray:
@@ -618,6 +728,118 @@ def serve_fault_tolerant(args, manager, *, midrun_manager=None,
     return report, np.asarray(prev), quarantined_ids
 
 
+# ---------------------------------------------------------------------------
+# continuous batching (docs/serving.md)
+# ---------------------------------------------------------------------------
+
+def serve_continuous(engine, g, cfg: ServeConfig, sources, *,
+                     dg=None, mutation_stream=None, parity: bool = False,
+                     warm: bool = True) -> dict:
+    """Serve ``sources`` through one resident :class:`ServeSession` and
+    report it against fixed-batch drain at the same Q.
+
+    Non-mutating: the whole stream is submitted up front ("under load" —
+    every query's latency includes its queue wait) and drained by ONE
+    resident compiled loop; the same stream then runs through drain-batch
+    ``run_batched`` for the q/s / p99 baseline and, with ``parity=True``,
+    the bitwise oracle.  With ``mutation_stream`` (requires a dynamic
+    ``dg``), the stream is served in waves — drain, mutate, drain — so
+    every query completes against exactly one graph version and parity
+    holds per wave.
+    """
+    from repro.runtime import ServeSession, drain_reference
+
+    deg = g.out_degrees()
+    scheduler = "depth" if cfg.depth_buckets else "fifo"
+    depth_key = (lambda s: -int(deg[s])) if cfg.depth_buckets else None
+
+    def make_session():
+        return ServeSession(
+            engine, cfg.alg, slots=cfg.batch, chunk=cfg.chunk,
+            queue_capacity=cfg.queue_capacity, deadline_ms=cfg.deadline_ms,
+            scheduler=scheduler, depth_key=depth_key)
+
+    if warm:
+        # pay every compile (chunk jit, slot swap, drain-batch loop)
+        # outside the timed run: a 2x-slots throwaway stream forces one
+        # refill cycle, and the oracle warms run_batched
+        warm_srcs = np.resize(np.asarray(sources), 2 * cfg.batch)
+        ws = make_session()
+        ws.submit(warm_srcs)
+        ws.drain()
+        drain_reference(engine, cfg.alg, warm_srcs[:cfg.batch], cfg.batch)
+
+    waves = [np.asarray(sources).reshape(-1)]
+    if mutation_stream is not None:
+        if dg is None:
+            raise ValueError("mutation_stream needs the dynamic graph (dg)")
+        waves = np.array_split(np.asarray(sources).reshape(-1),
+                               len(mutation_stream) + 1)
+
+    session = make_session()
+    mismatches = 0
+    checked = 0
+    drain_lat: list = []
+    drain_wall = 0.0
+    t_all = time.perf_counter()
+    cont_wall = 0.0
+    for w, wave in enumerate(waves):
+        if w > 0:
+            session.mutate(mutation_stream[w - 1])
+        qids = session.submit(wave)
+        t0 = time.perf_counter()
+        session.drain()
+        cont_wall += time.perf_counter() - t0
+        # fixed-batch drain of the same wave on the same graph version:
+        # the q/s + p99 baseline, and (parity=True) the bitwise oracle
+        t0 = time.perf_counter()
+        num = len(wave)
+        ref_rows = []
+        for i in range(0, num, cfg.batch):
+            batch = np.resize(wave[i:i + cfg.batch], cfg.batch)
+            ref_rows.append(run_query_batch(engine, cfg.alg, batch))
+            # a drained query's latency is its batch's completion time
+            done_ms = (time.perf_counter() - t0) * 1e3
+            drain_lat.extend([done_ms] * min(cfg.batch, num - i))
+        drain_wall += time.perf_counter() - t0
+        if parity:
+            ref = np.concatenate(ref_rows, axis=0)[:num]
+            by_qid = {q: j for j, q in enumerate(qids) if q is not None}
+            for r in session.poll():
+                if r["query"] in by_qid:
+                    checked += 1
+                    if not np.array_equal(r["result"],
+                                          ref[by_qid[r["query"]]]):
+                        mismatches += 1
+    wall_s = time.perf_counter() - t_all
+    rep = session.report()
+    cont_lat = sorted(session._latency_ms.values())
+    completed = rep["completed"]
+    report = dict(
+        mode="continuous", algorithm=cfg.alg, slots=cfg.batch,
+        chunk=cfg.chunk, stream=len(np.asarray(sources).reshape(-1)),
+        waves=len(waves), completed=completed,
+        rejected=rep["rejected"], windows=rep["windows"],
+        refills=rep["refills"],
+        min_slot_refills=rep["min_slot_refills"],
+        max_slot_refills=rep["max_slot_refills"],
+        retraces=rep["retraces"], sla_misses=rep["sla_misses"],
+        scheduler=scheduler,
+        continuous_qps=(completed / cont_wall) if cont_wall else None,
+        continuous_p50_ms=_percentile(cont_lat, 50),
+        continuous_p99_ms=_percentile(cont_lat, 99),
+        drain_qps=(len(drain_lat) / drain_wall) if drain_wall else None,
+        drain_p50_ms=_percentile(drain_lat, 50),
+        drain_p99_ms=_percentile(drain_lat, 99),
+        wall_s=wall_s,
+        backend=getattr(engine, "backend", None),
+        engine=type(engine).__name__)
+    if parity:
+        report["parity_checked"] = checked
+        report["parity_mismatches"] = mismatches
+    return report
+
+
 def run_chaos_drill(args) -> int:
     """``--chaos``: clean session vs fault-injected session, with recovery
     and parity asserts (the CI chaos job).
@@ -761,6 +983,12 @@ def main(argv=None) -> int:
     ap.add_argument("--queue-capacity", type=int, default=None,
                     help="admission-control bound on the query queue; "
                          "overflow is rejected with a reason")
+    # --- continuous batching (docs/serving.md) ---
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through one resident ServeSession: refill "
+                         "converged query slots mid-loop instead of "
+                         "draining the batch (composes with --mutate, "
+                         "--deadline-ms, --queue-capacity, --depth-buckets)")
     args = ap.parse_args(argv)
     if args.smoke:
         args.scale = min(args.scale, 8)
@@ -770,10 +998,62 @@ def main(argv=None) -> int:
         args.mutation_rounds = min(args.mutation_rounds, 3)
         args.standing = min(args.standing, 4)
 
-    if args.chaos:
+    try:
+        cfg = ServeConfig.from_args(args)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    if cfg.mode == "chaos":
         return run_chaos_drill(args)
 
-    if args.mutate:
+    if cfg.mode == "continuous":
+        dg = stream = None
+        if cfg.mutate:
+            from repro.data.graphs import edge_stream
+
+            g, dg, engine = build_engine(args, dynamic=True)
+            stream = edge_stream(g, args.mutation_rounds,
+                                 args.mutation_batch, churn=args.churn,
+                                 seed=args.seed)
+        else:
+            g, _, engine = build_engine(args)
+        print(f"resident graph: |V|={g.num_vertices:,} "
+              f"|E|={g.num_edges:,} parts={args.parts} "
+              f"backend={args.backend} continuous slots={cfg.batch}",
+              flush=True)
+        rng = np.random.default_rng(args.seed)
+        sources = rng.integers(0, g.num_vertices, size=args.num_queries)
+        report = serve_continuous(engine, g, cfg, sources, dg=dg,
+                                  mutation_stream=stream,
+                                  parity=args.smoke)
+        print(f"{cfg.alg}: {report['completed']}/{report['stream']} "
+              f"queries through {report['slots']} resident slots "
+              f"({report['waves']} wave(s)) -> "
+              f"{report['continuous_qps']:.1f} q/s continuous vs "
+              f"{report['drain_qps']:.1f} q/s drain; p99 "
+              f"{report['continuous_p99_ms']:.1f} vs "
+              f"{report['drain_p99_ms']:.1f} ms; "
+              f"refills={report['refills']} "
+              f"(min/slot={report['min_slot_refills']}); "
+              f"retraces={report['retraces']}", flush=True)
+        if "parity_checked" in report:
+            print(f"parity: {report['parity_checked']} checked, "
+                  f"{report['parity_mismatches']} mismatches", flush=True)
+            assert report["parity_mismatches"] == 0, \
+                "continuous results diverge from drain-batch"
+        if report["retraces"]:
+            print(f"WARNING: {report['retraces']} compile-cache entries "
+                  f"added after warmup — refills are retracing",
+                  file=sys.stderr)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(dict(vars(args), **report), f, indent=2)
+            print(f"wrote {args.out}")
+        print("GRAPH SERVE OK")
+        return 0
+
+    if cfg.mode == "mutate":
         from repro.data.graphs import edge_stream
 
         g, dg, engine = build_engine(args, dynamic=True)
@@ -820,7 +1100,7 @@ def main(argv=None) -> int:
     rng = np.random.default_rng(args.seed)
     sources = rng.integers(0, g.num_vertices, size=args.num_queries)
 
-    if args.depth_buckets:
+    if cfg.mode == "depth":
         rep = serve_depth_bucketed(engine, g, args.alg, sources, args.batch,
                                    num_buckets=args.depth_buckets)
         for b in rep["buckets"]:

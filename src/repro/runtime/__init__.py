@@ -1,13 +1,15 @@
 from repro.runtime.watchdog import StepWatchdog
 from repro.runtime.failures import (
-    run_with_restarts, FaultInjector, WorkerFailure, RestartPolicy,
-    RETRYABLE_EXCEPTIONS)
+    run_with_restarts, serve_with_restarts, FaultInjector, WorkerFailure,
+    RestartPolicy, RETRYABLE_EXCEPTIONS)
 from repro.runtime.sla import (
     AdmissionController, QuarantinePolicy, DegradationLadder)
+from repro.runtime.session import ServeSession, drain_reference
 from repro.runtime import chaos
 
 __all__ = [
-    "StepWatchdog", "run_with_restarts", "FaultInjector", "WorkerFailure",
-    "RestartPolicy", "RETRYABLE_EXCEPTIONS", "AdmissionController",
-    "QuarantinePolicy", "DegradationLadder", "chaos",
+    "StepWatchdog", "run_with_restarts", "serve_with_restarts",
+    "FaultInjector", "WorkerFailure", "RestartPolicy",
+    "RETRYABLE_EXCEPTIONS", "AdmissionController", "QuarantinePolicy",
+    "DegradationLadder", "ServeSession", "drain_reference", "chaos",
 ]

@@ -183,3 +183,57 @@ def run_with_restarts(
     manager.wait()
     return state, {"failures": policy.failures, "restarts": policy.restarts,
                    "final_step": step}
+
+
+def serve_with_restarts(
+    make_session: Callable[[], Any],
+    manager: CheckpointManager,
+    checkpoint_every: int = 1,
+    max_failures: int = 3,
+    backoff_s: float = 0.0,
+    retryable: Optional[tuple] = None,
+) -> Tuple[Any, dict]:
+    """Drive a continuous serving session to drained with checkpoint/restart.
+
+    The session-shaped sibling of :func:`run_with_restarts`: where that
+    wraps a bare ``step_fn(step, state)``, this wraps the *session
+    protocol* — any object with ``step() -> bool`` (False when drained),
+    ``snapshot(manager, step)``, ``restore(manager)`` and a ``windows``
+    counter.  On a retryable failure the session is **rebuilt from the
+    factory** (the engine may have died with it) and restored from the
+    latest snapshot, which carries the refilled slot occupancy — occupancy
+    mask, per-slot query ids and per-slot step frames ride the checkpoint
+    carry, so the restarted loop resumes mid-refill, not from the initial
+    admission.  Duck-typed on purpose: this module must not import the
+    session layer (session → sla → failures).
+
+    Returns ``(session, summary)`` with the drained session.
+    """
+    policy = RestartPolicy(
+        max_failures=max_failures, backoff_s=backoff_s,
+        retryable=retryable if retryable is not None
+        else RETRYABLE_EXCEPTIONS)
+    session = make_session()
+    if manager.latest_step() is not None:
+        session.restore(manager)
+    else:
+        session.snapshot(manager, 0, blocking=True)
+    while True:
+        try:
+            alive = session.step()
+            if session.windows % checkpoint_every == 0:
+                session.snapshot(manager, session.windows)
+            if not alive:
+                break
+        except Exception as e:                      # noqa: BLE001 — policy
+            sleep_s = policy.handle(e, context={"windows": session.windows})
+            if sleep_s:
+                time.sleep(sleep_s)
+            if manager.latest_step() is None:
+                raise
+            session = make_session()
+            session.restore(manager)
+    manager.wait()
+    return session, {"failures": policy.failures,
+                     "restarts": policy.restarts,
+                     "windows": session.windows}

@@ -58,6 +58,26 @@ class AdmissionController:
             out.append(self._queue.popleft()[0])
         return out
 
+    def take_entries(self, k: int) -> List[tuple]:
+        """Pop up to ``k`` pending ``(query, deadline_ms)`` entries — how a
+        continuous-batching session feeds freed slots without losing the
+        per-query deadline it admitted with."""
+        out = []
+        while self._queue and len(out) < k:
+            out.append(self._queue.popleft())
+        return out
+
+    def reorder(self, key: Callable[[Any], Any]) -> None:
+        """Stable-reorder the pending queue by ``key(query)`` (ascending).
+
+        The depth-aware admission schedule for continuous batching: order
+        pending queries shallow-first (out-degree proxy, see
+        ``graph_serve.estimate_depth_order``) so a freed slot never waits
+        on a deep query while shallow ones queue behind it.  Admission
+        accounting (capacity, rejects) is unaffected.
+        """
+        self._queue = deque(sorted(self._queue, key=lambda e: key(e[0])))
+
     def __len__(self) -> int:
         return len(self._queue)
 
@@ -102,7 +122,25 @@ class QuarantinePolicy:
     def begin(self, num_queries: int):
         self._killed = np.zeros(num_queries, bool)
 
-    def scan(self, snap: dict) -> Optional[np.ndarray]:
+    def release(self, slots: np.ndarray) -> None:
+        """Clear the kill record for refilled ``slots`` (a [Q] bool mask).
+
+        Continuous batching reuses slot indices for new tenants; without a
+        release, a slot once quarantined would stay marked killed and its
+        next tenant would silently escape the NaN / budget scan.
+        """
+        if self._killed is None:
+            return
+        slots = np.asarray(slots, bool)
+        if len(slots) == len(self._killed):
+            self._killed &= ~slots
+
+    def scan(self, snap: dict,
+             ids: Optional[np.ndarray] = None) -> Optional[np.ndarray]:
+        """Return a [Q] kill mask (or None).  ``ids`` maps slot index to a
+        stable query id for reporting — continuous sessions pass their
+        per-slot query ids so a report names the query, not the slot, and
+        re-use of a slot by a new poisoned tenant is reported anew."""
         fin = np.asarray(snap["fin"])
         steps_q = np.asarray(snap["steps_q"])
         q = len(fin)
@@ -122,10 +160,11 @@ class QuarantinePolicy:
                 kill[i] = True
                 reasons.setdefault(int(i), "superstep_budget")
         for i, reason in sorted(reasons.items()):
-            if (i, reason) not in self._reported:
-                self._reported.add((i, reason))
+            qid = int(ids[i]) if ids is not None else i
+            if (qid, reason) not in self._reported:
+                self._reported.add((qid, reason))
                 self.quarantined.append(
-                    {"query": i, "reason": reason,
+                    {"query": qid, "reason": reason,
                      "step": int(snap["step"]),
                      "steps_q": int(steps_q[i])})
         self._killed |= kill
@@ -146,6 +185,14 @@ class DegradationLadder:
 
     def run(self, primary: Callable[[], Any], fallback: Callable[[], Any],
             label: str = "") -> Any:
+        """Call ``primary`` with bounded retries, else ``fallback``.
+
+        Takes thunks, not engines: a continuous session threads itself
+        through by closing over ``session.step()`` for the primary and a
+        fallback-engine session *restored from the primary's snapshot*
+        (occupancy mask and per-slot query ids ride the snapshot carry) —
+        see ``ServeSession.step_with_fallback``.
+        """
         errors = []
         for attempt in range(1 + self.retries):
             try:
