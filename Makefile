@@ -9,7 +9,7 @@ BENCH_THRESHOLD ?= 0.75
 
 .PHONY: test lint bench bench-quick bench-batched bench-dist bench-dynamic \
 	bench-checkpoint bench-continuous bench-gate bench-check serve \
-	serve-mutate serve-continuous chaos ci
+	serve-mutate serve-continuous chaos corrupt-drill ci
 
 test:            ## tier-1 suite
 	$(PY) -m pytest -x -q
@@ -24,9 +24,9 @@ lint:            ## fast critical-rule lint (skips if ruff absent)
 bench:           ## reference-vs-fused superstep timings -> BENCH_superstep.json
 	$(PY) benchmarks/superstep_bench.py
 
-bench-quick:     ## smallest scale only (the CI bench job; batched + dynamic + checkpoint + continuous)
+bench-quick:     ## smallest scale only (the CI bench job; batched + dynamic + checkpoint + continuous + verify)
 	$(PY) benchmarks/superstep_bench.py --quick --batched --mutations \
-	  --checkpoint --continuous
+	  --checkpoint --continuous --verify
 
 bench-batched:   ## query-throughput column only (Q in {1,8,32}) + gate
 	$(PY) benchmarks/superstep_bench.py --quick --batched
@@ -58,6 +58,10 @@ bench-continuous: ## continuous-batching column (q/s + p99 vs drain) + gate
 chaos:           ## fault-injection drill: crash/recover/replay, parity asserts
 	$(PY) -m repro.launch.graph_serve --smoke --chaos --alg bfs \
 	  --backend fused
+
+corrupt-drill:   ## silent-corruption drill: every injection detected or masked
+	$(PY) -m repro.launch.graph_serve --smoke --corrupt --alg bfs
+	$(PY) -m repro.launch.graph_serve --smoke --corrupt --alg sssp
 
 bench-dist:      ## multi-device column (8 forced host devices, quick scale)
 	$(PY) benchmarks/superstep_bench.py --quick --distributed --devices 8 \

@@ -386,6 +386,81 @@ def bench_checkpoint_cell(pg, scale: int, parts: int, strategy: str,
         chunk_retraces=BSPEngine._run_chunk._cache_size() - entries0)
 
 
+def bench_verify_cell(g, pg, scale: int, parts: int, strategy: str,
+                      seed: int, chunk: int = 2, q: int = 8) -> dict:
+    """One integrity cell: what the silent-corruption defense costs
+    (docs/robustness.md, "Silent faults").
+
+    Runs a Q-query BFS batch through the chunked mode bare, then with the
+    in-loop invariant monitor armed, and finally certifies every harvested
+    fixpoint with the O(V+E) result certifier.  The monitor cost is
+    measured *inside* ``observe`` (pure host NumPy at window boundaries)
+    and the certifier cost as the wall time of ``certify_batch`` — both
+    are the actual added work, not a noisy whole-run diff.  Deterministic
+    halves gated by scripts/bench_check.py: ``certified_ok == q`` (a clean
+    fixpoint always certifies) and ``monitors_fired == 0`` (no false
+    positives); the timing half gates ``verify_overhead_ratio`` — the
+    ISSUE contract is <= 0.10 of the bare chunked run.
+    """
+    import time
+
+    from repro.algorithms.bfs import gather_batch, multi_source_state
+    from repro.runtime import ResultCertifier, monitor_for
+
+    eng = BSPEngine(pg)
+    rng = np.random.default_rng(seed)
+    sources = rng.integers(0, pg.num_vertices, size=(q, 1))
+    state0 = {"level": jnp.asarray(multi_source_state(pg, sources))}
+
+    def wall(fn, iters=3):
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - t0)
+        return sorted(times)[len(times) // 2]
+
+    eng.run_batched_chunked(BFS_PROGRAM, dict(state0),
+                            checkpoint_every=chunk)       # warm the windows
+    bare_s = wall(lambda: eng.run_batched_chunked(
+        BFS_PROGRAM, dict(state0), checkpoint_every=chunk))
+
+    mon = monitor_for("bfs", chunk=chunk)
+    mon_s = [0.0]
+    observe = mon.observe
+
+    def timed_observe(snap):
+        t0 = time.perf_counter()
+        rec = observe(snap)
+        mon_s[0] += time.perf_counter() - t0
+        return rec
+
+    mon.observe = timed_observe
+    st, _, info = eng.run_batched_chunked(
+        BFS_PROGRAM, dict(state0), checkpoint_every=chunk, monitor=mon)
+
+    certifier = ResultCertifier("bfs", g)
+    levels = gather_batch(pg, st["level"])
+    t0 = time.perf_counter()
+    verdicts = certifier.certify_batch(levels,
+                                       sources=sources.reshape(-1))
+    certify_s = time.perf_counter() - t0
+
+    return dict(
+        scale=scale, parts=parts, strategy=strategy, algorithm="bfs",
+        combine="min", mode="verify", block_e=None, q=q,
+        checkpoint_every=chunk, v_max=pg.v_max,
+        supersteps=info["final_step"], chunks=info["chunks"],
+        chunked_ms=bare_s * 1e3,
+        monitor_ms=mon_s[0] * 1e3,
+        certify_ms=certify_s * 1e3,
+        certify_ms_per_query=certify_s * 1e3 / q,
+        verify_overhead_ratio=(mon_s[0] + certify_s) / max(bare_s, 1e-12),
+        monitors_fired=info["monitors_fired"],
+        certified_ok=sum(1 for v in verdicts if v.ok),
+        certify_failed=[v.reason() for v in verdicts if not v.ok])
+
+
 def bench_continuous_cell(pg, scale: int, parts: int, strategy: str,
                           seed: int, chunk: int = 2, q: int = 8,
                           stream_factor: int = 8) -> dict:
@@ -549,6 +624,11 @@ def main(argv=None) -> int:
                          "zero-quarantine guards")
     ap.add_argument("--checkpoint-every", type=int, default=2,
                     help="supersteps per chunk for --checkpoint")
+    ap.add_argument("--verify", action="store_true",
+                    help="add the integrity column: in-loop invariant "
+                         "monitor + result-certifier overhead on the "
+                         "chunked run mode, with the clean-certification, "
+                         "zero-monitor-fire, and <=10%% overhead guards")
     ap.add_argument("--continuous", action="store_true",
                     help="add the continuous-batching column: resident-"
                          "session q/s and p99-under-load vs fixed-batch "
@@ -727,6 +807,37 @@ def main(argv=None) -> int:
                     failures.append(
                         f"checkpoint {strategy}: chunked windows retraced "
                         f"{crec['chunk_retraces']}x after warmup")
+            if args.verify:
+                vrec = bench_verify_cell(g, pg, scale, args.parts, strategy,
+                                         args.seed,
+                                         chunk=args.checkpoint_every)
+                results.append(vrec)
+                print(f"scale={scale} {strategy:>4} verify: "
+                      f"certify {vrec['certify_ms']:.2f} ms "
+                      f"({vrec['certify_ms_per_query']:.2f} ms/query), "
+                      f"monitor {vrec['monitor_ms']:.2f} ms, "
+                      f"overhead {vrec['verify_overhead_ratio']:.3f}x "
+                      f"bare chunked ({vrec['chunked_ms']:.2f} ms); "
+                      f"certified {vrec['certified_ok']}/{vrec['q']} "
+                      f"monitors_fired={vrec['monitors_fired']}", flush=True)
+                # Integrity contract: clean fixpoints certify, monitors
+                # never fire on a clean run, and the whole defense stays
+                # within 10% of the bare chunked window.
+                if vrec["certified_ok"] != vrec["q"]:
+                    failures.append(
+                        f"verify {strategy}: "
+                        f"{vrec['q'] - vrec['certified_ok']} clean "
+                        f"fixpoints failed certification "
+                        f"({vrec['certify_failed']})")
+                if vrec["monitors_fired"] != 0:
+                    failures.append(
+                        f"verify {strategy}: {vrec['monitors_fired']} "
+                        f"invariant monitors fired on a clean run")
+                if vrec["verify_overhead_ratio"] > 0.10:
+                    failures.append(
+                        f"verify {strategy}: monitor+certifier overhead "
+                        f"{vrec['verify_overhead_ratio']:.3f}x exceeds the "
+                        f"0.10x bare-chunked contract")
             if args.continuous:
                 srec = bench_continuous_cell(pg, scale, args.parts, strategy,
                                              args.seed,

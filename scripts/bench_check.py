@@ -63,22 +63,25 @@ def main(argv=None) -> int:
     ap.add_argument("--field", default="fused_ms",
                     help="which per-cell timing to gate on")
     ap.add_argument("--extra-timing-fields", nargs="*",
-                    default=["batched_ms_per_query"],
+                    default=["batched_ms_per_query", "certify_ms",
+                             "verify_overhead_ratio"],
                     help="additional timing metrics gated at --threshold "
                          "when present on both sides (batched cells carry "
-                         "these instead of --field)")
+                         "these instead of --field; verify cells carry the "
+                         "certifier cost and its overhead ratio)")
     ap.add_argument("--byte-fields", nargs="*",
                     default=["exchanged_bytes", "fused_temp_bytes",
                              "retraces", "incremental_steps", "cold_steps",
                              "quarantined", "chunk_retraces", "refills",
-                             "windows"],
+                             "windows", "monitors_fired"],
                     help="deterministic metrics gated at --byte-threshold "
                          "regardless of timing noise (retraces must stay "
                          "0: any growth fails; the mutation column's "
                          "superstep counts, the checkpoint column's "
                          "clean-path quarantine/retrace counts, and the "
                          "continuous column's refill/window counts are "
-                         "superstep-indexed and deterministic too)")
+                         "superstep-indexed and deterministic too; the "
+                         "verify column's monitor-fire count must stay 0)")
     ap.add_argument("--byte-threshold", type=float, default=0.20,
                     help="max allowed fractional growth in --byte-fields")
     args = ap.parse_args(argv)

@@ -64,9 +64,12 @@ def _bfs_slot_state(pg, sources: Sequence[int],
 
 def _bfs_harvest(pg, state, step0: np.ndarray) -> np.ndarray:
     levels = gather_batch(pg, state["level"])
-    # inf - step0 == inf: unreached vertices survive the frame shift.
-    return (levels - np.asarray(step0, np.float32)[:, None]).astype(
-        np.float32)
+    # inf - step0 == inf: unreached vertices survive the frame shift.  NaN
+    # rows (quarantined slots frozen mid-poison) pass through unchanged —
+    # silence the invalid-op warning, the values are the point.
+    with np.errstate(invalid="ignore"):
+        return (levels - np.asarray(step0, np.float32)[:, None]).astype(
+            np.float32)
 
 
 def _sssp_slot_state(pg, sources: Sequence[int],

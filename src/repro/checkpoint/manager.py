@@ -20,11 +20,20 @@ from __future__ import annotations
 import json
 import os
 import threading
+import zlib
 from pathlib import Path
 from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruption(RuntimeError):
+    """A restored leaf's bytes disagree with its manifest checksum.
+
+    Deliberately NOT retryable (re-reading the same torn file cannot
+    succeed): the caller must fall back to an older snapshot or recompute.
+    """
 
 
 def _flatten(tree, prefix=""):
@@ -69,6 +78,18 @@ class CheckpointManager:
         if "" in flat:                       # bare-leaf tree
             flat = {"_": flat.pop("")}
         host = {k: np.asarray(v) for k, v in flat.items()}
+        # Per-leaf CRCs into the manifest: a torn/bit-flipped tensor on disk
+        # is caught at restore time instead of silently warm-starting a
+        # corrupted state.  Computed on the main thread, before the chaos
+        # seam below, so an injected tear always mismatches its checksum.
+        checksums = {k: int(zlib.crc32(np.ascontiguousarray(v).tobytes()))
+                     for k, v in host.items()}
+        from repro.runtime import chaos  # local: manager imports stay light
+        if chaos.visit("checkpoint.torn", step=int(step)) and host:
+            torn_key = sorted(host)[0]
+            torn = np.ascontiguousarray(host[torn_key]).copy()
+            torn.view(np.uint8)[0] ^= 0x7F
+            host[torn_key] = torn
 
         def write():
             tmp = self.dir / f"step_{step:08d}.npz.tmp"
@@ -80,7 +101,7 @@ class CheckpointManager:
             manifest = self.dir / f"step_{step:08d}.json"
             manifest.write_text(json.dumps(
                 {"step": step, "leaves": sorted(host),
-                 "extra": extra or {}}))
+                 "checksums": checksums, "extra": extra or {}}))
             self._gc()
 
         if blocking:
@@ -119,15 +140,35 @@ class CheckpointManager:
             return None
         return int(valid[-1].stem.split("_")[1])
 
-    def restore_tree(self, like: Any, step: Optional[int] = None
-                     ) -> Tuple[int, Any]:
-        """Restore an arbitrary pytree into the structure of ``like``."""
+    def restore_tree(self, like: Any, step: Optional[int] = None,
+                     verify: bool = True) -> Tuple[int, Any]:
+        """Restore an arbitrary pytree into the structure of ``like``.
+
+        ``verify=True`` (default) re-checksums every loaded leaf against the
+        manifest CRCs and raises :class:`CheckpointCorruption` on mismatch —
+        a torn write never silently warm-starts a corrupted state.  Pre-CRC
+        manifests (no ``checksums`` entry) load unverified for back-compat.
+        """
         self.wait()
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {self.dir}")
         data = np.load(self.dir / f"step_{step:08d}.npz")
         flat = {k.replace("|", "/"): data[k] for k in data.files}
+        if verify:
+            manifest = self.dir / f"step_{step:08d}.json"
+            want = {}
+            if manifest.exists():
+                want = json.loads(manifest.read_text()).get("checksums", {})
+            bad = [k for k, crc in want.items()
+                   if k in flat and
+                   int(zlib.crc32(np.ascontiguousarray(flat[k]).tobytes()))
+                   != int(crc)]
+            if bad:
+                raise CheckpointCorruption(
+                    f"checkpoint step {step} in {self.dir}: leaves {bad[:4]} "
+                    f"fail their manifest CRC — torn or bit-flipped on disk; "
+                    f"fall back to an older snapshot or recompute")
         leaves, treedef = jax.tree.flatten(like)
         names = [n or "_" for n in _flatten(like)]
         missing = [n for n in names if n not in flat]

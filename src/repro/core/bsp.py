@@ -279,7 +279,10 @@ def _superstep_hybrid_dist(program: VertexProgram, shd, arrs: dict,
                            axis: str, interpret: Optional[bool],
                            pull_threshold: float,
                            all_finished: Callable[[Array], Array],
-                           state: State, step: Array) -> Tuple[State, Array]:
+                           state: State, step: Array, *,
+                           guard=None,
+                           n_shards: Optional[int] = None
+                           ) -> Tuple[State, Array]:
     """One BSP superstep of the *distributed* degree-split backend.
 
     Runs inside ``shard_map``: ``state`` leaves are the local
@@ -367,8 +370,25 @@ def _superstep_hybrid_dist(program: VertexProgram, shd, arrs: dict,
         rvals, rids = [], []
         if shd.has_remote:
             send = obox_ext[:, arrs["send_idx"][0]]     # [Q, S, w]
-            recv = jax.lax.all_to_all(send, axis, split_axis=1,
-                                      concat_axis=1, tiled=True)
+            if guard is not None and n_shards is not None and n_shards > 1:
+                # Checksummed compact exchange: one reduction tag per
+                # destination shard, shipped over its own tiled all_to_all;
+                # the receiver re-tags its S/n_shards block per source.
+                blk = send.shape[1] // n_shards
+                tags = _payload_tag(
+                    send.reshape(q, n_shards, blk, -1), (0, 2, 3))
+                send = jnp.where(guard.poison > 0, _flip_wire(send), send)
+                want = jax.lax.all_to_all(
+                    tags.reshape(n_shards, 1), axis, split_axis=0,
+                    concat_axis=0, tiled=True).reshape(n_shards)
+                recv = jax.lax.all_to_all(send, axis, split_axis=1,
+                                          concat_axis=1, tiled=True)
+                got = _payload_tag(
+                    recv.reshape(q, n_shards, blk, -1), (0, 2, 3))
+                guard.add(jnp.sum((got != want).astype(jnp.int32)))
+            else:
+                recv = jax.lax.all_to_all(send, axis, split_axis=1,
+                                          concat_axis=1, tiled=True)
             rvals.append(recv.reshape(q, -1))
             rids.append(arrs["recv_ids"][0].reshape(-1))
         if shd.has_local_slots:
@@ -606,6 +626,128 @@ def _run_chunked_loop(step_fn: Callable, chunk: int, max_steps: int,
     return jax.lax.while_loop(cond, body, (state, step0, fin0, steps_q0))
 
 
+# ---------------------------------------------------------------------------
+# checksummed exchange (silent-corruption defense, docs/robustness.md)
+# ---------------------------------------------------------------------------
+
+
+def _payload_tag(x: Array, axes) -> Array:
+    """Order-independent int32 reduction tag over ``axes`` of a payload.
+
+    Bitcast-to-int32 then wrapping integer sum: deterministic under any
+    reduction order (unlike float sums), and any single-element change moves
+    the sum by a nonzero delta mod 2^32 — a one-bit wire flip always
+    mismatches."""
+    if x.dtype.itemsize == 4:
+        words = jax.lax.bitcast_convert_type(x, jnp.int32)
+    else:
+        words = x.astype(jnp.int32)
+    return jnp.sum(words, axis=axes, dtype=jnp.int32)
+
+
+def _flip_wire(x: Array) -> Array:
+    """Flip one mantissa bit of a payload's first element (the
+    ``exchange.payload`` chaos drill's trace-level corruption)."""
+    if x.dtype.itemsize != 4:
+        return x
+    flat = x.reshape(-1)
+    words = jax.lax.bitcast_convert_type(flat, jnp.int32)
+    words = words.at[0].set(words[0] ^ jnp.int32(1 << 20))
+    return jax.lax.bitcast_convert_type(words, x.dtype).reshape(x.shape)
+
+
+def _flip_state_bit(state: BatchedState, bit: int = 20) -> BatchedState:
+    """Host-side single-bit corruption of every float32 state leaf (the
+    ``state.corrupt`` chaos site).  Runs between compiled windows, so it
+    models a DRAM/transfer bit-flip without perturbing the jit cache."""
+    def flip(leaf):
+        arr = np.array(leaf)
+        if arr.dtype != np.float32 or arr.size == 0:
+            return leaf
+        arr.reshape(-1).view(np.int32)[0] ^= np.int32(1 << bit)
+        return jnp.asarray(arr)
+    return jax.tree.map(flip, state)
+
+
+class _ExchangeGuard:
+    """Per-engine box threading exchange-checksum state through a trace.
+
+    Stored as an engine attribute so the jitted chunk methods (whose
+    ``self`` is a static argument) see one stable closure identity;
+    ``arm``/``reset``/``add``/``read`` are trace-time operations — the
+    armed ``poison`` operand and the accumulated mismatch count are traced
+    values referenced positionally by the compiled window, so cache hits
+    behave identically to the first trace."""
+
+    def __init__(self):
+        self.poison = jnp.float32(0.0)
+        self._bad = jnp.int32(0)
+
+    def arm(self, poison: Array) -> None:
+        self.poison = poison
+
+    def reset(self) -> None:
+        self._bad = jnp.int32(0)
+
+    def add(self, n: Array) -> None:
+        self._bad = self._bad + jnp.asarray(n, jnp.int32)
+
+    def read(self) -> Array:
+        return self._bad
+
+
+def _checked_exchange(guard: _ExchangeGuard) -> Callable[[Array], Array]:
+    """Single-device exchange with per-(partition, peer) reduction tags.
+
+    Send-side tags are computed on the outbox slot blocks *before* the wire
+    (where the ``exchange.payload`` drill corrupts under the armed poison
+    operand); the inbox side re-derives them and any mismatch lands in the
+    guard — the host converts a nonzero window count into an
+    ``ExchangeCorruption`` and replays the window."""
+    def exchange(outbox: Array) -> Array:
+        send_tags = _payload_tag(outbox, (0, 3))            # [pl, P]
+        wire = jnp.where(guard.poison > 0, _flip_wire(outbox), outbox)
+        inbox = wire.transpose(0, 2, 1, 3)                  # [Q, P, pl, o]
+        recv_tags = _payload_tag(inbox, (0, 3))             # [P, pl]
+        guard.add(jnp.sum((recv_tags != send_tags.T).astype(jnp.int32)))
+        return inbox
+    return exchange
+
+
+def _run_chunked_loop_guarded(step_fn: Callable, guard: _ExchangeGuard,
+                              chunk: int, max_steps: int,
+                              state: BatchedState, step0: Array, fin0: Array,
+                              steps_q0: Array):
+    """:func:`_run_chunked_loop` with the exchange guard in the carry.
+
+    Identical superstep semantics (the extra carry element never feeds back
+    into the state); per superstep the guard is reset, the step function's
+    checked exchanges accumulate mismatches into it, and the count joins
+    the loop carry — read *inside* the body trace, so no tracer leaks.
+    Returns ``(state, step, fin, steps_q, bad)``."""
+    def freeze(fin, new, old):
+        return jnp.where(fin.reshape(fin.shape + (1,) * (new.ndim - 1)),
+                         old, new)
+
+    def body(carry):
+        st, step, fin, steps_q, bad = carry
+        guard.reset()
+        new_st, vote = step_fn(st, step)
+        new_st = jax.tree.map(functools.partial(freeze, fin), new_st, st)
+        steps_q = steps_q + jnp.logical_not(fin).astype(jnp.int32)
+        return (new_st, step + 1, jnp.logical_or(fin, vote), steps_q,
+                bad + guard.read())
+
+    def cond(carry):
+        _, step, fin, _, _ = carry
+        return jnp.logical_and(
+            ~jnp.all(fin),
+            jnp.logical_and(step < max_steps, step < step0 + chunk))
+
+    return jax.lax.while_loop(
+        cond, body, (state, step0, fin0, steps_q0, jnp.int32(0)))
+
+
 @jax.jit
 def _slot_swap(state: BatchedState, new_rows: BatchedState, admit: Array,
                fin: Array, steps_q: Array):
@@ -773,6 +915,9 @@ class BSPEngine:
         self._pull_threshold = pull_threshold
         self._direction_switch = direction_switch
         self._dyn_ell_spare = dynamic_ell_spare
+        # One guard per engine: jitted chunk windows arm it with the traced
+        # poison operand and accumulate exchange-checksum mismatches.
+        self._guard = _ExchangeGuard()
 
         # Dynamic graphs hand the engine a mutable layout: the engine reads
         # the mutation payload as traced jit arguments each run (never as
@@ -1021,7 +1166,8 @@ class BSPEngine:
                 incremental=None,
                 start_step: int = 0, fin=None, steps_q=None,
                 max_chunks: Optional[int] = None,
-                chaos_ctx: Optional[dict] = None):
+                chaos_ctx: Optional[dict] = None,
+                monitor=None):
         """THE engine entry point: one documented facade over every run
         mode.  ``state`` is a batched ``[Q, Pl, v_max]`` pytree
         (:func:`batch_state` lifts a single query).
@@ -1068,7 +1214,8 @@ class BSPEngine:
                 name for name, val in (("on_chunk", on_chunk),
                                        ("fin", fin), ("steps_q", steps_q),
                                        ("max_chunks", max_chunks),
-                                       ("chaos_ctx", chaos_ctx))
+                                       ("chaos_ctx", chaos_ctx),
+                                       ("monitor", monitor))
                 if val is not None] + (
                     ["start_step"] if start_step != 0 else [])
             if chunked_only:
@@ -1083,7 +1230,7 @@ class BSPEngine:
             return self.run_batched_chunked(
                 program, state, checkpoint_every=chunk, on_chunk=on_chunk,
                 start_step=start_step, fin=fin, steps_q=steps_q,
-                max_chunks=max_chunks, chaos_ctx=chaos_ctx)
+                max_chunks=max_chunks, chaos_ctx=chaos_ctx, monitor=monitor)
         if modes["incremental"]:
             return self.run_incremental(program, state, incremental)
         return self.run_batched(program, state)
@@ -1142,38 +1289,68 @@ class BSPEngine:
     @functools.partial(jax.jit, static_argnums=(0, 1, 2))
     def _run_chunk(self, program: VertexProgram, chunk: int,
                    state: BatchedState, step: Array, fin: Array,
-                   steps_q: Array):
+                   steps_q: Array, poison: Array):
         edges = self._edges_or_none(program)
-        step_fn = self._step_fn(program, edges, self._exchange,
+        self._guard.arm(poison)
+        # The checked exchange tags every (partition, peer) slot block; the
+        # hybrid step ignores the exchange callable (no outbox on a single
+        # device), so its windows report bad == 0 by construction.
+        step_fn = self._step_fn(program, edges,
+                                _checked_exchange(self._guard),
                                 self._all_finished)
-        return _run_chunked_loop(step_fn, chunk, program.max_steps, state,
-                                 step, fin, steps_q)
+        return _run_chunked_loop_guarded(step_fn, self._guard, chunk,
+                                         program.max_steps, state, step,
+                                         fin, steps_q)
 
     def _chunk_call(self, program: VertexProgram, chunk: int,
                     state: BatchedState, step: Array, fin: Array,
-                    steps_q: Array):
-        """Dispatch one chunk window; overridden by the distributed engine."""
+                    steps_q: Array, poison=None):
+        """Dispatch one chunk window; overridden by the distributed engine.
+        Returns ``(state, step, fin, steps_q, bad)`` — ``bad`` counts
+        exchange-checksum mismatches inside the window (0 on the unguarded
+        dynamic paths, whose integrity net is the tombstone/certifier
+        layer)."""
+        if poison is None:
+            poison = jnp.float32(0.0)
         if self.dg is not None:
             self._sync_dynamic()
             if self._uses_hybrid(program):
                 cfg, arrs = self._hybrid_dyn_for(program)
-                return _run_dyn_hybrid_chunk_jit(
+                out = _run_dyn_hybrid_chunk_jit(
                     program, cfg, program.max_steps, chunk, arrs, state,
                     step, fin, steps_q)
+                return out + (jnp.int32(0),)
             edges = self.edges_for(program)
             dyn = self.dg.payload(program.use_reverse)
-            return _run_dyn_chunk_jit(
+            if chaos.visit("tombstone.flip", step=int(step)):
+                # Value-level mask flip (a deleted edge resurrects): rides
+                # the traced dyn operand, so the window never retraces.
+                # Prefer a tombstoned non-self-loop slot — resurrecting a
+                # self-loop is inert under every vertex program and would
+                # make the corruption drill vacuous.
+                tomb_h = np.asarray(dyn["tomb"])
+                src_h = np.asarray(edges["src"])
+                dst_h = np.asarray(edges["dst_ext"])
+                cand = np.flatnonzero(tomb_h[0] & (src_h[0] != dst_h[0]))
+                j = int(cand[0]) if cand.size else 0
+                dyn = dict(dyn)
+                dyn["tomb"] = dyn["tomb"].at[0, j].set(
+                    jnp.logical_not(dyn["tomb"][0, j]))
+            out = _run_dyn_chunk_jit(
                 self.dims_for(edges), program, self.fused_cfg_for(program),
                 program.max_steps, chunk, edges, dyn, state, step, fin,
                 steps_q)
-        return self._run_chunk(program, chunk, state, step, fin, steps_q)
+            return out + (jnp.int32(0),)
+        return self._run_chunk(program, chunk, state, step, fin, steps_q,
+                               poison)
 
     def run_batched_chunked(self, program: VertexProgram,
                             state: BatchedState, *, checkpoint_every: int,
                             on_chunk: Optional[Callable] = None,
                             start_step: int = 0, fin=None, steps_q=None,
                             max_chunks: Optional[int] = None,
-                            chaos_ctx: Optional[dict] = None):
+                            chaos_ctx: Optional[dict] = None,
+                            monitor=None):
         """``run_batched`` in bounded ``checkpoint_every``-superstep chunks.
 
         Chains :func:`_run_chunked_loop` windows, so the full superstep
@@ -1201,7 +1378,20 @@ class BSPEngine:
         stream.  Resume a snapshot by passing its
         ``start_step``/``fin``/``steps_q``.  Returns ``(state, steps_q,
         info)`` with ``info = {"chunks", "final_step", "finished",
-        "refilled"}``.
+        "refilled", "monitors_fired"}``.
+
+        Integrity (docs/robustness.md "Silent faults"): every static-path
+        window runs the checksummed exchange — a tag mismatch raises
+        :class:`repro.runtime.failures.ExchangeCorruption` *before* the
+        corrupted carry replaces the live one, so the caller replays the
+        window from its last checkpoint.  ``monitor`` (an object exposing
+        ``observe(snap)`` / ``rebase(admit)``, e.g.
+        :class:`repro.runtime.verify.InvariantMonitor`) is called once per
+        window with the boundary snapshot; its record rides to ``on_chunk``
+        under ``snap["monitor"]`` and fired windows are counted in
+        ``info["monitors_fired"]``.  The ``state.corrupt`` /
+        ``exchange.payload`` chaos sites inject here (host seam / traced
+        poison operand — neither perturbs the jit cache).
 
         Deprecated alias: prefer ``execute(program, state, chunk=k, ...)``.
         """
@@ -1219,17 +1409,44 @@ class BSPEngine:
         step = jnp.int32(start_step)
         chunks = 0
         refilled = 0
+        monitors_fired = 0
         stop = False
         while True:
             chaos.visit("superstep.chunk", step=int(step), chunk=chunks,
                         **(chaos_ctx or {}))
-            state, step, fin, steps_q = self._chunk_call(
-                program, int(checkpoint_every), state, step, fin, steps_q)
+            if chaos.visit("state.corrupt", step=int(step),
+                           **(chaos_ctx or {})):
+                state = _flip_state_bit(state)
+            poison = jnp.float32(
+                1.0 if chaos.visit("exchange.payload", step=int(step),
+                                   **(chaos_ctx or {})) else 0.0)
+            new_state, new_step, new_fin, new_steps_q, bad = self._chunk_call(
+                program, int(checkpoint_every), state, step, fin, steps_q,
+                poison)
+            n_bad = int(bad)
+            if n_bad:
+                # The corrupted window never replaces the live carry; the
+                # caller's RestartPolicy replays it from the last checkpoint
+                # (ExchangeCorruption subclasses WorkerFailure → retryable).
+                from repro.runtime.failures import ExchangeCorruption
+                raise ExchangeCorruption(
+                    f"exchange checksum mismatch in window at superstep "
+                    f"{int(step)} ({n_bad} tag(s)): a payload block was "
+                    f"corrupted in flight; replay the window from the last "
+                    f"checkpoint")
+            state, step, fin, steps_q = (new_state, new_step, new_fin,
+                                         new_steps_q)
             chunks += 1
+            snap = dict(state=state, step=int(step), fin=np.asarray(fin),
+                        steps_q=np.asarray(steps_q))
+            if monitor is not None:
+                rec = monitor.observe(dict(state=state, step=snap["step"],
+                                           finished=snap["fin"],
+                                           steps_q=snap["steps_q"]))
+                monitors_fired += int(rec["violations"] > 0)
+                snap["monitor"] = rec
             if on_chunk is not None:
-                out = on_chunk(dict(state=state, step=int(step),
-                                    fin=np.asarray(fin),
-                                    steps_q=np.asarray(steps_q)))
+                out = on_chunk(snap)
                 if isinstance(out, dict):
                     kill = out.get("kill")
                     if kill is not None:
@@ -1243,6 +1460,8 @@ class BSPEngine:
                         state, fin, steps_q = _slot_swap(
                             state, new_rows, admit, fin, steps_q)
                         refilled += int(np.asarray(admit).sum())
+                        if monitor is not None:
+                            monitor.rebase(np.asarray(admit))
                     stop = bool(out.get("stop"))
                 elif out is not None:        # legacy bare kill mask
                     fin = jnp.logical_or(
@@ -1252,7 +1471,8 @@ class BSPEngine:
             if max_chunks is not None and chunks >= max_chunks:
                 break
         info = dict(chunks=chunks, final_step=int(step),
-                    finished=np.asarray(fin), refilled=refilled)
+                    finished=np.asarray(fin), refilled=refilled,
+                    monitors_fired=monitors_fired)
         return state, steps_q, info
 
     # ---------------------- dynamic-graph plumbing -------------------------
@@ -1638,10 +1858,13 @@ class DistributedBSPEngine(BSPEngine):
         self._hybrid_dist_cache[key] = (shd, arrs)
         return shd, arrs
 
-    def _hybrid_step_fn(self, program: VertexProgram, shd, arrs) -> Callable:
+    def _hybrid_step_fn(self, program: VertexProgram, shd, arrs,
+                        guard=None) -> Callable:
         return functools.partial(_superstep_hybrid_dist, program, shd, arrs,
                                  self.axis, self.interpret,
-                                 self._pull_threshold, self._dist_finished)
+                                 self._pull_threshold, self._dist_finished,
+                                 guard=guard,
+                                 n_shards=self.mesh.shape[self.axis])
 
     # ----------------------------- exchange --------------------------------
 
@@ -1670,6 +1893,38 @@ class DistributedBSPEngine(BSPEngine):
         recv = recv.transpose(1, 3, 0, 2, 4)  # [Q, pl_dst, n_dev, pl_src, o]
         return recv.reshape(q, pl, n_dev * pl, o)
 
+    def _checked_dist_exchange(self, guard) -> Callable[[Array], Array]:
+        """:meth:`_dist_exchange` with per-(shard, peer-partition) reduction
+        tags: send-side tags ship over their own ``all_to_all`` and the
+        inbox side re-derives them — a wire flip lands in the guard and the
+        host replays the window (see ``_checked_exchange``)."""
+        n_dev = self.mesh.shape[self.axis]
+        axis = self.axis
+
+        def exchange(outbox: Array) -> Array:
+            if outbox.ndim == 3:
+                return exchange(outbox[None])[0]
+            chaos.visit("exchange", axis=axis)
+            q, pl, peers, o = outbox.shape
+            if peers != n_dev * pl:
+                raise ValueError(
+                    f"outbox shape {tuple(outbox.shape)} is inconsistent "
+                    f"with the mesh: peer axis ({peers}) must equal mesh "
+                    f"axis size ({n_dev}) × local partitions ({pl})")
+            ob = outbox.reshape(q, pl, n_dev, pl, o)
+            send_tags = _payload_tag(ob, (0, 4))  # [pl_src, n_dev, pl_dst]
+            ob = jnp.where(guard.poison > 0, _flip_wire(ob), ob)
+            recv = jax.lax.all_to_all(ob, axis, split_axis=2,
+                                      concat_axis=0, tiled=False)
+            want = jax.lax.all_to_all(send_tags, axis, split_axis=1,
+                                      concat_axis=0, tiled=False)
+            got = _payload_tag(recv, (1, 4))   # [n_dev_src, pl_src, pl_dst]
+            guard.add(jnp.sum((got != want).astype(jnp.int32)))
+            recv = recv.transpose(1, 3, 0, 2, 4)
+            return recv.reshape(q, pl, n_dev * pl, o)
+
+        return exchange
+
     def _dist_finished(self, fin: Array) -> Array:
         # fin: [Q] per-shard votes -> [Q] global AND over the mesh axis.
         not_done = jnp.logical_not(fin).astype(jnp.int32)
@@ -1691,15 +1946,20 @@ class DistributedBSPEngine(BSPEngine):
 
     # ------------------------------- run -----------------------------------
 
-    def _dist_step_parts(self, program: VertexProgram):
+    def _dist_step_parts(self, program: VertexProgram, guard=None):
         """Shared run()/superstep() dispatch: the sharded extra operands
         (hybrid shard arrays — already device_put — or edge arrays, plus the
         dynamic mutation payload when the graph mutates) and a factory
-        building the per-shard step function from them."""
+        building the per-shard step function from them.  With ``guard``,
+        every exchange runs checksummed (chunked windows pass the engine
+        guard; the unguarded ``run``/``superstep`` paths pass None)."""
         if self._uses_hybrid(program):
             shd, arrs = self._hybrid_dist_for(program)
             return arrs, (lambda extra:
-                          self._hybrid_step_fn(program, shd, extra)), True
+                          self._hybrid_step_fn(program, shd, extra,
+                                               guard=guard)), True
+        exchange = (self._dist_exchange if guard is None
+                    else self._checked_dist_exchange(guard))
         edges = self.edges_for(program)
         dims = self.dims_for(edges)
 
@@ -1711,7 +1971,7 @@ class DistributedBSPEngine(BSPEngine):
 
             def make_dyn(ex):
                 return functools.partial(_superstep, dims, program,
-                                         ex["edges"], self._dist_exchange,
+                                         ex["edges"], exchange,
                                          self._dist_finished,
                                          self.fused_cfg_for(program),
                                          dyn=ex["dyn"])
@@ -1720,7 +1980,7 @@ class DistributedBSPEngine(BSPEngine):
 
         def make(extra):
             return functools.partial(_superstep, dims, program, extra,
-                                     self._dist_exchange,
+                                     exchange,
                                      self._dist_finished,
                                      self.fused_cfg_for(program))
 
@@ -1759,14 +2019,19 @@ class DistributedBSPEngine(BSPEngine):
 
     def _chunk_call(self, program: VertexProgram, chunk: int,
                     state: BatchedState, step: Array, fin: Array,
-                    steps_q: Array):
+                    steps_q: Array, poison=None):
         """Sharded chunk window for ``run_batched_chunked``.
 
-        The scalar step / replicated fin / steps_q carry rides through
-        ``P()`` specs; the jitted shard_map closure is cached per
+        The scalar step / replicated fin / steps_q / poison carry rides
+        through ``P()`` specs; the jitted shard_map closure is cached per
         (program, chunk, shapes) — cleared on rebind — so chunks and
-        restart-rebuilt engines reuse one compile.
+        restart-rebuilt engines reuse one compile.  Every exchange inside
+        the window is checksummed (``_checked_dist_exchange`` / the tagged
+        hybrid compact exchange); the psum'd mismatch count returns as the
+        5th element.
         """
+        if poison is None:
+            poison = jnp.float32(0.0)
         if self.dg is not None:
             self._sync_dynamic()
         self._validate_state(state)
@@ -1776,7 +2041,9 @@ class DistributedBSPEngine(BSPEngine):
         spec = P(None, self.axis)
         extra_spec = P(self.axis)
         sharding = jax.sharding.NamedSharding(self.mesh, spec)
-        extra, make_step, hybrid = self._dist_step_parts(program)
+        guard = self._guard
+        extra, make_step, hybrid = self._dist_step_parts(program,
+                                                         guard=guard)
 
         def sig(tree):
             return tuple(
@@ -1786,18 +2053,24 @@ class DistributedBSPEngine(BSPEngine):
         key = (program, chunk, sig(state), sig(extra))
         jitted = self._chunk_jits.get(key)
         if jitted is None:
-            def local_fn(state, extra, step, fin, steps_q):
-                return _run_chunked_loop(make_step(extra), chunk,
-                                         program.max_steps, state, step,
-                                         fin, steps_q)
+            mesh_axis = self.axis
+
+            def local_fn(state, extra, step, fin, steps_q, poison):
+                guard.arm(poison)
+                st, stp, fn, sq, bad = _run_chunked_loop_guarded(
+                    make_step(extra), guard, chunk, program.max_steps,
+                    state, step, fin, steps_q)
+                # Each shard only sees mismatches on payload it received;
+                # psum so the replicated out-spec holds the global count.
+                return st, stp, fn, sq, jax.lax.psum(bad, mesh_axis)
 
             sharded = shard_map(
                 local_fn, mesh=self.mesh,
                 in_specs=(jax.tree.map(lambda _: spec, state),
                           jax.tree.map(lambda _: extra_spec, extra),
-                          P(), P(), P()),
+                          P(), P(), P(), P()),
                 out_specs=(jax.tree.map(lambda _: spec, state),
-                           P(), P(), P()),
+                           P(), P(), P(), P()),
                 check_vma=False)
             jitted = jax.jit(sharded)
             self._chunk_jits[key] = jitted
@@ -1806,7 +2079,8 @@ class DistributedBSPEngine(BSPEngine):
             ex_shard = jax.sharding.NamedSharding(self.mesh, extra_spec)
             extra = jax.tree.map(lambda x: jax.device_put(x, ex_shard),
                                  extra)
-        return jitted(state, extra, jnp.int32(step), fin, steps_q)
+        return jitted(state, extra, jnp.int32(step), fin, steps_q,
+                      jnp.float32(poison))
 
     def run(self, program: VertexProgram, state: State) -> Tuple[State, Array]:
         state, steps = self.run_batched(program, batch_state(state))

@@ -368,10 +368,16 @@ def main() -> int:
                     print("  ok", flush=True)
         return 1 if failures else 0
 
+    from repro.runtime.failures import RETRYABLE_EXCEPTIONS
+
     rec = {}
     try:
         rec = run_cell(args.arch, args.shape, args.mesh)
-    except Exception:
+    except (ValueError, TypeError, NotImplementedError,
+            RuntimeError) + RETRYABLE_EXCEPTIONS:
+        # Expected dry-run outcomes (shape/config rejections, XLA compile
+        # and runtime errors, worker faults) become a failed cell record;
+        # anything else — a programming bug — propagates with a traceback.
         rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
                "ok": False, "error": traceback.format_exc()[-4000:]}
     path = out / f"{args.arch}__{args.shape}__{args.mesh}.json"

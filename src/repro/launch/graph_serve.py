@@ -70,6 +70,7 @@ class ServeConfig:
     batch: int = 32
     mutate: bool = False
     chaos: bool = False
+    corrupt: bool = False
     continuous: bool = False
     depth_buckets: int = 0
     deadline_ms: Optional[float] = None
@@ -79,7 +80,8 @@ class ServeConfig:
     @classmethod
     def from_args(cls, args) -> "ServeConfig":
         return cls(alg=args.alg, batch=args.batch, mutate=args.mutate,
-                   chaos=args.chaos, continuous=args.continuous,
+                   chaos=args.chaos, corrupt=args.corrupt,
+                   continuous=args.continuous,
                    depth_buckets=args.depth_buckets,
                    deadline_ms=args.deadline_ms,
                    queue_capacity=args.queue_capacity,
@@ -104,6 +106,30 @@ class ServeConfig:
                         "Run --chaos alone; fault tolerance for continuous "
                         "sessions is serve_with_restarts (see "
                         "tests/test_continuous.py).")
+        if self.corrupt:
+            if self.chaos:
+                bad("--chaos + --corrupt",
+                    "the drills have disjoint injection schedules (worker "
+                    "faults vs silent bit-flips)",
+                    "Run them as two invocations — CI does.")
+            for name, on in (("--mutate", self.mutate),
+                             ("--continuous", self.continuous),
+                             ("--depth-buckets", bool(self.depth_buckets)),
+                             ("--deadline-ms", self.deadline_ms is not None),
+                             ("--queue-capacity",
+                              self.queue_capacity is not None)):
+                if on:
+                    bad(f"--corrupt + {name}",
+                        "the corruption drill runs its own sessions across "
+                        "all three backends with a fixed injection schedule",
+                        "Run --corrupt alone; certification in production "
+                        "sessions is ServeSession(certifier=..., "
+                        "monitor=...) — see docs/robustness.md.")
+            if self.alg not in ("bfs", "sssp"):
+                raise ValueError(
+                    f"--corrupt drills the continuous-session certification "
+                    f"path, which serves step-translatable programs only "
+                    f"(bfs, sssp), not {self.alg!r}.")
         if self.continuous and self.alg not in ("bfs", "sssp"):
             raise ValueError(
                 f"--continuous serves step-translatable programs only "
@@ -143,6 +169,8 @@ class ServeConfig:
     def mode(self) -> str:
         if self.chaos:
             return "chaos"
+        if self.corrupt:
+            return "corrupt"
         if self.continuous:
             return "continuous"
         if self.mutate:
@@ -561,8 +589,9 @@ def serve_fault_tolerant(args, manager, *, midrun_manager=None,
     from repro.core.dynamic import DynamicGraph
     from repro.core.graph import apply_mutation_batches
     from repro.data.graphs import edge_stream
-    from repro.runtime import (DegradationLadder, QuarantinePolicy,
-                               RestartPolicy, StepWatchdog, chaos)
+    from repro.runtime import (RETRYABLE_EXCEPTIONS, DegradationLadder,
+                               QuarantinePolicy, RestartPolicy, StepWatchdog,
+                               chaos)
 
     from repro.core import graph as G
 
@@ -701,7 +730,10 @@ def serve_fault_tolerant(args, manager, *, midrun_manager=None,
             round_i += 1
             if entries0 is None:
                 entries0 = cache_entries()
-        except Exception as e:
+        except RETRYABLE_EXCEPTIONS as e:
+            # Only the restart whitelist (worker faults, XLA runtime errors,
+            # exchange corruption) burns the retry budget; programming bugs
+            # propagate — matching RestartPolicy.handle's own contract.
             sleep_s = policy.handle(e, context=dict(round=round_i))
             if sleep_s:
                 time.sleep(sleep_s)
@@ -901,7 +933,8 @@ def run_chaos_drill(args) -> int:
         "kernel fault did not fall back to the reference backend"
     assert faulty_quar == {0}, \
         f"poisoned query 0 not quarantined: {faulty_quar}"
-    assert any(rec["reason"] == "nan" for rec in faulty_rep["quarantined"])
+    assert any(rec["reason"] == "nonfinite"
+               for rec in faulty_rep["quarantined"])
     assert faulty_rep["midrun_snapshots"] > 0, \
         "watchdog checkpoint-now never fired"
     assert faulty_rep["retraces"] <= faulty_rep["failures"], \
@@ -917,6 +950,215 @@ def run_chaos_drill(args) -> int:
           f"bitwise identical to the uninjected run "
           f"(quarantined: {sorted(faulty_quar)})", flush=True)
     print("CHAOS OK")
+    return 0
+
+
+def run_corrupt_drill(args) -> int:
+    """``--corrupt``: the silent-corruption drill (the CI corruption job).
+
+    Worker faults raise; silent faults don't — this drill flips bits at
+    every data-corruption seam and asserts the integrity layer converts
+    each one into a *detection* (checksum mismatch, monitor fire, or
+    certifier rejection with a recompute) or a *mask* (the harvested
+    result is bitwise identical to the clean run anyway).  Per backend
+    (reference, fused, hybrid):
+
+    - clean pass: a certified ``ServeSession`` and a certified chunked
+      refresh produce **zero** false positives (no recompute, no monitor
+      fire, every fixpoint certifies);
+    - ``state.corrupt``: a bit-flipped state row at a window boundary is
+      caught by the invariant monitor and/or the harvest certifier, and
+      the recompute-once policy restores the right answer;
+    - ``exchange.payload``: a corrupted outbox element mismatches its
+      inbox-side reduction tag → ``ExchangeCorruption`` → a clean window
+      replay reproduces the uncorrupted result bitwise (the hybrid
+      single-device path has no wire exchange, so the site is inert
+      there and the result must stay bitwise clean).
+
+    Backend-independent sites, drilled once: ``checkpoint.torn`` (a torn
+    tensor fails its manifest CRC at restore; the previous snapshot still
+    loads) and ``tombstone.flip`` (a resurrected deleted edge on the
+    dynamic path yields a fixpoint the certifier rejects against the true
+    mutated graph).
+    """
+    import tempfile
+
+    from repro.checkpoint import CheckpointManager
+    from repro.checkpoint.manager import CheckpointCorruption
+    from repro.runtime import (ExchangeCorruption, FaultInjector,
+                               QuarantinePolicy, ResultCertifier,
+                               ServeSession, chaos, monitor_for)
+
+    rng = np.random.default_rng(args.seed)
+    detections = 0
+    masked = 0
+
+    def flag(site, **ctx):
+        return FaultInjector(sites={site: [dict(ctx, flag=True)]})
+
+    for backend in ("reference", "fused", "hybrid"):
+        a = argparse.Namespace(**vars(args))
+        a.backend = backend
+        g, _, engine = build_engine(a)
+        sources = rng.integers(0, g.num_vertices, size=args.num_queries)
+        certifier = ResultCertifier(args.alg, g)
+
+        def run_session():
+            # all three detection layers armed: in-loop monitors, the
+            # non-finite/budget quarantine, and harvest certification
+            s = ServeSession(engine, args.alg, slots=args.batch,
+                             chunk=args.checkpoint_every,
+                             quarantine=QuarantinePolicy(
+                                 superstep_budget=args.superstep_budget),
+                             certifier=ResultCertifier(args.alg, g),
+                             monitor=monitor_for(args.alg,
+                                                 chunk=args.checkpoint_every))
+            s.submit(sources)
+            s.drain()
+            rep = s.report()
+            res = {r["query"]: r["result"] for r in s.poll()}
+            return res, rep, set(s.quarantined_qids)
+
+        # -- clean pass: zero false positives -----------------------------
+        clean, rep, cq = run_session()
+        assert rep["recomputed"] == 0 and not rep["certify_failed"], \
+            f"[{backend}] clean session raised certifier false positives: " \
+            f"{rep['certify_failed']}"
+        assert rep["monitors_fired"] == 0 and not cq, \
+            f"[{backend}] clean session fired {rep['monitors_fired']} " \
+            f"invariant monitors, quarantined {sorted(cq)}"
+        std = sources[:args.batch]
+        clean_chunk, _, _ = chunked_refresh(
+            engine, args.alg, std, chunk=args.checkpoint_every)
+        verdicts = certifier.certify_batch(clean_chunk, sources=std)
+        assert all(v.ok for v in verdicts), \
+            f"[{backend}] clean chunked fixpoint failed certification: " \
+            f"{[v.reason() for v in verdicts if not v.ok]}"
+        print(f"[{backend}] clean: {rep['completed']} queries certified, "
+              f"0 false positives, 0 monitor fires", flush=True)
+
+        # -- state.corrupt: bit-flipped state row at a window boundary ----
+        with chaos.active(flag("state.corrupt", step=0)):
+            dirty, rep, dq = run_session()
+        hits = rep["monitors_fired"] + rep["recomputed"] + len(dq)
+        parity = all(np.array_equal(dirty[q], clean[q])
+                     for q in clean if q not in dq)
+        assert hits or parity, \
+            f"[{backend}] state.corrupt neither detected nor masked"
+        assert all(r["recovered"] for r in rep["certify_failed"]), \
+            f"[{backend}] certifier recompute did not recover: " \
+            f"{rep['certify_failed']}"
+        assert parity or rep["recomputed"], \
+            f"[{backend}] state.corrupt changed results without a recompute"
+        detections += bool(hits)
+        masked += bool(not hits)
+        print(f"[{backend}] state.corrupt: "
+              f"{'detected' if hits else 'masked'} "
+              f"(monitors={rep['monitors_fired']} "
+              f"recomputes={rep['recomputed']} "
+              f"quarantined={sorted(dq)})", flush=True)
+
+        # -- exchange.payload: corrupted wire block vs reduction tags -----
+        try:
+            with chaos.active(flag("exchange.payload", step=0)):
+                got, _, _ = chunked_refresh(
+                    engine, args.alg, std, chunk=args.checkpoint_every)
+            caught = None
+        except ExchangeCorruption as e:
+            caught = e
+        if caught is not None:
+            # bounded window-replay: the clean re-run IS the recovery
+            replay, _, _ = chunked_refresh(
+                engine, args.alg, std, chunk=args.checkpoint_every)
+            assert np.array_equal(replay, clean_chunk), \
+                f"[{backend}] post-corruption replay diverged"
+            detections += 1
+            print(f"[{backend}] exchange.payload: detected "
+                  f"({caught}); replay bitwise clean", flush=True)
+        else:
+            assert backend == "hybrid", \
+                f"[{backend}] corrupted exchange escaped the tag check"
+            assert np.array_equal(got, clean_chunk), \
+                "[hybrid] inert exchange site still changed the result"
+            masked += 1
+            print("[hybrid] exchange.payload: masked (single-device hybrid "
+                  "supersteps have no wire exchange)", flush=True)
+
+    # -- checkpoint.torn: torn tensor vs manifest CRC (backend-free) ------
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, keep=3)
+        tree = {"state": rng.standard_normal(64).astype(np.float32)}
+        mgr.save_tree(0, tree, blocking=True)
+        with chaos.active(flag("checkpoint.torn", step=1)):
+            mgr.save_tree(1, tree, blocking=True)
+        try:
+            mgr.restore_tree(tree)
+            raise AssertionError("torn checkpoint restored silently")
+        except CheckpointCorruption as e:
+            detections += 1
+            print(f"checkpoint.torn: detected ({e})", flush=True)
+        _, prev = mgr.restore_tree(tree, step=0)
+        assert np.array_equal(prev["state"], tree["state"]), \
+            "fallback snapshot does not match the saved state"
+        print("checkpoint.torn: fallback to step 0 bitwise clean",
+              flush=True)
+
+    # -- tombstone.flip: resurrected deleted edge on the dynamic path -----
+    from repro.data.graphs import edge_stream
+
+    a = argparse.Namespace(**vars(args))
+    a.backend, a.alg = "reference", "bfs"
+    g, dg, engine = build_engine(a, dynamic=True)
+    batch = edge_stream(g, 1, args.mutation_batch, churn=0.5,
+                        seed=args.seed)[0]
+    dg.apply_mutations(batch)
+    truth = dg.mutated_csr()
+    cert = ResultCertifier("bfs", truth)
+    std = rng.integers(0, g.num_vertices, size=args.batch)
+    base, _, _ = chunked_refresh(engine, "bfs", std,
+                                 chunk=args.checkpoint_every)
+    verdicts = cert.certify_batch(base, sources=std)
+    assert all(v.ok for v in verdicts), \
+        "clean dynamic fixpoint failed certification against the " \
+        "mutated graph"
+    # flip at EVERY window so the engine converges to a consistent fixpoint
+    # of the *wrong* graph — the hardest case: only a certifier that checks
+    # against the true mutated topology can tell
+    persistent = FaultInjector(sites={"tombstone.flip": [
+        {"step": s, "flag": True}
+        for s in range(0, 64, args.checkpoint_every)]})
+    with chaos.active(persistent):
+        flipped, _, _ = chunked_refresh(engine, "bfs", std,
+                                        chunk=args.checkpoint_every)
+    verdicts = cert.certify_batch(flipped, sources=std)
+    bad = [v.reason() for v in verdicts if not v.ok]
+    if np.array_equal(flipped, base):
+        masked += 1
+        assert not bad, f"masked tombstone flip still failed: {bad}"
+        print("tombstone.flip: masked (min-semiring path redundancy "
+              "absorbed the flipped slot; fixpoint bitwise clean)",
+              flush=True)
+    else:
+        detections += 1
+        assert bad, "tombstone flip changed the fixpoint but every " \
+                    "certifier check passed"
+        print(f"tombstone.flip: detected ({bad[0]})", flush=True)
+    # teeth proof: had the flip produced ANY wrong fixpoint, the certifier
+    # rejects it — perturb one reached vertex's level by one and re-certify
+    slot = next(i for i in range(len(std))
+                if (np.isfinite(flipped[i]) & (flipped[i] > 0)).any())
+    wrong = np.asarray(flipped[slot]).copy()
+    v = int(np.flatnonzero(np.isfinite(wrong) & (wrong > 0))[0])
+    wrong[v] -= 1.0
+    verdict = cert.certify(wrong, source=int(std[slot]))
+    assert not verdict.ok, \
+        "certifier accepted a provably wrong BFS fixpoint"
+    print(f"tombstone.flip: certifier rejects a perturbed fixpoint "
+          f"({verdict.reason()})", flush=True)
+
+    print(f"corruption drill: {detections} detected, {masked} masked, "
+          f"0 false positives across 3 backends", flush=True)
+    print("CORRUPT OK")
     return 0
 
 
@@ -968,6 +1210,13 @@ def main(argv=None) -> int:
                          "session, then the same session with injected "
                          "crashes; assert recovery, zero lost mutations, "
                          "and bitwise parity")
+    ap.add_argument("--corrupt", action="store_true",
+                    help="run the silent-corruption drill: inject bit-flips "
+                         "at every data-corruption site (state rows, "
+                         "exchange payloads, checkpoint tensors, tombstone "
+                         "masks) across all three backends; assert every "
+                         "fault is detected-or-masked and the clean path "
+                         "raises zero false positives")
     ap.add_argument("--checkpoint-every", type=int, default=2,
                     help="supersteps per checkpointable chunk in the "
                          "fault-tolerant refresh path")
@@ -1006,6 +1255,9 @@ def main(argv=None) -> int:
 
     if cfg.mode == "chaos":
         return run_chaos_drill(args)
+
+    if cfg.mode == "corrupt":
+        return run_corrupt_drill(args)
 
     if cfg.mode == "continuous":
         dg = stream = None

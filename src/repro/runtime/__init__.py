@@ -1,15 +1,21 @@
 from repro.runtime.watchdog import StepWatchdog
 from repro.runtime.failures import (
     run_with_restarts, serve_with_restarts, FaultInjector, WorkerFailure,
-    RestartPolicy, RETRYABLE_EXCEPTIONS)
+    ExchangeCorruption, RestartPolicy, RETRYABLE_EXCEPTIONS)
 from repro.runtime.sla import (
-    AdmissionController, QuarantinePolicy, DegradationLadder)
+    AdmissionController, QuarantinePolicy, DegradationLadder,
+    nonfinite_queries)
 from repro.runtime.session import ServeSession, drain_reference
+from repro.runtime.verify import (
+    CheckResult, Verdict, ResultCertifier, InvariantMonitor, certify,
+    monitor_for)
 from repro.runtime import chaos
 
 __all__ = [
     "StepWatchdog", "run_with_restarts", "serve_with_restarts",
-    "FaultInjector", "WorkerFailure", "RestartPolicy",
+    "FaultInjector", "WorkerFailure", "ExchangeCorruption", "RestartPolicy",
     "RETRYABLE_EXCEPTIONS", "AdmissionController", "QuarantinePolicy",
     "DegradationLadder", "ServeSession", "drain_reference", "chaos",
+    "CheckResult", "Verdict", "ResultCertifier", "InvariantMonitor",
+    "certify", "monitor_for", "nonfinite_queries",
 ]

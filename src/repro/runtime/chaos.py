@@ -20,6 +20,28 @@ where a worker fault would surface in a real deployment:
 - ``query.poison``      non-raising flag: the serving driver poisons a
                         query's initial state (NaN) when this fires
 
+Data-corruption sites (the *fail-silent* half of the fault model — each
+flips bits instead of raising, and the integrity layer in
+``runtime/verify.py`` / the checksummed exchange must catch it):
+
+- ``state.corrupt``     non-raising flag: ``run_batched_chunked`` bit-flips
+                        one element of the first float state leaf at the
+                        window boundary (host-side, between compiled
+                        windows); ctx: step, plus caller context
+- ``exchange.payload``  non-raising flag: the checked exchange corrupts one
+                        outbox element *after* send-side tags are computed
+                        (rides a traced poison operand — no retrace); the
+                        inbox-side tag check must convert it into an
+                        ``ExchangeCorruption``
+- ``checkpoint.torn``   non-raising flag: ``CheckpointManager.save_tree``
+                        tears one tensor after manifest checksums are
+                        computed — ``restore_tree(verify=True)`` must refuse
+                        the snapshot; ctx: step
+- ``tombstone.flip``    non-raising flag: the dynamic-graph chunk dispatch
+                        flips one tombstone mask bit (a deleted edge
+                        resurrects) via a traced operand; the result
+                        certifier must reject the harvested fixpoint
+
 ``visit(site, **ctx)`` is a cheap no-op until an injector is installed
 (``install``); injectors decide per-visit whether to raise (worker fault)
 or to return a flag (data-level poison).  Visit counts per site are global

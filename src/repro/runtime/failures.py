@@ -31,6 +31,14 @@ class WorkerFailure(RuntimeError):
     """A worker/shard died mid-step (or a drill pretended it did)."""
 
 
+class ExchangeCorruption(WorkerFailure):
+    """An exchange checksum mismatched: a payload block was corrupted in
+    flight.  Subclasses :class:`WorkerFailure` so the existing
+    ``RestartPolicy`` whitelist treats it as retryable — the recovery is a
+    bounded window-replay from the last checkpoint, identical to a worker
+    death at the same superstep."""
+
+
 def _xla_error_types() -> tuple:
     types = []
     try:  # jaxlib's runtime error (device OOM, donated-buffer reuse, ...)

@@ -80,6 +80,17 @@ class ServeSession:
     scheduler:
         ``"fifo"`` (arrival order) or ``"depth"`` (admit shallow-first by
         ``depth_key(source)`` — see ``graph_serve.estimate_depth_order``).
+    certifier:
+        Optional :class:`repro.runtime.verify.ResultCertifier` bound to the
+        *current* graph: every harvested result is certified before
+        completing.  A failed verdict triggers the recompute-once policy —
+        the trusted NumPy reference answer replaces the corrupt result; if
+        even that fails certification the query is quarantined with reason
+        ``"certification"``.
+    monitor:
+        Optional :class:`repro.runtime.verify.InvariantMonitor` observed at
+        every window boundary (threaded through ``engine.execute``); fired
+        windows are counted in the report.
     """
 
     def __init__(self, engine, alg: str, *, slots: int, chunk: int = 2,
@@ -87,7 +98,8 @@ class ServeSession:
                  deadline_ms: Optional[float] = None,
                  quarantine: Optional[QuarantinePolicy] = None,
                  scheduler: str = "fifo",
-                 depth_key: Optional[Callable[[int], float]] = None):
+                 depth_key: Optional[Callable[[int], float]] = None,
+                 certifier=None, monitor=None):
         from repro.algorithms.continuous import continuous_form
 
         if slots < 1:
@@ -109,6 +121,11 @@ class ServeSession:
         self.quarantine = quarantine
         self.scheduler = scheduler
         self.depth_key = depth_key
+        self.certifier = certifier
+        self.monitor = monitor
+        self.certified_ok = 0
+        self.recomputed = 0
+        self.certify_failures: List[dict] = []
         self.admission = AdmissionController(
             queue_capacity if queue_capacity is not None else (1 << 30))
 
@@ -127,6 +144,7 @@ class ServeSession:
 
         self.windows = 0
         self.refills = 0
+        self.monitors_fired = 0
         self._next_qid = 0
         self._qsource: Dict[int, int] = {}
         self._qdeadline: Dict[int, Optional[float]] = {}
@@ -194,6 +212,34 @@ class ServeSession:
         if self.quarantine is not None:
             self.quarantine.begin(self.slots)
 
+    def _certified(self, result: np.ndarray, slot: int, qid: int,
+                   step: int) -> np.ndarray:
+        """Recompute-once-then-quarantine("certification") policy.
+
+        A harvested result that fails its certifier is replaced by the
+        trusted NumPy reference answer (one recompute — an O(V+E) sweep,
+        not an engine rerun, so the jit caches stay untouched); if even
+        the reference fails — certifier/graph mismatch, e.g. a stale
+        certifier across a mutation — the query is quarantined."""
+        source = int(self.slot_source[slot])
+        verdict = self.certifier.certify(result, source=source)
+        if verdict.ok:
+            self.certified_ok += 1
+            return result
+        self.recomputed += 1
+        ref = np.asarray(self.certifier.recompute(source))
+        rec = dict(query=qid, source=source, step=step,
+                   reason=verdict.reason(), recovered=True)
+        if not self.certifier.certify(ref, source=source).ok:
+            rec["recovered"] = False
+            self.quarantined_qids.add(qid)
+            if self.quarantine is not None:
+                self.quarantine.quarantined.append(
+                    {"query": qid, "reason": "certification",
+                     "step": step, "steps_q": -1})
+        self.certify_failures.append(rec)
+        return ref
+
     def _harvest(self, snap: dict, done: np.ndarray) -> None:
         results = self.form.harvest(self.engine.pg, snap["state"],
                                     self.slot_step0)
@@ -201,7 +247,10 @@ class ServeSession:
         now = time.perf_counter()
         for slot in np.flatnonzero(done):
             qid = int(self.slot_query[slot])
-            self._completed[qid] = np.asarray(results[slot])
+            result = np.asarray(results[slot])
+            if self.certifier is not None and qid not in self.quarantined_qids:
+                result = self._certified(result, slot, qid, snap["step"])
+            self._completed[qid] = result
             self._completed_steps[qid] = int(steps_q[slot])
             if qid in self._submit_t:
                 lat = (now - self._submit_t[qid]) * 1e3
@@ -261,6 +310,7 @@ class ServeSession:
         self._step = info["final_step"]
         self.windows += info["chunks"]
         self.refills += info["refilled"]
+        self.monitors_fired += info.get("monitors_fired", 0)
         self._account_retraces(info)
 
     def step(self) -> bool:
@@ -270,7 +320,8 @@ class ServeSession:
         state, steps_q, info = self.engine.execute(
             self.form.program, self._state, chunk=self.chunk,
             on_chunk=self._boundary, max_chunks=1,
-            start_step=self._step, fin=self._fin, steps_q=self._steps_q)
+            start_step=self._step, fin=self._fin, steps_q=self._steps_q,
+            monitor=self.monitor)
         self._absorb(state, steps_q, info)
         return not self.drained()
 
@@ -284,7 +335,8 @@ class ServeSession:
             state, steps_q, info = self.engine.execute(
                 self.form.program, self._state, chunk=self.chunk,
                 on_chunk=self._boundary,
-                start_step=self._step, fin=self._fin, steps_q=self._steps_q)
+                start_step=self._step, fin=self._fin, steps_q=self._steps_q,
+                monitor=self.monitor)
             self._absorb(state, steps_q, info)
         return self.report()
 
@@ -379,6 +431,10 @@ class ServeSession:
             retraces=self.retraces(),
             quarantined=sorted(self.quarantined_qids),
             sla_misses=self.sla_misses,
+            certified_ok=self.certified_ok,
+            recomputed=self.recomputed,
+            certify_failed=list(self.certify_failures),
+            monitors_fired=self.monitors_fired,
             latency_p50_ms=pct(50), latency_p99_ms=pct(99),
             final_step=int(self._step),
             backend=getattr(self.engine, "backend", None),

@@ -86,14 +86,26 @@ class AdmissionController:
 # quarantine (divergence watchdog)
 # ---------------------------------------------------------------------------
 
-def nan_queries(state) -> np.ndarray:
-    """[Q] bool: queries whose vertex state contains a NaN in any leaf."""
+def nonfinite_queries(state, combine: str = "min") -> np.ndarray:
+    """[Q] bool: queries whose vertex state is semiring-illegally non-finite.
+
+    The legality of ``inf`` depends on the combine: under a min semiring
+    (bfs/sssp/cc) ``+inf`` is the canonical "unreached" value, so only NaN
+    and ``-inf`` are poison; under a sum combine (pagerank/bc forward
+    sigma) *any* non-finite value means an overflow or poisoned
+    accumulation escaped — ``~isfinite`` is the right net.
+    """
     masks = []
     for leaf in jax.tree.leaves(state):
         arr = np.asarray(leaf)
         if not np.issubdtype(arr.dtype, np.floating):
             continue
-        masks.append(np.isnan(arr.reshape(arr.shape[0], -1)).any(axis=1))
+        flat = arr.reshape(arr.shape[0], -1)
+        if combine == "sum":
+            bad = ~np.isfinite(flat)
+        else:
+            bad = np.isnan(flat) | np.isneginf(flat)
+        masks.append(bad.any(axis=1))
     if not masks:
         return np.zeros(0, bool)
     out = masks[0].copy()
@@ -102,9 +114,18 @@ def nan_queries(state) -> np.ndarray:
     return out
 
 
+def nan_queries(state) -> np.ndarray:
+    """Back-compat alias: min-semiring rules (NaN / -inf are poison)."""
+    return nonfinite_queries(state, combine="min")
+
+
 @dataclasses.dataclass
 class QuarantinePolicy:
-    """Chunk-boundary scan: quarantine NaN / over-budget queries.
+    """Chunk-boundary scan: quarantine non-finite / over-budget queries.
+
+    ``combine`` selects the finiteness rule (see ``nonfinite_queries``):
+    min-semiring states keep ``+inf`` legal for unreached slots; sum
+    combines treat any non-finite value as poison.
 
     Use as the ``on_chunk`` hook: ``engine.run_batched_chunked(..,
     on_chunk=policy.scan)`` after ``policy.begin(q)``.  ``quarantined``
@@ -115,6 +136,7 @@ class QuarantinePolicy:
     """
     superstep_budget: Optional[int] = None
     check_nan: bool = True
+    combine: str = "min"
     quarantined: List[dict] = dataclasses.field(default_factory=list)
     _killed: Optional[np.ndarray] = None
     _reported: set = dataclasses.field(default_factory=set)
@@ -149,11 +171,11 @@ class QuarantinePolicy:
         kill = np.zeros(q, bool)
         reasons: Dict[int, str] = {}
         if self.check_nan:
-            nan = nan_queries(snap["state"])
-            if len(nan) == q:
-                for i in np.flatnonzero(nan & ~self._killed):
+            bad = nonfinite_queries(snap["state"], combine=self.combine)
+            if len(bad) == q:
+                for i in np.flatnonzero(bad & ~self._killed):
                     kill[i] = True
-                    reasons[int(i)] = "nan"
+                    reasons[int(i)] = "nonfinite"
         if self.superstep_budget is not None:
             over = (steps_q >= self.superstep_budget) & ~fin & ~self._killed
             for i in np.flatnonzero(over):

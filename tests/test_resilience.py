@@ -172,7 +172,7 @@ def test_quarantine_kills_nan_query_and_freezes_rest():
         BFS_PROGRAM, {"level": jnp.asarray(poisoned)},
         checkpoint_every=2, on_chunk=quar.scan)
     assert [r["query"] for r in quar.quarantined] == [0]
-    assert quar.quarantined[0]["reason"] == "nan"
+    assert quar.quarantined[0]["reason"] == "nonfinite"
     assert info["finished"].all()
     np.testing.assert_array_equal(np.asarray(st["level"])[1:],
                                   np.asarray(ref_state["level"])[1:])

@@ -1,0 +1,331 @@
+"""Silent-corruption defense: certifier soundness, invariant monitors,
+checksummed exchange, and checkpoint integrity.
+
+The contract under test (docs/robustness.md "Silent faults"):
+
+- every registered certifier **accepts** the clean fixpoint its engine
+  (or reference oracle) produces, across backends, and **rejects** a
+  minimal single-value perturbation with a named invariant — the
+  certifiers have teeth and no clean false positives;
+- the in-loop ``InvariantMonitor`` fires on semiring violations
+  (monotonicity regressions, illegal non-finite values, frontier
+  regressions) and stays silent on legal transitions, including across a
+  slot-refill ``rebase``;
+- the checksummed exchange raises ``ExchangeCorruption`` when a payload
+  is corrupted on the wire, and a clean replay is bitwise identical to
+  an uninjected run;
+- a torn checkpoint is rejected at *restore* time
+  (``CheckpointCorruption``) and the previous snapshot restores bitwise;
+- ``nonfinite_queries`` applies semiring-aware finiteness (``+inf`` is
+  legal under min, poison under sum);
+- the end-to-end ``--corrupt`` drill passes in a subprocess (the CI
+  corruption-drill job).
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.algorithms.bc import bc_reference
+from repro.algorithms.bfs import (BFS_PROGRAM, bfs, gather_batch,
+                                  multi_source_state)
+from repro.algorithms.cc import connected_components, symmetrize
+from repro.algorithms.pagerank import pagerank_reference
+from repro.algorithms.sssp import sssp
+from repro.checkpoint.manager import CheckpointCorruption, CheckpointManager
+from repro.core import graph as G
+from repro.core import partition as PT
+from repro.core.bsp import BSPEngine
+from repro.runtime import (ExchangeCorruption, FaultInjector,
+                           InvariantMonitor, ResultCertifier, certify, chaos,
+                           monitor_for, nonfinite_queries)
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+BACKENDS = [
+    pytest.param({}, id="reference"),
+    pytest.param({"fused": True, "block_e": 128}, id="fused"),
+    pytest.param({"backend": "hybrid"}, id="hybrid"),
+]
+
+
+@pytest.fixture(scope="module")
+def g():
+    return G.rmat(7, 8, seed=0)
+
+
+@pytest.fixture(scope="module")
+def pg(g):
+    return PT.partition(g, 2, "high")
+
+
+# ---------------------------------------------------------------------------
+# certifier soundness: clean fixpoints pass, minimal perturbations fail
+# ---------------------------------------------------------------------------
+
+class TestCertifierSoundness:
+    @pytest.mark.parametrize("kw", BACKENDS)
+    def test_bfs_accepts_engine_fixpoint(self, g, pg, kw):
+        engine = BSPEngine(pg, **kw)
+        levels, _ = bfs(engine, 3)
+        v = certify("bfs", g, levels, source=3)
+        assert v.ok, v.summary()
+
+    def test_bfs_rejects_off_by_one(self, g, pg):
+        levels, _ = bfs(BSPEngine(pg), 3)
+        wrong = np.asarray(levels, np.float64).copy()
+        vtx = int(np.flatnonzero(np.isfinite(wrong) & (wrong > 0))[0])
+        wrong[vtx] -= 1.0
+        v = certify("bfs", g, wrong, source=3)
+        assert not v.ok
+        assert {"edge_span", "parent_witness"} & {c.name for c in v.failed()}
+
+    def test_bfs_rejects_fractional_level(self, g, pg):
+        levels, _ = bfs(BSPEngine(pg), 3)
+        wrong = np.asarray(levels, np.float64).copy()
+        wrong[int(np.flatnonzero(np.isfinite(wrong) & (wrong > 0))[0])] += 0.5
+        assert "integral_nonneg" in certify("bfs", g, wrong,
+                                            source=3).reason()
+
+    @pytest.mark.parametrize("kw", BACKENDS)
+    def test_sssp_accepts_engine_fixpoint(self, kw, g):
+        gw = g.with_uniform_weights(seed=1)
+        pgw = PT.partition(gw, 2, "high")
+        dists, _ = sssp(BSPEngine(pgw, **kw), 3)
+        v = certify("sssp", gw, dists, source=3)
+        assert v.ok, v.summary()
+
+    def test_sssp_rejects_slack_distance(self, g):
+        gw = g.with_uniform_weights(seed=1)
+        pgw = PT.partition(gw, 2, "high")
+        dists, _ = sssp(BSPEngine(pgw), 3)
+        wrong = np.asarray(dists, np.float64).copy()
+        vtx = int(np.flatnonzero(np.isfinite(wrong) & (wrong > 0))[0])
+        wrong[vtx] += 1.0          # no in-edge achieves the inflated value
+        v = certify("sssp", gw, wrong, source=3)
+        assert not v.ok
+        assert ({"no_relaxable_edge", "tight_witness"}
+                & {c.name for c in v.failed()})
+
+    def test_sssp_rejects_all_zeros(self, g):
+        # no-relaxable-edge alone accepts the all-zeros state; the tight
+        # witness kills it
+        gw = g.with_uniform_weights(seed=1)
+        v = certify("sssp", gw, np.zeros(gw.num_vertices), source=3)
+        assert "tight_witness" in v.reason()
+
+    def test_cc_accepts_engine_fixpoint(self, g):
+        gs = symmetrize(g)
+        pgs = PT.partition(gs, 2, "high")
+        labels, _ = connected_components(BSPEngine(pgs))
+        v = certify("cc", gs, labels)
+        assert v.ok, v.summary()
+
+    def test_cc_rejects_split_component(self, g):
+        gs = symmetrize(g)
+        pgs = PT.partition(gs, 2, "high")
+        labels, _ = connected_components(BSPEngine(pgs))
+        wrong = np.asarray(labels, np.float64).copy()
+        vtx = int(np.flatnonzero(wrong < np.arange(gs.num_vertices))[0])
+        wrong[vtx] = vtx           # non-root member claims to be its own root
+        v = certify("cc", gs, wrong)
+        assert not v.ok
+        assert ({"endpoint_agreement", "root_fixpoint"}
+                & {c.name for c in v.failed()})
+
+    def test_pagerank_accepts_reference_fixpoint(self, g):
+        rank = np.asarray(pagerank_reference(g, num_iterations=20))
+        v = certify("pagerank", g, rank, num_iterations=20)
+        assert v.ok, v.summary()
+
+    def test_pagerank_rejects_mass_and_sign_violations(self, g):
+        rank = np.asarray(pagerank_reference(g, num_iterations=20),
+                          np.float64)
+        assert "mass_conservation" in certify("pagerank", g, rank * 1.5,
+                                              num_iterations=20).reason()
+        neg = rank.copy()
+        neg[0] = -0.1
+        assert "finite_nonneg" in certify("pagerank", g, neg,
+                                          num_iterations=20).reason()
+
+    def test_bc_accepts_reference_and_rejects_perturbation(self, g):
+        bcv = np.asarray(bc_reference(g, 3), np.float64)
+        assert certify("bc", g, bcv, source=3).ok
+        wrong = bcv.copy()
+        wrong[int(np.argmax(wrong))] += 1.0
+        v = certify("bc", g, wrong, source=3)
+        assert "pair_recompute" in v.reason()
+
+    def test_certifier_batch_and_unknown_algorithm(self, g, pg):
+        levels, _ = bfs(BSPEngine(pg), 3)
+        cert = ResultCertifier("bfs", g)
+        verdicts = cert.certify_batch(np.stack([levels, levels]),
+                                      sources=[3, 3])
+        assert len(verdicts) == 2 and all(v.ok for v in verdicts)
+        with pytest.raises(ValueError, match="no certifier registered"):
+            ResultCertifier("nope", g)
+
+
+# ---------------------------------------------------------------------------
+# invariant monitor: fabricated window snapshots
+# ---------------------------------------------------------------------------
+
+def _snap(level, fin, steps, step):
+    return dict(state={"level": np.asarray(level, np.float32)},
+                finished=np.asarray(fin, bool),
+                steps_q=np.asarray(steps, np.int32), step=step)
+
+
+class TestInvariantMonitor:
+    def test_monotone_run_is_silent(self):
+        mon = InvariantMonitor(keys=("level",), combine="min", chunk=4)
+        inf = np.inf
+        mon.observe(_snap([[0, inf, inf], [0, inf, inf]],
+                          [False, False], [4, 4], 4))
+        rec = mon.observe(_snap([[0, 1, inf], [0, 1, 2]],
+                                [False, True], [8, 6], 8))
+        assert rec["violations"] == 0 and mon.violations == 0
+
+    def test_monotonicity_regression_fires(self):
+        mon = InvariantMonitor(keys=("level",), combine="min", chunk=4)
+        mon.observe(_snap([[0, 1, 2]], [False], [4], 4))
+        rec = mon.observe(_snap([[0, 3, 2]], [False], [8], 8))
+        assert rec["violations"] == 1
+        assert rec["checks"][0]["check"] == "monotonicity"
+        assert rec["checks"][0]["slots"] == [0]
+
+    def test_rebase_suppresses_refilled_slot_only(self):
+        mon = InvariantMonitor(keys=("level",), combine="min", chunk=4)
+        mon.observe(_snap([[0, 1], [0, 1]], [False, False], [4, 4], 4))
+        mon.rebase([True, False])   # slot 0 refilled: new tenant, new frame
+        rec = mon.observe(_snap([[5, 9], [0, 9]], [False, False],
+                                [1, 8], 8))
+        fired = {c["check"]: c["slots"] for c in rec["checks"]}
+        assert fired == {"monotonicity": [1]}
+
+    def test_finiteness_scoped_to_unfinished(self):
+        mon = InvariantMonitor(keys=("level",), combine="min")
+        nan = np.nan
+        rec = mon.observe(_snap([[0, nan], [0, nan]], [False, True],
+                                [2, 2], 2))
+        fired = {c["check"]: c["slots"] for c in rec["checks"]}
+        assert fired == {"finiteness": [0]}   # finished slot 1 is frozen
+
+    def test_sum_combine_rejects_inf(self):
+        mon = InvariantMonitor(keys=("level",), combine="sum")
+        rec = mon.observe(_snap([[0, np.inf]], [False], [1], 1))
+        assert rec["checks"][0]["check"] == "finiteness"
+
+    def test_frontier_sanity(self):
+        mon = InvariantMonitor(keys=("level",), combine="min", chunk=2)
+        mon.observe(_snap([[0, 1]], [True], [4], 4))
+        rec = mon.observe(_snap([[0, 1]], [False], [3], 6))
+        fired = {c["check"] for c in rec["checks"]}
+        assert fired == {"finished_regressed", "steps_delta"}
+        rec = mon.observe(_snap([[0, 1]], [False], [9], 8))
+        assert {c["check"] for c in rec["checks"]} == {"steps_delta"}
+
+    def test_monitor_for_profiles(self):
+        assert monitor_for("bfs", chunk=4).combine == "min"
+        assert monitor_for("pagerank").combine == "sum"
+        with pytest.raises(ValueError, match="no monitor profile"):
+            monitor_for("nope")
+
+
+# ---------------------------------------------------------------------------
+# semiring-aware finiteness (quarantine net)
+# ---------------------------------------------------------------------------
+
+def test_nonfinite_queries_semantics():
+    state = {"x": np.array([[0.0, 1.0], [0.0, np.inf], [np.nan, 1.0]],
+                           np.float32)}
+    assert nonfinite_queries(state, combine="min").tolist() == \
+        [False, False, True]      # +inf is the legal "unreached" value
+    assert nonfinite_queries(state, combine="sum").tolist() == \
+        [False, True, True]       # any non-finite is an escaped overflow
+
+
+# ---------------------------------------------------------------------------
+# checksummed exchange + in-loop monitor, through the real engine
+# ---------------------------------------------------------------------------
+
+class TestExchangeIntegrity:
+    @pytest.mark.parametrize("kw", BACKENDS[:2])   # hybrid has no wire here
+    def test_corrupted_payload_detected_then_replay_is_bitwise(self, pg, kw):
+        engine = BSPEngine(pg, **kw)
+
+        def run():
+            st, steps_q, _ = engine.run_batched_chunked(
+                BFS_PROGRAM, {"level": multi_source_state(pg, [1, 2])},
+                checkpoint_every=2)
+            return gather_batch(pg, st["level"]), np.asarray(steps_q)
+
+        clean, steps = run()
+        inj = FaultInjector(
+            sites={"exchange.payload": [{"step": 0, "flag": True}]})
+        with chaos.active(inj):
+            with pytest.raises(ExchangeCorruption):
+                run()
+        replay, replay_steps = run()   # the RestartPolicy path: rerun clean
+        assert np.array_equal(replay, clean)
+        assert np.array_equal(replay_steps, steps)
+
+    def test_state_corruption_trips_in_loop_monitor(self, pg):
+        engine = BSPEngine(pg)
+        inj = FaultInjector(
+            sites={"state.corrupt": [{"step": 0, "flag": True}]})
+        with chaos.active(inj):
+            _, _, info = engine.run_batched_chunked(
+                BFS_PROGRAM, {"level": multi_source_state(pg, [1, 2])},
+                checkpoint_every=2, max_chunks=4,
+                monitor=monitor_for("bfs", chunk=2))
+        assert info["monitors_fired"] >= 1
+
+    def test_clean_run_fires_no_monitors(self, pg):
+        engine = BSPEngine(pg)
+        _, _, info = engine.run_batched_chunked(
+            BFS_PROGRAM, {"level": multi_source_state(pg, [1, 2])},
+            checkpoint_every=2, monitor=monitor_for("bfs", chunk=2))
+        assert info["monitors_fired"] == 0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity
+# ---------------------------------------------------------------------------
+
+def test_torn_checkpoint_rejected_at_restore(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    rng = np.random.default_rng(0)
+    tree = {"state": rng.standard_normal(64).astype(np.float32)}
+    mgr.save_tree(0, tree)
+    inj = FaultInjector(
+        sites={"checkpoint.torn": [{"step": 1, "flag": True}]})
+    with chaos.active(inj):
+        mgr.save_tree(1, tree)
+    with pytest.raises(CheckpointCorruption):
+        mgr.restore_tree(tree)
+    # verify=False documents the failure mode the checksums exist to stop
+    _, torn = mgr.restore_tree(tree, verify=False)
+    assert not np.array_equal(torn["state"], tree["state"])
+    _, good = mgr.restore_tree(tree, step=0)
+    assert np.array_equal(good["state"], tree["state"])
+
+
+# ---------------------------------------------------------------------------
+# the end-to-end drill (the CI corruption-drill job, in a subprocess)
+# ---------------------------------------------------------------------------
+
+def test_corrupt_drill_smoke():
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH",
+                                                            ""))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.graph_serve", "--smoke",
+         "--corrupt", "--alg", "bfs"],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-3000:])
+    assert "CORRUPT OK" in r.stdout
+    assert "0 false positives" in r.stdout
