@@ -8,8 +8,8 @@ BASELINE := BENCH_superstep.prev.json
 BENCH_THRESHOLD ?= 0.75
 
 .PHONY: test lint bench bench-quick bench-batched bench-dist bench-dynamic \
-	bench-checkpoint bench-continuous bench-gate bench-check serve \
-	serve-mutate serve-continuous chaos corrupt-drill ci
+	bench-checkpoint bench-continuous bench-oocore bench-gate bench-check \
+	serve serve-mutate serve-continuous serve-oocore chaos corrupt-drill ci
 
 test:            ## tier-1 suite
 	$(PY) -m pytest -x -q
@@ -24,9 +24,9 @@ lint:            ## fast critical-rule lint (skips if ruff absent)
 bench:           ## reference-vs-fused superstep timings -> BENCH_superstep.json
 	$(PY) benchmarks/superstep_bench.py
 
-bench-quick:     ## smallest scale only (the CI bench job; batched + dynamic + checkpoint + continuous + verify)
+bench-quick:     ## smallest scale only (the CI bench job; batched + dynamic + checkpoint + continuous + verify + oocore)
 	$(PY) benchmarks/superstep_bench.py --quick --batched --mutations \
-	  --checkpoint --continuous --verify
+	  --checkpoint --continuous --verify --oocore
 
 bench-batched:   ## query-throughput column only (Q in {1,8,32}) + gate
 	$(PY) benchmarks/superstep_bench.py --quick --batched
@@ -53,6 +53,14 @@ serve-continuous: ## continuous-batching serving driver (resident ServeSession)
 
 bench-continuous: ## continuous-batching column (q/s + p99 vs drain) + gate
 	$(PY) benchmarks/superstep_bench.py --quick --continuous
+	$(MAKE) bench-gate
+
+serve-oocore:    ## out-of-core serving driver (forced HBM budget, tiered engine)
+	$(PY) -m repro.launch.graph_serve --smoke --graph uniform --alg bfs \
+	  --backend fused --block-e 128 --win-blocks 4 --hbm-budget 45000
+
+bench-oocore:    ## out-of-core column (tiered vs resident, parity + budget) + gate
+	$(PY) benchmarks/superstep_bench.py --quick --oocore
 	$(MAKE) bench-gate
 
 chaos:           ## fault-injection drill: crash/recover/replay, parity asserts

@@ -15,8 +15,11 @@ def run(scale: int = 16):
     for alg, sbytes in ALG_STATE_BYTES.items():
         fp = PT.memory_footprint_bytes(pg, state_bytes=sbytes)
         p = 1  # the offloaded partition
-        mb = {k: v / 2**20 for k, v in fp[p].items()}
+        # records carry the non-numeric "tier" label since the tiered-memory
+        # split — scale only the byte fields
+        mb = {k: v / 2**20 for k, v in fp[p].items()
+              if isinstance(v, (int, float))}
         emit(f"table5_{alg}_rmat{scale}", 0.0,
              f"graph={mb['graph']:.1f}MB|inbox={mb['inbox']:.1f}MB|"
              f"outbox={mb['outbox']:.1f}MB|state={mb['state']:.1f}MB|"
-             f"total={mb['total']:.1f}MB")
+             f"total={mb['total']:.1f}MB|tier={fp[p]['tier']}")

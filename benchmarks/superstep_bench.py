@@ -316,7 +316,7 @@ def bench_checkpoint_cell(pg, scale: int, parts: int, strategy: str,
     sources = rng.integers(0, pg.num_vertices, size=(q, 1))
     from repro.algorithms.bfs import multi_source_state
     state0 = {"level": jnp.asarray(multi_source_state(pg, sources))}
-    ref_state, ref_steps = eng.run_batched(BFS_PROGRAM, dict(state0))
+    ref_state, ref_steps = eng.execute(BFS_PROGRAM, dict(state0))
 
     def wall(fn, iters=3):
         times = []
@@ -327,11 +327,10 @@ def bench_checkpoint_cell(pg, scale: int, parts: int, strategy: str,
         return sorted(times)[len(times) // 2]
 
     # warm the chunked windows, then hold the compile-cache baseline
-    eng.run_batched_chunked(BFS_PROGRAM, dict(state0),
-                            checkpoint_every=chunk)
+    eng.execute(BFS_PROGRAM, dict(state0), chunk=chunk)
     entries0 = BSPEngine._run_chunk._cache_size()
-    bare_s = wall(lambda: eng.run_batched_chunked(
-        BFS_PROGRAM, dict(state0), checkpoint_every=chunk))
+    bare_s = wall(lambda: eng.execute(
+        BFS_PROGRAM, dict(state0), chunk=chunk))
 
     with tempfile.TemporaryDirectory() as td:
         mgr = CheckpointManager(td, keep=4096)   # keep every snapshot
@@ -348,8 +347,8 @@ def bench_checkpoint_cell(pg, scale: int, parts: int, strategy: str,
             return quar.scan(snap)
 
         t0 = time.perf_counter()
-        st, sq, info = eng.run_batched_chunked(
-            BFS_PROGRAM, dict(state0), checkpoint_every=chunk,
+        st, sq, info = eng.execute(
+            BFS_PROGRAM, dict(state0), chunk=chunk,
             on_chunk=on_chunk)
         ckpt_run_s = time.perf_counter() - t0
 
@@ -358,8 +357,8 @@ def bench_checkpoint_cell(pg, scale: int, parts: int, strategy: str,
                 "fin": np.zeros(q, bool), "steps_q": np.zeros(q, np.int32)}
         t0 = time.perf_counter()
         step, tree = mgr.restore_tree(like, chunk)
-        final, fsq, _ = eng.run_batched_chunked(
-            BFS_PROGRAM, tree["state"], checkpoint_every=chunk,
+        final, fsq, _ = eng.execute(
+            BFS_PROGRAM, tree["state"], chunk=chunk,
             start_step=step, fin=tree["fin"], steps_q=tree["steps_q"])
         recovery_s = time.perf_counter() - t0
 
@@ -420,10 +419,9 @@ def bench_verify_cell(g, pg, scale: int, parts: int, strategy: str,
             times.append(time.perf_counter() - t0)
         return sorted(times)[len(times) // 2]
 
-    eng.run_batched_chunked(BFS_PROGRAM, dict(state0),
-                            checkpoint_every=chunk)       # warm the windows
-    bare_s = wall(lambda: eng.run_batched_chunked(
-        BFS_PROGRAM, dict(state0), checkpoint_every=chunk))
+    eng.execute(BFS_PROGRAM, dict(state0), chunk=chunk)  # warm the windows
+    bare_s = wall(lambda: eng.execute(
+        BFS_PROGRAM, dict(state0), chunk=chunk))
 
     mon = monitor_for("bfs", chunk=chunk)
     mon_s = [0.0]
@@ -436,8 +434,8 @@ def bench_verify_cell(g, pg, scale: int, parts: int, strategy: str,
         return rec
 
     mon.observe = timed_observe
-    st, _, info = eng.run_batched_chunked(
-        BFS_PROGRAM, dict(state0), checkpoint_every=chunk, monitor=mon)
+    st, _, info = eng.execute(
+        BFS_PROGRAM, dict(state0), chunk=chunk, monitor=mon)
 
     certifier = ResultCertifier("bfs", g)
     levels = gather_batch(pg, st["level"])
@@ -532,6 +530,85 @@ def bench_continuous_cell(pg, scale: int, parts: int, strategy: str,
         min_slot_refills=rep["min_slot_refills"],
         max_slot_refills=rep["max_slot_refills"],
         retraces=rep["retraces"], bitwise=bitwise)
+
+
+def bench_oocore_cell(pg, scale: int, parts: int, strategy: str, seed: int,
+                      block_e: int, win_blocks: int = 8,
+                      backend: str = "fused", iters: int = 10) -> dict:
+    """One out-of-core cell: the tiered engine (cold partitions host-resident,
+    streamed through the superstep in double-buffered windows) vs the
+    all-resident engine on the same partitioned graph.
+
+    The HBM budget is *probed*: a throwaway plan with an unbounded budget
+    yields the per-split byte table, and the cell pins the budget to the
+    ``parts//2``-hot row — half the partitions are forced host-tier, so the
+    cell always streams.  Deterministic halves gated by
+    scripts/bench_check.py and asserted here: the streamed fixpoint is
+    bitwise identical to the resident one for a sum-combine program
+    (PageRank — the FMA/layout-sensitive case) and a min-combine one (BFS),
+    arena HBM stays under the budget, and repeat runs add zero
+    compile-cache entries (``retraces``).  The recorded byte fields
+    (``hbm_resident_bytes``, ``host_bytes``, ``streamed_bytes_per_superstep``,
+    ``window_count``) are plan-deterministic for a pinned seed.
+    """
+    import time
+
+    from repro.core.partition import build_tier_plan
+    from repro.algorithms.bfs import bfs_batched
+    from repro.algorithms.pagerank import pagerank
+
+    if backend == "fused":
+        bkw = dict(fused=True, block_e=block_e)
+    elif backend == "hybrid":
+        bkw = dict(backend="hybrid", block_e=block_e)
+    else:
+        bkw = dict(block_e=block_e)
+    probe = build_tier_plan(pg, 1 << 60, block_e=block_e,
+                            win_blocks=win_blocks,
+                            fused=backend != "reference")
+    budget = int(probe.table[parts // 2]["hbm_bytes"])
+    res_eng = BSPEngine(pg, **bkw)
+    tier_eng = BSPEngine(pg, tiered=budget, win_blocks=win_blocks, **bkw)
+    stats = tier_eng.tiered_stats()
+
+    rng = np.random.default_rng(seed)
+    sources = rng.integers(0, pg.num_vertices, size=4)
+    ranks_res = pagerank(res_eng, iters)
+    ranks_tier = pagerank(tier_eng, iters)
+    lv_res, st_res = bfs_batched(res_eng, sources)
+    lv_tier, st_tier = bfs_batched(tier_eng, sources)
+    bitwise = bool(np.array_equal(ranks_res, ranks_tier)
+                   and np.array_equal(lv_res, lv_tier)
+                   and np.array_equal(st_res, st_tier))
+
+    # warm runs above compiled every window; repeats must add no entries
+    entries0 = tier_eng.tiered_cache_entries()
+    pagerank(tier_eng, iters)
+    bfs_batched(tier_eng, rng.integers(0, pg.num_vertices, size=4))
+    retraces = tier_eng.tiered_cache_entries() - entries0
+
+    def wall(fn, iters_=3):
+        times = []
+        for _ in range(iters_):
+            t0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - t0)
+        return sorted(times)[len(times) // 2]
+
+    resident_s = wall(lambda: pagerank(res_eng, iters))
+    tiered_s = wall(lambda: pagerank(tier_eng, iters))
+
+    residency = tier_eng.residency_bytes()
+    return dict(
+        scale=scale, parts=parts, strategy=strategy, algorithm="pagerank",
+        combine="sum", mode="oocore", block_e=block_e, backend=backend,
+        win_blocks=win_blocks, v_max=pg.v_max,
+        hbm_budget=budget, bitwise=int(bitwise), retraces=int(retraces),
+        resident_ms=resident_s * 1e3, tiered_ms=tiered_s * 1e3,
+        stream_penalty=tiered_s / max(resident_s, 1e-12),
+        residency_hbm_bytes=int(residency["hbm_bytes"]),
+        residency_host_bytes=int(residency["host_bytes"]),
+        **stats)
 
 
 def bench_distributed_cell(pg, scale: int, parts: int, strategy: str,
@@ -634,6 +711,18 @@ def main(argv=None) -> int:
                          "session q/s and p99-under-load vs fixed-batch "
                          "drain at the same Q, with the bitwise-parity, "
                          "zero-retrace and refill-count guards")
+    ap.add_argument("--oocore", action="store_true",
+                    help="add the out-of-core column: tiered engine with a "
+                         "probed HBM budget forcing half the partitions "
+                         "host-tier vs the all-resident engine, with the "
+                         "bitwise-parity, under-budget and zero-retrace "
+                         "guards")
+    ap.add_argument("--oocore-backend", default="fused",
+                    choices=("reference", "fused", "hybrid"),
+                    help="engine backend for the --oocore column")
+    ap.add_argument("--win-blocks", type=int, default=8,
+                    help="double-buffered window size (edge blocks) for the "
+                         "--oocore column")
     ap.add_argument("--distributed", action="store_true",
                     help="add multi-device cells (sharded fused vs sharded "
                          "hybrid + exchanged-bytes accounting)")
@@ -778,6 +867,47 @@ def main(argv=None) -> int:
                         f"mutations {strategy}: incremental refresh ran "
                         f"{mrec['incremental_steps']} supersteps, more "
                         f"than cold {mrec['cold_steps']}")
+            if args.oocore:
+                orec = bench_oocore_cell(pg, scale, args.parts, strategy,
+                                         args.seed, args.block_e,
+                                         win_blocks=args.win_blocks,
+                                         backend=args.oocore_backend)
+                results.append(orec)
+                print(f"scale={scale} {strategy:>4} oocore: "
+                      f"hbm={orec['hbm_resident_bytes']}B "
+                      f"(budget {orec['hbm_budget']}B) "
+                      f"host={orec['host_bytes']}B, streams "
+                      f"{orec['streamed_bytes_per_superstep']}B/superstep "
+                      f"over {orec['window_count']} windows "
+                      f"({orec['num_hot']} hot/{orec['num_cold']} cold); "
+                      f"tiered {orec['tiered_ms']:.1f} vs resident "
+                      f"{orec['resident_ms']:.1f} ms "
+                      f"({orec['stream_penalty']:.2f}x), "
+                      f"bitwise={orec['bitwise']} "
+                      f"retraces={orec['retraces']}", flush=True)
+                # Out-of-core contract, deterministic halves: the streamed
+                # fixpoint is bitwise identical to the resident one, the
+                # arena stays under the forced budget, the cell genuinely
+                # streams (>= 1 host-tier partition), and steady-state
+                # repeats add no compile-cache entries.
+                if not orec["bitwise"]:
+                    failures.append(
+                        f"oocore {strategy}: streamed fixpoint diverged "
+                        f"from the resident engine (PageRank/BFS bitwise)")
+                if orec["hbm_resident_bytes"] > orec["hbm_budget"]:
+                    failures.append(
+                        f"oocore {strategy}: arena hbm "
+                        f"{orec['hbm_resident_bytes']}B exceeds the "
+                        f"budget {orec['hbm_budget']}B")
+                if orec["num_cold"] < 1:
+                    failures.append(
+                        f"oocore {strategy}: no host-tier partitions — "
+                        f"the cell never streamed")
+                if orec["retraces"] != 0:
+                    failures.append(
+                        f"oocore {strategy}: {orec['retraces']} "
+                        f"compile-cache entries added across repeat runs "
+                        f"— the window schedule is no longer shape-stable")
             if args.checkpoint:
                 crec = bench_checkpoint_cell(pg, scale, args.parts, strategy,
                                              args.seed,

@@ -73,7 +73,9 @@ def main(argv=None) -> int:
                     default=["exchanged_bytes", "fused_temp_bytes",
                              "retraces", "incremental_steps", "cold_steps",
                              "quarantined", "chunk_retraces", "refills",
-                             "windows", "monitors_fired"],
+                             "windows", "monitors_fired",
+                             "hbm_resident_bytes", "host_bytes",
+                             "streamed_bytes_per_superstep", "window_count"],
                     help="deterministic metrics gated at --byte-threshold "
                          "regardless of timing noise (retraces must stay "
                          "0: any growth fails; the mutation column's "
@@ -81,7 +83,10 @@ def main(argv=None) -> int:
                          "clean-path quarantine/retrace counts, and the "
                          "continuous column's refill/window counts are "
                          "superstep-indexed and deterministic too; the "
-                         "verify column's monitor-fire count must stay 0)")
+                         "verify column's monitor-fire count must stay 0; "
+                         "the oocore column's arena/stream byte fields and "
+                         "window count are plan-deterministic for a pinned "
+                         "seed)")
     ap.add_argument("--byte-threshold", type=float, default=0.20,
                     help="max allowed fractional growth in --byte-fields")
     args = ap.parse_args(argv)

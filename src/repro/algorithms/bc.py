@@ -29,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bsp import (MIN, SUM, BSPEngine, EdgeMessage, VertexProgram,
-                            gather_src)
+                            batch_state, gather_src, unbatch_state)
 from repro.core.graph import CSRGraph
 
 
@@ -138,7 +138,7 @@ def betweenness_centrality_batched(engine: BSPEngine,
     dist0 = multi_source_state(pg, sources)
     sigma0 = multi_source_state(pg, sources, fill=0.0, value=1.0)
 
-    fwd_state, fwd_steps = engine.run_batched(FORWARD_PROGRAM, {
+    fwd_state, fwd_steps = engine.execute(FORWARD_PROGRAM, {
         "dist": jnp.asarray(dist0), "sigma": jnp.asarray(sigma0)})
 
     dist = np.asarray(fwd_state["dist"])                   # [Q, P, V]
@@ -153,8 +153,7 @@ def betweenness_centrality_batched(engine: BSPEngine,
             np.broadcast_to(max_level[:, None].astype(np.float32), (q, P))),
     }
     if float(max_level.max(initial=0.0)) >= 2.0:
-        bwd_state, bwd_steps = engine.run_batched(BACKWARD_PROGRAM,
-                                                  bwd_state)
+        bwd_state, bwd_steps = engine.execute(BACKWARD_PROGRAM, bwd_state)
         bwd_steps = np.asarray(bwd_steps)
     else:
         bwd_steps = np.zeros(q, dtype=np.int32)
@@ -176,8 +175,9 @@ def betweenness_centrality(engine: BSPEngine,
     sl = int(pg.assignment.local_id[source])
     dist0[sp, sl], sigma0[sp, sl] = 0.0, 1.0
 
-    fwd_state, fwd_steps = engine.run(FORWARD_PROGRAM, {
-        "dist": jnp.asarray(dist0), "sigma": jnp.asarray(sigma0)})
+    fwd_b, fwd_sq = engine.execute(FORWARD_PROGRAM, batch_state({
+        "dist": jnp.asarray(dist0), "sigma": jnp.asarray(sigma0)}))
+    fwd_state, fwd_steps = unbatch_state(fwd_b), fwd_sq[0]
 
     dist = np.asarray(fwd_state["dist"])
     finite = dist[np.isfinite(dist)]
@@ -190,7 +190,9 @@ def betweenness_centrality(engine: BSPEngine,
         "max_level": jnp.full((P,), max_level, dtype=jnp.float32),
     }
     if max_level >= 2.0:
-        bwd_state, bwd_steps = engine.run(BACKWARD_PROGRAM, bwd_state)
+        bwd_b, bwd_sq = engine.execute(BACKWARD_PROGRAM,
+                                       batch_state(bwd_state))
+        bwd_state, bwd_steps = unbatch_state(bwd_b), bwd_sq[0]
     else:
         bwd_steps = 0
     bc = pg.gather_global(np.asarray(bwd_state["bc"]))

@@ -136,8 +136,8 @@ def bfs_batched(engine: BSPEngine,
     """
     pg = engine.pg
     level0 = multi_source_state(pg, sources)
-    state, steps = engine.run_batched(BFS_PROGRAM,
-                                      {"level": jnp.asarray(level0)})
+    state, steps = engine.execute(BFS_PROGRAM,
+                                  {"level": jnp.asarray(level0)})
     return gather_batch(pg, state["level"]), np.asarray(steps)
 
 
@@ -163,8 +163,8 @@ def bfs_incremental(engine: BSPEngine, prev_levels: np.ndarray,
     prev = np.atleast_2d(np.asarray(prev_levels, dtype=np.float32))
     state = {"level": jnp.asarray(np.stack(
         [pg.scatter_global(row, np.inf) for row in prev]))}
-    st, steps = engine.run_incremental(BFS_PROGRAM, state,
-                                       pg.scatter_dirty(dirty_global))
+    st, steps = engine.execute(BFS_PROGRAM, state,
+                               incremental=pg.scatter_dirty(dirty_global))
     return gather_batch(pg, st["level"]), np.asarray(steps)
 
 

@@ -14,7 +14,7 @@ import numpy as np
 import dataclasses
 
 from repro.core.bsp import (MIN, BSPEngine, EdgeMessage, IncrementalForm,
-                            VertexProgram, gather_src)
+                            VertexProgram, batch_state, gather_src)
 from repro.core.graph import CSRGraph, from_edge_list
 
 INF = jnp.float32(jnp.inf)
@@ -81,10 +81,10 @@ def connected_components(engine: BSPEngine) -> Tuple[np.ndarray, int]:
     gids = np.arange(pg.num_vertices, dtype=np.float32)
     label0 = pg.scatter_global(gids, np.inf)
     active0 = pg.vertex_mask.copy()
-    state, steps = engine.run(CC_PROGRAM, {
+    state, steps = engine.execute(CC_PROGRAM, batch_state({
         "label": jnp.asarray(label0, dtype=jnp.float32),
-        "active": jnp.asarray(active0)})
-    return pg.gather_global(np.asarray(state["label"])), int(steps)
+        "active": jnp.asarray(active0)}))
+    return pg.gather_global(np.asarray(state["label"][0])), int(steps[0])
 
 
 def cc_incremental(engine: BSPEngine, prev_labels: np.ndarray,
@@ -94,8 +94,8 @@ def cc_incremental(engine: BSPEngine, prev_labels: np.ndarray,
     pg = engine.pg
     prev = np.asarray(prev_labels, dtype=np.float32)
     state = {"label": jnp.asarray(pg.scatter_global(prev, np.inf))[None]}
-    st, steps = engine.run_incremental(CC_PROGRAM, state,
-                                       pg.scatter_dirty(dirty_global))
+    st, steps = engine.execute(CC_PROGRAM, state,
+                               incremental=pg.scatter_dirty(dirty_global))
     return pg.gather_global(np.asarray(st["label"][0])), int(steps[0])
 
 

@@ -16,11 +16,13 @@ from __future__ import annotations
 import dataclasses
 import functools
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bsp import (SUM, BSPEngine, EdgeMessage, VertexProgram,
-                            gather_src)
+                            batch_state, gather_src, unbatch_state)
+from repro.kernels import ops as kops
 
 DAMPING = 0.85
 
@@ -35,12 +37,17 @@ def _edge_msg_fn(vals, weight, step, consts):
     return vals["rank"] * vals["inv_deg"]
 
 
+@functools.lru_cache(maxsize=None)
 def make_pagerank_program(num_vertices: int, damping: float = DAMPING,
                           max_steps: int = 1 << 30) -> VertexProgram:
     delta = (1.0 - damping) / num_vertices
 
     def apply_fn(state, acc, step):
-        rank = delta + damping * acc
+        # The barrier pins mul-then-add rounding: XLA is otherwise free to
+        # contract ``delta + damping * acc`` into an FMA, and it decides
+        # per fusion context — the resident while_loop body and the
+        # out-of-core streamed superstep would then disagree by 1 ulp.
+        rank = delta + kops.pin(damping * acc)
         rank = jnp.where(state["mask"], rank, 0.0)
         return dict(state, rank=rank), jnp.bool_(True)
 
@@ -67,7 +74,9 @@ def pagerank(engine: BSPEngine, num_iterations: int = 20,
              damping: float = DAMPING) -> np.ndarray:
     pg = engine.pg
     program = make_pagerank_program(pg.num_vertices, damping)
-    state = engine.run_fixed(program, num_iterations, initial_state(pg))
+    state = unbatch_state(engine.execute(program,
+                                         batch_state(initial_state(pg)),
+                                         num_steps=num_iterations))
     return pg.gather_global(np.asarray(state["rank"]))
 
 
@@ -131,8 +140,7 @@ def personalized_pagerank(engine: BSPEngine, reset,
                                     (q,) + base["inv_deg"].shape),
         "mask": jnp.broadcast_to(base["mask"], (q,) + base["mask"].shape),
     }
-    out, _ = engine.run_batched(_ppr_program(damping, num_iterations),
-                                state)
+    out, _ = engine.execute(_ppr_program(damping, num_iterations), state)
     return gather_batch(pg, out["rank"])
 
 
@@ -166,8 +174,8 @@ def pagerank_distributed(engine, num_iterations: int = 20,
     program = dataclasses.replace(
         program,
         apply_fn=_never_finished(program.apply_fn))
-    state, _ = engine.run(program, initial_state(pg))
-    return pg.gather_global(np.asarray(state["rank"]))
+    state_b, _ = engine.execute(program, batch_state(initial_state(pg)))
+    return pg.gather_global(np.asarray(unbatch_state(state_b)["rank"]))
 
 
 def _never_finished(apply_fn):

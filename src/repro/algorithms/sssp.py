@@ -93,7 +93,7 @@ def sssp_batched(engine: BSPEngine,
                          "(graph.with_uniform_weights)")
     dist0 = multi_source_state(pg, sources)
     active0 = np.isfinite(dist0)
-    state, steps = engine.run_batched(SSSP_PROGRAM, {
+    state, steps = engine.execute(SSSP_PROGRAM, {
         "dist": jnp.asarray(dist0), "active": jnp.asarray(active0)})
     return gather_batch(pg, state["dist"]), np.asarray(steps)
 
@@ -114,8 +114,8 @@ def sssp_incremental(engine: BSPEngine, prev_dists: np.ndarray,
     prev = np.atleast_2d(np.asarray(prev_dists, dtype=np.float32))
     state = {"dist": jnp.asarray(np.stack(
         [pg.scatter_global(row, np.inf) for row in prev]))}
-    st, steps = engine.run_incremental(SSSP_PROGRAM, state,
-                                       pg.scatter_dirty(dirty_global))
+    st, steps = engine.execute(SSSP_PROGRAM, state,
+                               incremental=pg.scatter_dirty(dirty_global))
     return gather_batch(pg, st["dist"]), np.asarray(steps)
 
 

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Callable, Optional, Tuple
 
 import jax
@@ -862,6 +863,273 @@ def _run_dyn_hybrid_chunk_jit(program: VertexProgram, cfg: _HybridCfg,
                              steps_q)
 
 
+# ---------------------------------------------------------------------------
+# Tiered (out-of-core) execution: host-resident cold partitions streamed
+# through the superstep in double-buffered clean-cut windows (docs/memory.md)
+# ---------------------------------------------------------------------------
+
+def _cache_entries_of(fn) -> int:
+    getter = getattr(fn, "_cache_size", None)
+    return int(getter()) if getter is not None else 0
+
+
+def _ident_of(combine: str):
+    return jnp.float32(jnp.inf) if combine == MIN else jnp.float32(0.0)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _tiered_hot_jit(dims: _Dims, program: VertexProgram,
+                    fused_cfg: Optional[FusedConfig], hot_idx, edges_hot,
+                    dyn_hot, state: BatchedState, step: Array) -> Array:
+    """Identity-initialized [Q, P, seg] accumulator with the hot (resident)
+    partitions' compute folded in.
+
+    Per-(query, partition) segment offsets make the big resident reduce
+    row-independent, so running the same compute on the hot row *subset* and
+    scattering into the full accumulator reproduces those rows bitwise; cold
+    rows stay at the reduction identity until their windows stream through.
+    ``dyn_hot`` carries the hot rows' tombstone/delta overlay (the same
+    folding ``_superstep`` applies, sliced to the resident rows).
+    """
+    q = num_queries(state)
+    acc = jnp.full((q, dims.num_parts, dims.seg),
+                   _ident_of(program.combine), jnp.float32)
+    if edges_hot is None:
+        return acc
+    state_h = jax.tree.map(lambda x: x[:, hot_idx], state)
+    edges = edges_hot
+    if dyn_hot is not None:
+        edges = dict(edges)
+        tomb = dyn_hot["tomb"]
+        edges["dst_ext"] = jnp.where(tomb, dims.v_max, edges["dst_ext"])
+        if "blk_mask" in edges:
+            pad = edges["blk_mask"].shape[1] - tomb.shape[1]
+            alive = jnp.pad(jnp.logical_not(tomb), ((0, 0), (0, pad)))
+            edges["blk_mask"] = edges["blk_mask"] * alive.astype(
+                edges["blk_mask"].dtype)
+    if fused_cfg is not None and program.edge_msg is not None:
+        acc_h = _compute_fused(dims, program, edges, fused_cfg, state_h, step)
+    else:
+        acc_h = _compute_reference(dims, program, edges, state_h, step)
+    if dyn_hot is not None:
+        d_edges = dict(src=dyn_hot["d_src"], dst_ext=dyn_hot["d_dst_ext"])
+        if "d_weight" in dyn_hot:
+            d_edges["weight"] = dyn_hot["d_weight"]
+        d_acc = _compute_reference(dims, program, d_edges, state_h, step)
+        acc_h = _COMBINE[program.combine](acc_h, d_acc)
+    return acc.at[:, hot_idx].set(acc_h)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(4,))
+def _tiered_window_jit(dims: _Dims, program: VertexProgram,
+                       fused_cfg: Optional[FusedConfig], p: Array,
+                       acc: Array, win: dict, state: BatchedState,
+                       step: Array) -> Array:
+    """Fold one streamed cold-partition window into accumulator row ``p``.
+
+    ``p`` is a *traced* scalar and every window of a schedule has the same
+    fixed shapes (short windows arrive sink-padded), so one compiled trace
+    serves the whole stream — the steady state never retraces.  ``acc`` is
+    donated: the in-flight double buffer is the only extra device memory.
+    Clean-cut windows mean each segment's real edges live in exactly one
+    window; every other window contributes the reduction identity, which
+    the cross-window combine absorbs bitwise.
+    """
+    state_p = jax.tree.map(
+        lambda x: jax.lax.dynamic_slice_in_dim(x, p, 1, axis=1), state)
+    edges = {k: v[None] for k, v in win.items() if k != "tomb"}
+    if "tomb" in win:
+        tomb = win["tomb"][None]
+        edges["dst_ext"] = jnp.where(tomb, dims.v_max, edges["dst_ext"])
+        if "blk_mask" in edges:
+            edges["blk_mask"] = edges["blk_mask"] * jnp.logical_not(
+                tomb).astype(edges["blk_mask"].dtype)
+    if fused_cfg is not None and program.edge_msg is not None:
+        acc_w = _compute_fused(dims, program, edges, fused_cfg, state_p, step)
+    else:
+        acc_w = _compute_reference(dims, program, edges, state_p, step)
+    row = jax.lax.dynamic_slice_in_dim(acc, p, 1, axis=1)
+    row = _COMBINE[program.combine](row, acc_w)
+    return jax.lax.dynamic_update_slice_in_dim(acc, row, p, axis=1)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(2,))
+def _tiered_apply_jit(dims: _Dims, program: VertexProgram, acc: Array,
+                      inbox_dst: Array, state: BatchedState, step: Array,
+                      fin: Array, steps_q: Array):
+    """Exchange + scatter + apply on a fully-assembled accumulator: the tail
+    of ``_superstep`` plus ``_run_batched_loop``'s freeze/vote body, so one
+    host-driven tiered superstep is carry-for-carry identical to one
+    resident loop iteration."""
+    combine = program.combine
+    seg_op = _SEGMENT_OP[combine]
+    q, pl = acc.shape[0], dims.num_parts
+    local_acc = acc[:, :, : dims.v_max]
+    outbox = acc[:, :, dims.v_max + 1:].reshape(q, pl, dims.num_parts,
+                                                dims.o_max)
+    inbox = BSPEngine._exchange(outbox)
+    offs = (jnp.arange(q * pl, dtype=jnp.int32)
+            * (dims.v_max + 1)).reshape(q, pl, 1, 1)
+    in_ids = inbox_dst[None] + offs
+    racc = seg_op(inbox.ravel(), in_ids.ravel(),
+                  num_segments=q * pl * (dims.v_max + 1))
+    racc = racc.reshape(q, pl, dims.v_max + 1)[:, :, : dims.v_max]
+    total = _COMBINE[combine](local_acc, racc)
+    new_state, vote = jax.vmap(program.apply_fn,
+                               in_axes=(0, 0, None))(state, total, step)
+
+    def freeze(new, old):
+        return jnp.where(fin.reshape(fin.shape + (1,) * (new.ndim - 1)),
+                         old, new)
+
+    new_state = jax.tree.map(freeze, new_state, state)
+    steps_q = steps_q + jnp.logical_not(fin).astype(jnp.int32)
+    fin = jnp.logical_or(fin, vote)
+    return new_state, fin, steps_q
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _tiered_hyb_hot_jit(program: VertexProgram, cfg: _HybridCfg, slot,
+                        col_hot, val_hot, rows_hot, state: BatchedState,
+                        step: Array):
+    """Hybrid flavor: message vector + identity-initialized per-row ELL
+    accumulator with the resident (hot-partition) rows' reductions
+    scattered in.  A whole ELL row is atomic — its kmax-entry reduce runs
+    wherever the row lives — so row-level tiering needs no clean-cut
+    analysis; the dense MXU block always stays resident."""
+    from repro.core.hybrid import add_identity
+    from repro.kernels.ops import ell_spmv_op
+
+    spec = program.edge_msg
+    ident = add_identity(cfg.semiring)
+    q = state[spec.gather[0]].shape[0]
+    vals = {k: state[k].astype(jnp.float32).reshape(q, -1)[:, slot]
+            for k in spec.gather}
+    consts = {c: state[c][:, :1].astype(jnp.float32) for c in spec.consts}
+    w_ident = None
+    if spec.use_weight:
+        w_ident = jnp.float32(0.0 if spec.weight_op == "add" else 1.0)
+    x = spec.fn(vals, w_ident, step.astype(jnp.float32),
+                consts).astype(jnp.float32)
+    xs = jnp.concatenate([x, jnp.full((q, 1), ident, x.dtype)], axis=1)
+    y = jnp.full((q, cfg.num_vertices + 1), ident, jnp.float32)
+    if col_hot is not None:
+        y_hot = ell_spmv_op(col_hot, val_hot, xs, semiring=cfg.semiring,
+                            interpret=cfg.interpret)
+        y = y.at[:, rows_hot].set(y_hot)
+    return xs, y
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def _tiered_hyb_win_jit(cfg: _HybridCfg, y: Array, col_w, val_w, rows_w,
+                        xs: Array) -> Array:
+    """One streamed ELL row window: reduce the window's rows, scatter-set
+    them into the per-row accumulator (pad rows land on the sink column)."""
+    from repro.kernels.ops import ell_spmv_op
+
+    y_w = ell_spmv_op(col_w, val_w, xs, semiring=cfg.semiring,
+                      interpret=cfg.interpret)
+    return y.at[:, rows_w].set(y_w)
+
+
+def _make_tiered_hyb_acc(cfg: _HybridCfg, dense, hid):
+    """Build the dense-block-combine + layout-gather jit for one tiered
+    hybrid binding: mirrors ``hybrid_spmv``'s ELL-then-dense order and
+    returns the [Q, P, v_max] accumulator.
+
+    ``dense``/``hid`` are deliberately *closed over as numpy* so they enter
+    the trace as constants, exactly as the resident ``_superstep_hybrid``
+    trace sees them: a constant adjacency operand lets XLA pick the same
+    gemm layout (and hence the same accumulation order) in both
+    compilations — passed as device parameters instead, the dot rounds
+    1 ulp differently and streamed-vs-resident bitwise parity breaks."""
+    from repro.core.hybrid import add_identity
+    from repro.kernels import ops as kops
+
+    ident = add_identity(cfg.semiring)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def acc_fn(y: Array, xs: Array) -> Array:
+        q = y.shape[0]
+        yv = y[:, : cfg.num_vertices]
+        if cfg.k_dense:
+            # Barriers matched with ``hybrid_spmv``'s dense stage: both
+            # paths compile the dot as the same isolated subgraph.
+            x = jax.lax.optimization_barrier(xs[:, : cfg.k_dense])
+            if cfg.semiring == "plus_times":
+                yh = jax.lax.optimization_barrier(
+                    kops.dense_spmv_op(x, dense, interpret=cfg.interpret))
+                yv = yv.at[:, : cfg.k_dense].add(yh)
+            else:
+                yh = jax.lax.optimization_barrier(
+                    kops.dense_spmv_minplus_op(x, dense,
+                                               interpret=cfg.interpret))
+                yv = yv.at[:, : cfg.k_dense].min(yh)
+        y_ext = jnp.concatenate([yv, jnp.full((q, 1), ident, yv.dtype)],
+                                axis=1)
+        return y_ext[:, hid]
+
+    return acc_fn
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _tiered_hyb_apply_jit(program: VertexProgram, acc: Array,
+                          state: BatchedState, step: Array, fin: Array,
+                          steps_q: Array):
+    """Apply + the batched loop's freeze/vote body.
+
+    ``acc`` arrives as a jit *parameter* on purpose: when the accumulator
+    assembly shares a graph with ``apply_fn``, XLA's FMA-contraction choice
+    for expressions like ``delta + damping * acc`` can differ from the
+    resident compilation's by 1 ulp — the parameter boundary pins the
+    rounding the resident path exhibits."""
+    new_state, vote = jax.vmap(program.apply_fn,
+                               in_axes=(0, 0, None))(state, acc, step)
+
+    def freeze(new, old):
+        return jnp.where(fin.reshape(fin.shape + (1,) * (new.ndim - 1)),
+                         old, new)
+
+    new_state = jax.tree.map(freeze, new_state, state)
+    steps_q = steps_q + jnp.logical_not(fin).astype(jnp.int32)
+    fin = jnp.logical_or(fin, vote)
+    return new_state, fin, steps_q
+
+
+_TIERED_JITS = (_tiered_hot_jit, _tiered_window_jit, _tiered_apply_jit,
+                _tiered_hyb_hot_jit, _tiered_hyb_win_jit,
+                _tiered_hyb_apply_jit)
+
+
+def tiered_cache_entries() -> int:
+    """Total compile-cache entries across the tiered-path jits (the
+    zero-steady-state-retrace gates diff this across supersteps)."""
+    return sum(_cache_entries_of(f) for f in _TIERED_JITS)
+
+
+# ---------------------------------------------------------------------------
+# one-shot DeprecationWarnings for the pre-execute() aliases
+# ---------------------------------------------------------------------------
+
+_ALIAS_WARNED: set = set()
+
+
+def _warn_alias(engine, name: str, replacement: str) -> None:
+    """One-shot DeprecationWarning per alias name, suppressed while
+    ``execute()`` itself dispatches through the alias (the jitted class
+    attributes must stay the methods they are — their compile cache is the
+    serving contract's retrace gate — so the warning rides *inside* them,
+    gated on the engine's ``_alias_warn_ok`` flag)."""
+    if not getattr(engine, "_alias_warn_ok", True):
+        return
+    if name in _ALIAS_WARNED:
+        return
+    _ALIAS_WARNED.add(name)
+    warnings.warn(
+        f"BSPEngine.{name}() is a deprecated alias; call "
+        f"engine.{replacement} instead", DeprecationWarning, stacklevel=3)
+
+
 REFERENCE = "reference"
 FUSED = "fused"
 HYBRID = "hybrid"
@@ -897,7 +1165,8 @@ class BSPEngine:
                  hybrid_k_dense: Optional[int] = None,
                  pull_threshold: float = 0.05,
                  direction_switch: bool = True,
-                 dynamic_ell_spare: int = 8):
+                 dynamic_ell_spare: int = 8,
+                 tiered=None, win_blocks: int = 8):
         from repro.core.dynamic import DynamicGraph
 
         if backend is None:
@@ -915,6 +1184,12 @@ class BSPEngine:
         self._pull_threshold = pull_threshold
         self._direction_switch = direction_switch
         self._dyn_ell_spare = dynamic_ell_spare
+        # Out-of-core tiering: ``tiered`` is an HBM byte budget (int) or a
+        # prebuilt partition.TierPlan; None keeps everything resident.
+        self._tiered_req = tiered
+        self._win_blocks = win_blocks
+        self.tier_plan = None
+        self._alias_warn_ok = True
         # One guard per engine: jitted chunk windows arm it with the traced
         # poison operand and accumulate exchange-checksum mismatches.
         self._guard = _ExchangeGuard()
@@ -932,6 +1207,13 @@ class BSPEngine:
             self.dg = pg
             self._dyn_version = pg.version
             pg = pg.pg
+        if (self._tiered_req is not None and self.backend == HYBRID
+                and self.dg is not None):
+            raise ValueError(
+                "tiered= with backend='hybrid' does not support dynamic "
+                "graphs: delta slots stream with their base edge blocks, "
+                "which the row-tiered ELL split has no blocks for; use "
+                "backend='reference' or 'fused' for tiered dynamic runs")
         self._bind(pg)
         if self.dg is not None:
             # Instance-level dispatch: the class attributes stay the jitted
@@ -939,6 +1221,13 @@ class BSPEngine:
             # of the serving contract); a dynamic engine shadows them.
             self.run_batched = self._run_batched_dyn
             self.run_fixed_batched = self._run_fixed_batched_dyn
+        if self.tier_plan is not None:
+            # Tiered shadows go on *after* the dynamic ones so tiered
+            # dispatch wins; the tiered loop folds the dynamic payload in
+            # itself (hot rows sliced on device, cold tombstones/deltas
+            # streamed with their partitions' windows).
+            self.run_batched = self._run_batched_tiered
+            self.run_fixed_batched = self._run_fixed_batched_tiered
 
     @property
     def pg(self) -> PartitionedGraph:
@@ -991,6 +1280,106 @@ class BSPEngine:
                     "re-partition with core.partition.partition()")
             self._hybrid_plan = self._plan_hybrid(self._hybrid_k_dense,
                                                   block_e)
+        self._bind_tiered(pg)
+
+    def _bind_tiered(self, pg: PartitionedGraph) -> None:
+        """Out-of-core residency: split partitions across the HBM/host tiers
+        and stage the cold ones as host window arenas.
+
+        Hot partitions' edge (and block) arrays go on device once, exactly
+        like the resident dicts; each cold partition's edges become a list
+        of clean-cut windows — fixed-shape numpy dicts the run loop
+        ``jax.device_put``s through a double buffer.  Window padding is the
+        per-row segment sink (reference) / masked-out blocks with a sink
+        base (fused), so a short window reduces to exactly its real edges.
+        The hybrid backend tiers at ELL-row granularity instead and keeps
+        its normal binding (built lazily per program in
+        ``_hybrid_tiered_for``)."""
+        from repro.core.partition import TierPlan, build_tier_plan
+
+        self.tier_plan = None
+        self._hyb_tier_cache: dict = {}
+        if self._tiered_req is None:
+            return
+        if isinstance(self._tiered_req, TierPlan):
+            self.tier_plan = self._tiered_req
+        else:
+            self.tier_plan = build_tier_plan(
+                pg, int(self._tiered_req), block_e=self._block_e,
+                win_blocks=self._win_blocks,
+                fused=(self.backend != REFERENCE), dynamic=self.dg)
+        plan = self.tier_plan
+        hot = np.asarray(plan.hot, dtype=np.int64)
+        self._tier_hot_idx = jnp.asarray(hot.astype(np.int32))
+        self._tier_dev: dict = {}
+        self._tier_arena: dict = {}
+        self._tier_dims: dict = {}
+        self._tier_inbox: dict = {}
+        for use_rev, ea, blk, sched in (
+                (False, pg.fwd, self._fwd_blk, plan.fwd),
+                (True, pg.rev, self._rev_blk, plan.rev)):
+            if ea is None or sched is None:
+                continue
+            dims = _Dims(pg.num_parts, pg.v_max, ea.e_max, ea.o_max)
+            self._tier_dims[use_rev] = dims
+            self._tier_inbox[use_rev] = jnp.asarray(ea.inbox_dst)
+
+            d = None
+            if len(hot):
+                d = dict(src=jnp.asarray(ea.src[hot]),
+                         dst_ext=jnp.asarray(ea.dst_ext[hot]))
+                if ea.weight is not None:
+                    d["weight"] = jnp.asarray(ea.weight[hot])
+                if blk is not None:
+                    d["blk_src"] = jnp.asarray(blk.src[hot])
+                    d["blk_local"] = jnp.asarray(blk.local[hot])
+                    d["blk_mask"] = jnp.asarray(blk.mask[hot])
+                    d["blk_base"] = jnp.asarray(blk.base[hot])
+                    if blk.weight is not None:
+                        d["weight_blk"] = jnp.asarray(blk.weight[hot])
+            self._tier_dev[use_rev] = d
+
+            win_e = sched.win_e
+            arena = []
+            for p, st, cnt in zip(sched.part, sched.start, sched.count):
+                p, st, cnt = int(p), int(st), int(cnt)
+                src = np.zeros(win_e, np.int32)
+                src[:cnt] = ea.src[p, st:st + cnt]
+                dst = np.full(win_e, pg.v_max, np.int32)
+                dst[:cnt] = ea.dst_ext[p, st:st + cnt]
+                w = dict(src=src, dst_ext=dst)
+                if ea.weight is not None:
+                    wt = np.zeros(win_e, np.float32)
+                    wt[:cnt] = ea.weight[p, st:st + cnt]
+                    w["weight"] = wt
+                if blk is not None:
+                    # Slices past this window's real blocks would alias the
+                    # *next* window's real edges (the flat block arrays are
+                    # contiguous per partition) — pad with masked-out zeros
+                    # and sink bases instead of slicing blindly.
+                    for key, arr in (("blk_src", blk.src),
+                                     ("blk_local", blk.local),
+                                     ("blk_mask", blk.mask)):
+                        a = np.zeros(win_e, np.int32)
+                        a[:cnt] = arr[p, st:st + cnt]
+                        w[key] = a
+                    nb = -(-cnt // sched.block_e)
+                    b0 = st // sched.block_e
+                    base = np.full(sched.win_blocks, dims.seg, np.int32)
+                    base[:nb] = blk.base[p, b0:b0 + nb]
+                    w["blk_base"] = base
+                    if blk.weight is not None:
+                        a = np.zeros(win_e, np.float32)
+                        a[:cnt] = blk.weight[p, st:st + cnt]
+                        w["weight_blk"] = a
+                arena.append((p, w))
+            self._tier_arena[use_rev] = arena
+        if self.backend != HYBRID:
+            # Cold edges have no resident dict; edges_for raises the fix.
+            # (The hybrid backend keeps its binding — its eligible programs
+            # tier at ELL-row granularity, and ineligible ones stream the
+            # reference-flavor arenas built above.)
+            self._fwd = self._rev = None
 
     # ---------------------- hybrid backend plumbing ------------------------
 
@@ -1124,6 +1513,12 @@ class BSPEngine:
         return fin
 
     def edges_for(self, program: VertexProgram) -> dict:
+        if self.tier_plan is not None and self.backend != HYBRID:
+            raise ValueError(
+                "engine is tiered (out-of-core): cold partitions' edges "
+                "live in host window arenas, not one resident edges dict; "
+                "run through execute()/run_batched (the streaming path) or "
+                "rebuild the engine without tiered=")
         if program.use_reverse:
             if self._rev is None:
                 raise ValueError("program needs reverse edges; partition with "
@@ -1209,6 +1604,12 @@ class BSPEngine:
                 f"for run-to-convergence).  Fixed-step chunking is not a "
                 f"mode: restate the program with a never-voting apply "
                 f"(see _fixed_step_program) and pass chunk= alone.")
+        if modes["chunk"] and self.tier_plan is not None:
+            raise ValueError(
+                "chunked/continuous mode is not supported on a tiered "
+                "engine: chunk windows assume resident edge dicts; run "
+                "tiered convergence (drop chunk=) or build the engine "
+                "without tiered=")
         if not modes["chunk"]:
             chunked_only = [
                 name for name, val in (("on_chunk", on_chunk),
@@ -1224,16 +1625,21 @@ class BSPEngine:
                     f"chunk= — boundary hooks and resume carries only "
                     f"exist in chunked mode; pass chunk=<supersteps per "
                     f"window> (e.g. chunk=2).")
-        if modes["num_steps"]:
-            return self.run_fixed_batched(program, num_steps, state)
-        if modes["chunk"]:
-            return self.run_batched_chunked(
-                program, state, checkpoint_every=chunk, on_chunk=on_chunk,
-                start_step=start_step, fin=fin, steps_q=steps_q,
-                max_chunks=max_chunks, chaos_ctx=chaos_ctx, monitor=monitor)
-        if modes["incremental"]:
-            return self.run_incremental(program, state, incremental)
-        return self.run_batched(program, state)
+        self._alias_warn_ok = False
+        try:
+            if modes["num_steps"]:
+                return self.run_fixed_batched(program, num_steps, state)
+            if modes["chunk"]:
+                return self.run_batched_chunked(
+                    program, state, checkpoint_every=chunk,
+                    on_chunk=on_chunk, start_step=start_step, fin=fin,
+                    steps_q=steps_q, max_chunks=max_chunks,
+                    chaos_ctx=chaos_ctx, monitor=monitor)
+            if modes["incremental"]:
+                return self.run_incremental(program, state, incremental)
+            return self.run_batched(program, state)
+        finally:
+            self._alias_warn_ok = True
 
     @functools.partial(jax.jit, static_argnums=(0, 1))
     def run_batched(self, program: VertexProgram,
@@ -1247,6 +1653,7 @@ class BSPEngine:
         Deprecated alias: prefer ``execute(program, state)`` — kept (and
         kept jitted) because this class attribute *is* the compile cache
         the serving contract introspects."""
+        _warn_alias(self, "run_batched", "execute(program, state)")
         edges = self._edges_or_none(program)
         step_fn = self._step_fn(program, edges, self._exchange,
                                 self._all_finished)
@@ -1259,7 +1666,12 @@ class BSPEngine:
         Single-query compatibility wrapper: a Q=1 slice of the batched
         path, bitwise-identical semantics to the pre-batching engine.
         Deprecated alias: prefer ``execute(program, batch_state(state))``."""
-        state, steps = self.run_batched(program, batch_state(state))
+        _warn_alias(self, "run", "execute(program, batch_state(state))")
+        ok, self._alias_warn_ok = self._alias_warn_ok, False
+        try:
+            state, steps = self.run_batched(program, batch_state(state))
+        finally:
+            self._alias_warn_ok = ok
         return unbatch_state(state), steps[0]
 
     @functools.partial(jax.jit, static_argnums=(0, 1, 2))
@@ -1267,6 +1679,8 @@ class BSPEngine:
                           state: BatchedState) -> BatchedState:
         """Fixed-iteration algorithms (PageRank), batched over queries.
         Deprecated alias: prefer ``execute(program, state, num_steps=n)``."""
+        _warn_alias(self, "run_fixed_batched",
+                    "execute(program, state, num_steps=n)")
         edges = self._edges_or_none(program)
         step_fn = self._step_fn(program, edges, self._exchange,
                                 self._all_finished)
@@ -1281,8 +1695,15 @@ class BSPEngine:
                   state: State) -> State:
         """Fixed-iteration algorithms (PageRank); Q=1 wrapper.
         Deprecated alias: prefer ``execute(..., num_steps=n)``."""
-        return unbatch_state(
-            self.run_fixed_batched(program, num_steps, batch_state(state)))
+        _warn_alias(self, "run_fixed",
+                    "execute(program, batch_state(state), num_steps=n)")
+        ok, self._alias_warn_ok = self._alias_warn_ok, False
+        try:
+            return unbatch_state(
+                self.run_fixed_batched(program, num_steps,
+                                       batch_state(state)))
+        finally:
+            self._alias_warn_ok = ok
 
     # ---------------------- checkpointable run mode ------------------------
 
@@ -1395,6 +1816,13 @@ class BSPEngine:
 
         Deprecated alias: prefer ``execute(program, state, chunk=k, ...)``.
         """
+        _warn_alias(self, "run_batched_chunked",
+                    "execute(program, state, chunk=k, ...)")
+        if self.tier_plan is not None:
+            raise ValueError(
+                "chunked/continuous mode is not supported on a tiered "
+                "engine: chunk windows assume resident edge dicts; run "
+                "tiered convergence instead or build without tiered=")
         if checkpoint_every < 1:
             raise ValueError(
                 f"checkpoint_every must be >= 1, got {checkpoint_every}")
@@ -1492,10 +1920,13 @@ class BSPEngine:
         """Dynamic-graph ``run_batched``: same contract, but every graph
         array rides as a traced argument so mutation batches never retrace
         (see ``_run_dyn_jit``)."""
+        _warn_alias(self, "run_batched", "execute(program, state)")
         return self._dispatch_dyn(program, state, fixed_steps=None)
 
     def _run_fixed_batched_dyn(self, program: VertexProgram, num_steps: int,
                                state: BatchedState) -> BatchedState:
+        _warn_alias(self, "run_fixed_batched",
+                    "execute(program, state, num_steps=n)")
         return self._dispatch_dyn(program, state, fixed_steps=num_steps)
 
     def _dispatch_dyn(self, program: VertexProgram, state: BatchedState,
@@ -1510,6 +1941,218 @@ class BSPEngine:
         return _run_dyn_jit(self.dims_for(edges), program,
                             self.fused_cfg_for(program), program.max_steps,
                             fixed_steps, edges, dyn, state)
+
+    # ---------------------- tiered (out-of-core) run path ------------------
+
+    def _run_batched_tiered(self, program: VertexProgram,
+                            state: BatchedState
+                            ) -> Tuple[BatchedState, Array]:
+        _warn_alias(self, "run_batched", "execute(program, state)")
+        return self._tiered_run(program, state)
+
+    def _run_fixed_batched_tiered(self, program: VertexProgram,
+                                  num_steps: int,
+                                  state: BatchedState) -> BatchedState:
+        _warn_alias(self, "run_fixed_batched",
+                    "execute(program, state, num_steps=n)")
+        state, _ = self._tiered_run(_fixed_step_program(program, num_steps),
+                                    state)
+        return state
+
+    def _tiered_run(self, program: VertexProgram, state: BatchedState
+                    ) -> Tuple[BatchedState, Array]:
+        """Host-driven tiered superstep loop (replaces the resident
+        ``lax.while_loop``): hot compute → double-buffered window stream →
+        exchange/scatter/apply, per superstep, until every query votes.
+
+        The three jits restate exactly one resident superstep plus the
+        batched loop's freeze/vote body, so the fixpoint is **bitwise**
+        the resident one.  All shapes (window length, block count, delta
+        tail) are static and the streamed partition id is traced — the
+        steady state never retraces (``tiered_cache_entries`` is flat
+        after the first superstep)."""
+        if self.dg is not None:
+            self._sync_dynamic()
+        if self._uses_hybrid(program):
+            return self._tiered_run_hybrid(program, state)
+        use_rev = bool(program.use_reverse)
+        if use_rev not in self._tier_dims:
+            raise ValueError("program needs reverse edges; partition with "
+                             "include_reverse=True")
+        dims = self._tier_dims[use_rev]
+        cfg = None
+        if self.fused and program.edge_msg is not None:
+            cfg = self._rev_cfg if use_rev else self._fwd_cfg
+        hot_idx = self._tier_hot_idx
+        edges_hot = self._tier_dev[use_rev]
+        arena = self._tier_arena[use_rev]
+        inbox_dst = self._tier_inbox[use_rev]
+
+        dyn_hot = None
+        stream = [(p, w, cfg) for p, w in arena]
+        if self.dg is not None:
+            dyn = self.dg.payload(use_rev)
+            inbox_dst = dyn["inbox_dst"]
+            hot_np = np.asarray(self.tier_plan.hot, np.int64)
+            if edges_hot is not None:
+                dyn_hot = dict(tomb=dyn["tomb"][hot_np],
+                               d_src=dyn["d_src"][hot_np],
+                               d_dst_ext=dyn["d_dst_ext"][hot_np])
+                if "d_weight" in dyn:
+                    dyn_hot["d_weight"] = dyn["d_weight"][hot_np]
+            # Cold mutations stream with their partitions: tombstone slices
+            # ride inside each base window; the inserted-edge delta slots
+            # become one reference-flavor window per cold partition at the
+            # end of the stream (per-segment order is base ⊕ delta — the
+            # same order the resident dynamic superstep combines in).
+            tomb_h = np.asarray(dyn["tomb"])
+            sched = self.tier_plan.rev if use_rev else self.tier_plan.fwd
+            stream = []
+            for (p, w), st, cnt in zip(arena, sched.start, sched.count):
+                st, cnt = int(st), int(cnt)
+                t = np.zeros(w["src"].shape[0], bool)
+                t[:cnt] = tomb_h[p, st:st + cnt]
+                stream.append((p, dict(w, tomb=t), cfg))
+            d_src = np.asarray(dyn["d_src"])
+            d_dst = np.asarray(dyn["d_dst_ext"])
+            d_w = np.asarray(dyn["d_weight"]) if "d_weight" in dyn else None
+            for p in np.asarray(self.tier_plan.cold, np.int64):
+                p = int(p)
+                dwin = dict(src=d_src[p], dst_ext=d_dst[p])
+                if d_w is not None:
+                    dwin["weight"] = d_w[p]
+                stream.append((p, dwin, None))
+
+        q = num_queries(state)
+        fin = jnp.zeros((q,), jnp.bool_)
+        steps_q = jnp.zeros((q,), jnp.int32)
+        step = 0
+        while True:
+            acc = _tiered_hot_jit(dims, program, cfg, hot_idx, edges_hot,
+                                  dyn_hot, state, jnp.int32(step))
+            # double buffer: block w+1's host→device put is in flight while
+            # the compute consumes block w
+            nxt = jax.device_put(stream[0][1]) if stream else None
+            for i, (p, _, wcfg) in enumerate(stream):
+                cur = nxt
+                nxt = (jax.device_put(stream[i + 1][1])
+                       if i + 1 < len(stream) else None)
+                acc = _tiered_window_jit(dims, program, wcfg, p, acc, cur,
+                                         state, jnp.int32(step))
+            state, fin, steps_q = _tiered_apply_jit(
+                dims, program, acc, inbox_dst, state, jnp.int32(step), fin,
+                steps_q)
+            step += 1
+            if step >= program.max_steps or bool(jnp.all(fin)):
+                break
+        return state, steps_q
+
+    def _hybrid_tiered_for(self, program: VertexProgram):
+        """Row-tiered ELL split for one program: hot-partition rows stay a
+        resident compacted ELL; cold rows are chunked into fixed-shape host
+        windows (sentinel-padded).  Pull-only — min over the same value
+        multiset is exact in either direction, so parity with the resident
+        (possibly push-switching) hybrid holds bitwise."""
+        from repro.kernels.ell_spmv import SEMIRINGS
+
+        key = self._hybrid_key(program)
+        if key in self._hyb_tier_cache:
+            return self._hyb_tier_cache[key]
+        cfg, arrs, _ = self._build_hybrid(program, self.pg.source,
+                                          with_push=False)
+        n = cfg.num_vertices
+        mul_ident = SEMIRINGS[cfg.semiring][3]
+        ell_col = np.asarray(arrs["ell_col"])
+        ell_val = np.asarray(arrs["ell_val"])
+        kmax = ell_col.shape[1]
+        part_of_row = np.asarray(arrs["slot"]).astype(np.int64) \
+            // self.pg.v_max
+        cold = np.asarray(self.tier_plan.cold, np.int64)
+        is_cold = np.isin(part_of_row, cold)
+        rows = np.arange(n, dtype=np.int64)
+        hot_rows, cold_rows = rows[~is_cold], rows[is_cold]
+        if len(hot_rows):
+            hot_dev = (jnp.asarray(ell_col[hot_rows]),
+                       jnp.asarray(ell_val[hot_rows]),
+                       jnp.asarray(hot_rows.astype(np.int32)))
+        else:
+            hot_dev = (None, None, jnp.zeros((0,), jnp.int32))
+        wins = []
+        if len(cold_rows):
+            win_rows = max(8, min(len(cold_rows), self._block_e))
+            for s in range(0, len(cold_rows), win_rows):
+                sel = cold_rows[s:s + win_rows]
+                m = len(sel)
+                col = np.full((win_rows, kmax), n, ell_col.dtype)
+                val = np.full((win_rows, kmax), mul_ident, ell_val.dtype)
+                r = np.full((win_rows,), n, np.int32)  # pad rows → sink
+                col[:m], val[:m], r[:m] = ell_col[sel], ell_val[sel], sel
+                wins.append(dict(col=col, val=val, rows=r))
+        acc_fn = _make_tiered_hyb_acc(cfg, np.asarray(arrs["dense"]),
+                                      np.asarray(arrs["hid"]))
+        ent = (cfg, jnp.asarray(arrs["slot"]), hot_dev, acc_fn, wins)
+        self._hyb_tier_cache[key] = ent
+        return ent
+
+    def _tiered_run_hybrid(self, program: VertexProgram, state: BatchedState
+                           ) -> Tuple[BatchedState, Array]:
+        cfg, slot, hot_dev, acc_fn, wins = self._hybrid_tiered_for(
+            program)
+        col_hot, val_hot, rows_hot = hot_dev
+        q = num_queries(state)
+        fin = jnp.zeros((q,), jnp.bool_)
+        steps_q = jnp.zeros((q,), jnp.int32)
+        step = 0
+        while True:
+            xs, y = _tiered_hyb_hot_jit(program, cfg, slot, col_hot,
+                                        val_hot, rows_hot, state,
+                                        jnp.int32(step))
+            nxt = jax.device_put(wins[0]) if wins else None
+            for i in range(len(wins)):
+                cur = nxt
+                nxt = (jax.device_put(wins[i + 1])
+                       if i + 1 < len(wins) else None)
+                y = _tiered_hyb_win_jit(cfg, y, cur["col"], cur["val"],
+                                        cur["rows"], xs)
+            acc = acc_fn(y, xs)
+            state, fin, steps_q = _tiered_hyb_apply_jit(
+                program, acc, state, jnp.int32(step), fin, steps_q)
+            step += 1
+            if step >= program.max_steps or bool(jnp.all(fin)):
+                break
+        return state, steps_q
+
+    def tiered_cache_entries(self) -> int:
+        """Compile-cache entries across the tiered jits (module-level plus
+        this engine's per-binding hybrid acc closures; the zero-retrace
+        gates diff this between supersteps/runs)."""
+        extra = sum(_cache_entries_of(ent[3])
+                    for ent in getattr(self, "_hyb_tier_cache", {}).values())
+        return tiered_cache_entries() + extra
+
+    def residency_bytes(self, state_bytes: int = 4) -> dict:
+        """``{"hbm_bytes", "host_bytes", "total_bytes"}`` for the bound
+        layout under this engine's tier plan (all-resident without one);
+        serving admission must charge only ``hbm_bytes`` against device
+        capacity."""
+        from repro.core.partition import memory_residency_bytes
+
+        return memory_residency_bytes(self._pg, tier_plan=self.tier_plan,
+                                      state_bytes=state_bytes,
+                                      dynamic=self.dg)
+
+    def tiered_stats(self) -> Optional[dict]:
+        """Deterministic out-of-core counters for the bench/report column,
+        or None on an all-resident engine."""
+        if self.tier_plan is None:
+            return None
+        plan = self.tier_plan
+        return dict(hbm_resident_bytes=int(plan.hbm_bytes),
+                    host_bytes=int(plan.host_bytes),
+                    streamed_bytes_per_superstep=int(
+                        plan.streamed_bytes_per_superstep),
+                    window_count=int(plan.window_count),
+                    num_hot=len(plan.hot), num_cold=len(plan.cold))
 
     def run_incremental(self, program: VertexProgram,
                         prev_state: BatchedState, dirty
@@ -1532,11 +2175,17 @@ class BSPEngine:
         Deprecated alias: prefer ``execute(program, prev_state,
         incremental=dirty)``.
         """
+        _warn_alias(self, "run_incremental",
+                    "execute(program, prev_state, incremental=dirty)")
         inc = program.incremental
         if inc is None:
             return None
         state = inc.seed(prev_state, jnp.asarray(dirty))
-        return self.run_batched(inc.program, state)
+        ok, self._alias_warn_ok = self._alias_warn_ok, False
+        try:
+            return self.run_batched(inc.program, state)
+        finally:
+            self._alias_warn_ok = ok
 
     def should_resplit_hybrid(self, threshold: float = 0.10) -> bool:
         """The ``perf_model.should_resplit`` rule, applied to this engine's
@@ -1739,6 +2388,11 @@ class DistributedBSPEngine(BSPEngine):
     def __init__(self, pg, mesh: Mesh, axis: str = "parts", **kwargs):
         from repro.core.dynamic import DynamicGraph
 
+        if kwargs.get("tiered") is not None:
+            raise ValueError(
+                "tiered= is single-device only: the distributed engine's "
+                "shard_map superstep has no host-streaming seam yet; drop "
+                "tiered= or use BSPEngine")
         inner = pg.pg if isinstance(pg, DynamicGraph) else pg
         if inner.num_parts % mesh.shape[axis]:
             raise ValueError("num_parts must divide mesh axis size")

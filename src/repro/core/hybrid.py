@@ -202,13 +202,20 @@ def hybrid_spmv(dense: jax.Array, ell_col: jax.Array, ell_val: jax.Array,
     y = kops.ell_spmv_op(ell_col, ell_val, xs, semiring=semiring,
                          interpret=interpret)
     if k_dense:
+        # The barriers pin the dense stage's rounding: interpret-mode
+        # Pallas inlines the dot, and XLA's FMA-contraction choice for the
+        # inlined reduction depends on the surrounding fusion context.  The
+        # resident while_loop body and the out-of-core tiered jits (which
+        # assemble y across jit boundaries) must round identically, so the
+        # dense stage is compiled as the same isolated subgraph everywhere.
+        xd = jax.lax.optimization_barrier(x[:, :k_dense])
         if semiring == PLUS_TIMES:
-            yh = kops.dense_spmv_op(x[:, :k_dense], dense,
-                                    interpret=interpret)
+            yh = jax.lax.optimization_barrier(
+                kops.dense_spmv_op(xd, dense, interpret=interpret))
             y = y.at[:, :k_dense].add(yh)
         else:
-            yh = kops.dense_spmv_minplus_op(x[:, :k_dense], dense,
-                                            interpret=interpret)
+            yh = jax.lax.optimization_barrier(
+                kops.dense_spmv_minplus_op(xd, dense, interpret=interpret))
             y = y.at[:, :k_dense].min(yh)
     return y[0] if squeeze else y
 

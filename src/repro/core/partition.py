@@ -438,7 +438,7 @@ def build_block_metadata(ea: EdgeArrays, *, block_e: int = 1024,
 def memory_footprint_bytes(pg: PartitionedGraph, state_bytes: int = 4,
                            vid_bytes: int = 4,
                            eid_bytes: int = 4,
-                           dynamic=None) -> dict:
+                           dynamic=None, tier_plan=None) -> dict:
     """Per-partition memory footprint, the analogue of paper Table 5.
 
     Actual-size formula from §4.3.3:
@@ -449,9 +449,22 @@ def memory_footprint_bytes(pg: PartitionedGraph, state_bytes: int = 4,
     the resident delta-slot and tombstone buffers per direction — without it
     the serving driver's capacity planning under-reports a mutating graph's
     true residency.
+
+    Each partition's record carries a per-tier split alongside ``total``:
+    ``tier`` (``"hbm"`` or ``"host"``, from ``tier_plan`` — all-hbm without
+    one), ``hbm`` and ``host`` byte subtotals with ``hbm + host == total``.
+    A host-tier partition keeps its *graph* bytes — and its dynamic
+    delta/tombstone overlay, which streams with the base blocks — in host
+    DRAM; its vertex state and outbox/inbox slots stay device-resident
+    (the exchange and scatter phases always run on device).  Capacity
+    planning against device memory must therefore sum the ``hbm`` figures
+    only (see :func:`memory_residency_bytes` and graph_serve's admission)
+    — counting a flat ``total`` over-counts host-tier bytes against HBM.
     """
     P = pg.num_parts
     res = {}
+    cold = set() if tier_plan is None else set(int(p)
+                                               for p in tier_plan.cold)
     w_bytes = 4 if pg.fwd.weight is not None else 0
     for p in range(P):
         vp = int(pg.assignment.part_sizes[p])
@@ -474,4 +487,212 @@ def memory_footprint_bytes(pg: PartitionedGraph, state_bytes: int = 4,
             tomb = pg.fwd.e_max + (pg.rev.e_max if pg.rev is not None else 0)
             res[p]["tombstone"] = tomb
         res[p]["total"] = sum(res[p].values())
+        host = 0
+        if p in cold:
+            host = (res[p]["graph"] + res[p].get("delta", 0)
+                    + res[p].get("tombstone", 0))
+        res[p]["tier"] = "host" if p in cold else "hbm"
+        res[p]["hbm"] = res[p]["total"] - host
+        res[p]["host"] = host
     return res
+
+
+def memory_residency_bytes(pg: PartitionedGraph, tier_plan=None,
+                           state_bytes: int = 4, dynamic=None) -> dict:
+    """Aggregate device-vs-host residency of a (possibly tiered) layout.
+
+    Sums :func:`memory_footprint_bytes`'s per-tier figures and adds the
+    streaming double-buffer (two in-flight windows) to the device side —
+    the honest capacity numbers ``ServeSession.report()`` and the serving
+    driver's admission check consume: ``hbm_bytes`` is what actually
+    occupies device memory, ``host_bytes`` what lives in the pinned host
+    arena, ``total_bytes`` their sum.
+    """
+    per = memory_footprint_bytes(pg, state_bytes=state_bytes,
+                                 dynamic=dynamic, tier_plan=tier_plan)
+    hbm = sum(rec["hbm"] for rec in per.values())
+    host = sum(rec["host"] for rec in per.values())
+    if tier_plan is not None:
+        hbm += int(tier_plan.stream_buffer_bytes)
+    return dict(hbm_bytes=int(hbm), host_bytes=int(host),
+                total_bytes=int(hbm + host))
+
+
+# ---------------------------------------------------------------------------
+# Tiered (out-of-core) memory plan: docs/memory.md
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class WindowSchedule:
+    """One direction's clean-cut streaming windows over the cold partitions.
+
+    Every window is a contiguous run of at most ``win_blocks`` edge blocks
+    of one cold partition, cut only at *clean* block boundaries — boundaries
+    no destination run straddles — so each extended segment id receives its
+    real contributions from exactly one window and the cross-window combine
+    only ever adds the reduction identity: that is the whole bitwise-parity
+    argument (edges are ``dst_ext``-sorted per partition; see
+    docs/memory.md).  Windows have a *fixed* device shape
+    ``win_e = win_blocks * block_e`` (short windows are sink-padded), so
+    one compiled trace serves the entire schedule and the resident loop
+    never retraces.
+    """
+
+    block_e: int
+    win_blocks: int
+    part: np.ndarray     # [W] int32 partition id of each window
+    start: np.ndarray    # [W] int64 first edge slot covered
+    count: np.ndarray    # [W] int64 real edge slots covered (<= win_e)
+
+    @property
+    def win_e(self) -> int:
+        return self.win_blocks * self.block_e
+
+    @property
+    def num_windows(self) -> int:
+        return len(self.part)
+
+
+def _clean_cut_windows(ea: EdgeArrays, cold, block_e: int,
+                       win_blocks: int) -> WindowSchedule:
+    """Greedy clean-cut schedule: per cold partition, walk the blocks and
+    cut each window at the latest clean boundary within ``win_blocks``."""
+    part, start, count = [], [], []
+    for p in cold:
+        p = int(p)
+        k = int(ea.num_edges[p])
+        if k == 0:
+            continue
+        nb_used = -(-k // block_e)
+        dst = ea.dst_ext[p]
+        cur = 0
+        while cur < nb_used:
+            want = min(cur + win_blocks, nb_used)
+            b = want
+            while b > cur:
+                i = b * block_e
+                if i >= k or dst[i - 1] != dst[i]:
+                    break                        # clean boundary
+                b -= 1
+            if b == cur:
+                run = int(np.max(np.bincount(
+                    dst[cur * block_e: min(k, want * block_e)])))
+                raise ValueError(
+                    f"partition {p}: a destination run of {run} edges "
+                    f"spans more than win_blocks*block_e = "
+                    f"{win_blocks * block_e} edge slots, so no clean "
+                    f"window cut exists; raise win_blocks (or block_e) "
+                    f"past the longest destination run")
+            part.append(p)
+            start.append(cur * block_e)
+            count.append(min(k, b * block_e) - cur * block_e)
+            cur = b
+    return WindowSchedule(
+        block_e=block_e, win_blocks=win_blocks,
+        part=np.asarray(part, dtype=np.int32),
+        start=np.asarray(start, dtype=np.int64),
+        count=np.asarray(count, dtype=np.int64))
+
+
+@dataclasses.dataclass
+class TierPlan:
+    """The two-tier residency decision ``perf_model.choose_tier_split``
+    made for one partitioned graph.
+
+    ``hot`` partitions keep their edge arenas device-resident exactly as
+    before; ``cold`` partitions' arenas live in host DRAM and stream
+    through the superstep in the double-buffered windows of ``fwd`` /
+    ``rev``.  Byte figures use the *padded* device-arena measure (stacked
+    ``[P, e_max]`` rows all cost the same), so ``hbm_bytes`` — hot arenas
+    plus the two window buffers — is exactly what the tiered engine
+    allocates and is ``<= hbm_budget_bytes`` by construction.
+    """
+
+    hbm_budget_bytes: int
+    hot: np.ndarray                      # sorted int32, device-resident
+    cold: np.ndarray                     # sorted int32, host-resident
+    fwd: WindowSchedule
+    rev: Optional[WindowSchedule]
+    hbm_bytes: int                       # hot arenas + stream_buffer_bytes
+    host_bytes: int                      # cold arenas (pinned host DRAM)
+    streamed_bytes_per_superstep: int
+    stream_buffer_bytes: int             # the two in-flight window buffers
+    table: List[dict]                    # perf_model.rank_tier_split table
+
+    @property
+    def window_count(self) -> int:
+        return self.fwd.num_windows + (self.rev.num_windows
+                                       if self.rev is not None else 0)
+
+
+def _arena_bytes_per_edge(weighted: bool, fused: bool) -> int:
+    """Device bytes per padded edge slot: src + dst_ext (+ weight), plus
+    the fused flavor's block metadata (blk_src/local/mask (+ weight_blk))."""
+    b = 8 + (4 if weighted else 0)
+    if fused:
+        b += 12 + (4 if weighted else 0)
+    return b
+
+
+def build_tier_plan(pg: PartitionedGraph, hbm_budget_bytes: int, *,
+                    block_e: int = 1024, win_blocks: int = 8,
+                    fused: bool = True, dynamic=None) -> TierPlan:
+    """Emit the :class:`TierPlan` for ``pg`` under an HBM budget.
+
+    ``perf_model.choose_tier_split`` picks the HBM/host boundary (densest
+    partitions stay hot — the MXU-friendly dense blocks the paper keeps on
+    the GPU side); this derives the clean-cut window schedules for both
+    directions and the arena byte accounting.  ``fused=False`` plans the
+    reference-flavor arena only (no block metadata); ``dynamic`` adds the
+    tombstone/delta overlay of a DynamicGraph to the cold arena and stream
+    figures (the overlay streams with its base blocks).
+    """
+    from repro.core import perf_model
+
+    P = pg.num_parts
+    weighted = pg.fwd.weight is not None
+    per_edge = _arena_bytes_per_edge(weighted, fused)
+    win_e = win_blocks * block_e
+
+    def _dir_bytes(ea: EdgeArrays) -> int:
+        e_pad = max(_round_up(ea.e_max, block_e), block_e)
+        b = (8 + (4 if weighted else 0)) * ea.e_max
+        if fused:
+            b += ((12 + (4 if weighted else 0)) * e_pad
+                  + 4 * (e_pad // block_e))
+        if dynamic is not None:
+            b += ea.e_max                      # tombstone overlay, 1 B/slot
+        return b
+
+    part_bytes = np.full(P, _dir_bytes(pg.fwd), dtype=np.int64)
+    if pg.rev is not None:
+        part_bytes += _dir_bytes(pg.rev)
+    if dynamic is not None:
+        dw = 4 if dynamic.weighted else 0
+        part_bytes += int(dynamic.directions) * int(dynamic.delta_slots) \
+            * (8 + dw)
+    window_bytes = per_edge * win_e + 4 * win_blocks \
+        + (win_e if dynamic is not None else 0)
+
+    part_edges = np.asarray(pg.fwd.num_edges, dtype=np.int64).copy()
+    if pg.rev is not None:
+        part_edges += np.asarray(pg.rev.num_edges, dtype=np.int64)
+    hot, table = perf_model.choose_tier_split(
+        part_bytes, int(hbm_budget_bytes), part_edges=part_edges,
+        window_bytes=window_bytes)
+    hot = np.asarray(sorted(hot), dtype=np.int32)
+    cold = np.asarray([p for p in range(P) if p not in set(hot.tolist())],
+                      dtype=np.int32)
+
+    fwd_sched = _clean_cut_windows(pg.fwd, cold, block_e, win_blocks)
+    rev_sched = (_clean_cut_windows(pg.rev, cold, block_e, win_blocks)
+                 if pg.rev is not None else None)
+    buffers = 0 if len(cold) == 0 else 2 * window_bytes
+    hot_bytes = int(part_bytes[hot].sum()) if len(hot) else 0
+    host_bytes = int(part_bytes[cold].sum()) if len(cold) else 0
+    return TierPlan(
+        hbm_budget_bytes=int(hbm_budget_bytes), hot=hot, cold=cold,
+        fwd=fwd_sched, rev=rev_sched,
+        hbm_bytes=hot_bytes + buffers, host_bytes=host_bytes,
+        streamed_bytes_per_superstep=host_bytes,
+        stream_buffer_bytes=buffers, table=table)

@@ -41,6 +41,11 @@ TPU_HBM_BW = 819e9
 TPU_ICI_LINK_BW = 50e9
 TPU_ICI_LINKS = 4                   # 2D torus: 4 links/chip
 TPU_VMEM_BYTES = 128 * 1024 * 1024  # ~128 MiB VMEM per chip
+# Pinned host DRAM → device streaming rate (the PCI-E term of the paper's
+# hybrid memory system, recast as the host-interface bandwidth a cold
+# partition's edge blocks stream through).  Conservative PCIe-gen4-x16-class
+# figure; the double-buffered window schedule overlaps this with compute.
+HOST_STREAM_BW = 16.0e9
 
 
 @dataclasses.dataclass
@@ -223,6 +228,94 @@ def choose_k_dense(edge_max_rank: np.ndarray, num_edges: int, candidates,
     table = rank_k_dense(edge_max_rank, num_edges, candidates, **kwargs)
     best = min(table, key=lambda rec: rec["makespan"])
     return best["k_dense"], table
+
+
+# ---------------------------------------------------------------------------
+# Tiered-memory split selection (out-of-core: docs/memory.md)
+# ---------------------------------------------------------------------------
+
+def host_stream_time(streamed_bytes: float,
+                     stream_bw: float = HOST_STREAM_BW) -> float:
+    """The host-transfer term: seconds to stream ``streamed_bytes`` of cold
+    edge blocks from pinned host DRAM per superstep.
+
+    Sits alongside Eq. 1's ``|E_p^b| / c`` ICI term: a host-tier partition's
+    superstep time grows by ``bytes/BW`` exactly like a boundary-heavy
+    partition's grows by its outbox traffic — one more bandwidth-cost term,
+    same model shape.
+    """
+    return float(streamed_bytes) / max(stream_bw, 1e-30)
+
+
+def rank_tier_split(part_bytes, hbm_budget_bytes: int, *,
+                    part_edges=None, window_bytes: int = 0,
+                    stream_bw: float = HOST_STREAM_BW,
+                    bytes_per_edge: float = 8.0) -> list:
+    """Predict the per-superstep time of every HBM/host cut (Eq. 1 + stream).
+
+    ``part_bytes[p]`` is partition ``p``'s device-resident edge-arena size;
+    partitions are ranked densest-first (descending bytes, ties by id — the
+    high-degree partitions the MXU path wants resident) and each candidate
+    keeps the first ``h`` of that order in HBM.  A cut is *feasible* when the
+    hot arenas plus the two streaming window buffers (``2 * window_bytes``,
+    the double-buffer the host loop ping-pongs through) fit the budget; the
+    all-resident cut needs no window buffers.  Returns one record per
+    candidate with the compute term (``edges / gather rate``), the
+    host-transfer term (:func:`host_stream_time` over the cold bytes), and
+    the predicted makespan — the table :func:`choose_tier_split` picks from,
+    and the "when does resident still win" evidence docs/memory.md cites.
+    """
+    part_bytes = np.asarray(part_bytes, dtype=np.int64)
+    P = len(part_bytes)
+    if part_edges is None:
+        part_edges = part_bytes / max(bytes_per_edge, 1e-30)
+    part_edges = np.asarray(part_edges, dtype=np.float64)
+    # Densest-first by *real* edge count (stacked device arenas are padded to
+    # a shared e_max, so bytes alone cannot rank), ties by partition id.
+    order = np.lexsort((np.arange(P), -part_edges))
+    r_gather = TPU_HBM_BW / bytes_per_edge
+    total_edges = float(part_edges.sum())
+    table = []
+    for h in range(P + 1):
+        hot = order[:h]
+        cold = order[h:]
+        hot_bytes = int(part_bytes[hot].sum())
+        host_bytes = int(part_bytes[cold].sum())
+        buffers = 0 if h == P else 2 * int(window_bytes)
+        t_stream = host_stream_time(host_bytes, stream_bw)
+        t_compute = total_edges / r_gather
+        table.append(dict(
+            num_hot=h, hot=tuple(int(p) for p in np.sort(hot)),
+            hbm_bytes=hot_bytes + buffers, host_bytes=host_bytes,
+            streamed_bytes_per_superstep=host_bytes,
+            t_stream=t_stream, t_compute=t_compute,
+            makespan=t_compute + t_stream,
+            feasible=hot_bytes + buffers <= hbm_budget_bytes))
+    return table
+
+
+def choose_tier_split(part_bytes, hbm_budget_bytes: int,
+                      **kwargs) -> "tuple[tuple, list]":
+    """Pick the HBM/host boundary: the argmin-makespan *feasible* cut.
+
+    Streaming only ever adds the host-transfer term, so the argmin over
+    feasible cuts is the longest densest-first **prefix** whose arenas fit
+    the budget — which is what makes the choice monotone: a bigger budget
+    keeps a superset of partitions hot (pinned by tests/test_oocore.py).
+    Returns ``(hot_ids, table)`` like :func:`choose_k_dense` returns
+    ``(k, table)``; raises when even the all-cold cut (two window buffers)
+    cannot fit, with the fix spelled out.
+    """
+    table = rank_tier_split(part_bytes, hbm_budget_bytes, **kwargs)
+    feasible = [rec for rec in table if rec["feasible"]]
+    if not feasible:
+        need = min(rec["hbm_bytes"] for rec in table)
+        raise ValueError(
+            f"hbm_budget_bytes={hbm_budget_bytes} cannot hold even the "
+            f"streaming double-buffer (needs >= {need} bytes); raise the "
+            f"budget or shrink the window (smaller win_blocks/block_e)")
+    best = min(feasible, key=lambda rec: (rec["makespan"], -rec["num_hot"]))
+    return best["hot"], table
 
 
 def plan_shards(shard_ranks, shard_edges, shard_slots, candidates,

@@ -20,6 +20,28 @@ from repro.kernels import ell_spmv as _ell
 from repro.kernels import flash_attention as _flash
 
 
+# jax 0.4.x ships lax.optimization_barrier without a vmap rule; the barrier
+# is dim-wise transparent, so batching is operand pass-through.  Newer jax
+# registers its own rule — the guard keeps this a no-op there.  The barrier
+# is how kernel callers pin FMA-contraction seams (see hybrid_spmv and the
+# out-of-core tiered path, which must round bitwise-identically).
+from jax.interpreters import batching as _batching  # noqa: E402
+
+if jax.lax.optimization_barrier_p not in _batching.primitive_batchers:
+    def _barrier_batcher(args, dims):
+        return jax.lax.optimization_barrier_p.bind(*args), dims
+    _batching.primitive_batchers[jax.lax.optimization_barrier_p] = \
+        _barrier_batcher
+
+
+def pin(x: jax.Array) -> jax.Array:
+    """``lax.optimization_barrier`` with the vmap shim above guaranteed
+    registered — importing this function is what loads the rule, so
+    callers outside the kernel layer (e.g. an ``apply_fn`` that must not
+    be FMA-contracted) use this spelling."""
+    return jax.lax.optimization_barrier(x)
+
+
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 

@@ -63,14 +63,14 @@ def main(argv=None) -> int:
 
     if args.mode == "snapshot":
         state0 = {"level": jnp.asarray(multi_source_state(pg, sources))}
-        st, sq, info = eng.run_batched_chunked(
-            BFS_PROGRAM, state0, checkpoint_every=args.chunk, max_chunks=1)
+        st, sq, info = eng.execute(
+            BFS_PROGRAM, state0, chunk=args.chunk, max_chunks=1)
         step = info["final_step"]
         mgr.save_tree(step, {"state": st, "fin": info["finished"],
                              "steps_q": sq},
                       extra={"step": step, "devices": ndev}, blocking=True)
-        final, fsq, _ = eng.run_batched_chunked(
-            BFS_PROGRAM, st, checkpoint_every=args.chunk, start_step=step,
+        final, fsq, _ = eng.execute(
+            BFS_PROGRAM, st, chunk=args.chunk, start_step=step,
             fin=info["finished"], steps_q=sq)
         np.savez(ref_path, level=gather_batch(pg, final["level"]),
                  steps=np.asarray(fsq))
@@ -85,8 +85,8 @@ def main(argv=None) -> int:
             "steps_q": P()}
     step, tree = restore_resharded(mgr, like, mesh, spec)
     assert step == mgr.manifest_extra(step)["step"]
-    final, sq, _ = eng.run_batched_chunked(
-        BFS_PROGRAM, tree["state"], checkpoint_every=args.chunk,
+    final, sq, _ = eng.execute(
+        BFS_PROGRAM, tree["state"], chunk=args.chunk,
         start_step=step, fin=tree["fin"], steps_q=tree["steps_q"])
     ref = np.load(ref_path)
     got = gather_batch(pg, final["level"])

@@ -229,6 +229,7 @@ def serve(engine, alg: str, sources: np.ndarray, batch: int,
     stream = np.resize(sources, num + pad)
     batches = stream.reshape(-1, batch)
 
+    tiered = getattr(engine, "tier_plan", None) is not None
     cache_fn = type(engine).run_batched
     entries0 = None
     lat_ms, cold_ms = [], None
@@ -242,10 +243,13 @@ def serve(engine, alg: str, sources: np.ndarray, batch: int,
         batch_done_ms.append((time.perf_counter() - t_all) * 1e3)
         if i == 0:
             cold_ms = dt               # includes compilation
-            try:
-                entries0 = cache_fn._cache_size()
-            except AttributeError:     # non-jitted run_batched (distributed)
-                entries0 = None
+            if tiered:                 # streamed path: its own jit set
+                entries0 = engine.tiered_cache_entries()
+            else:
+                try:
+                    entries0 = cache_fn._cache_size()
+                except AttributeError:  # non-jitted run_batched (distributed)
+                    entries0 = None
         else:
             lat_ms.append(dt)
         served += batch
@@ -255,7 +259,9 @@ def serve(engine, alg: str, sources: np.ndarray, batch: int,
 
     retraces = 0
     if entries0 is not None:
-        retraces = cache_fn._cache_size() - entries0
+        cur = (engine.tiered_cache_entries() if tiered
+               else cache_fn._cache_size())
+        retraces = cur - entries0
 
     warm_s = sum(lat_ms) / 1e3
     warm_queries = max(served - batch, 0)
@@ -301,6 +307,10 @@ def build_engine(args, dynamic: bool = False):
         kw = dict(fused=True, block_e=args.block_e)
     elif args.backend == "hybrid":
         kw = dict(backend="hybrid")
+    if getattr(args, "hbm_budget", None) is not None:
+        kw["tiered"] = args.hbm_budget
+        kw["win_blocks"] = args.win_blocks
+        kw.setdefault("block_e", args.block_e)
     if dynamic:
         dg = DynamicGraph(g, args.parts, args.strategy,
                           include_reverse=(args.alg == "bc"),
@@ -555,8 +565,8 @@ def chunked_refresh(engine, alg: str, sources, *, chunk: int,
         arr = np.asarray(state[key]).copy()
         arr[0] = np.nan
         state[key] = jnp.asarray(arr)
-    state, steps_q, info = engine.run_batched_chunked(
-        program, state, checkpoint_every=chunk, on_chunk=on_chunk,
+    state, steps_q, info = engine.execute(
+        program, state, chunk=chunk, on_chunk=on_chunk,
         chaos_ctx={"round": round_i})
     return gather_batch(pg, state[key]), np.asarray(steps_q), info
 
@@ -1173,6 +1183,16 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", default="fused",
                     choices=("reference", "fused", "hybrid"))
     ap.add_argument("--block-e", type=int, default=256)
+    ap.add_argument("--win-blocks", type=int, default=8,
+                    help="edge blocks per out-of-core streaming window "
+                         "(with --hbm-budget; the double-buffer costs "
+                         "2*win_blocks*block_e edge slots of HBM)")
+    ap.add_argument("--hbm-budget", type=int, default=None, metavar="BYTES",
+                    help="out-of-core tiering: device-memory byte budget "
+                         "for the graph arenas; partitions that do not fit "
+                         "go host-tier and stream through double-buffered "
+                         "windows (admission charges only the HBM figure "
+                         "against this budget)")
     ap.add_argument("--alg", default="bfs",
                     choices=("bfs", "sssp", "bc", "ppr"))
     ap.add_argument("--batch", type=int, default=32,
@@ -1348,6 +1368,22 @@ def main(argv=None) -> int:
     print(f"resident graph: |V|={g.num_vertices:,} |E|={g.num_edges:,} "
           f"parts={args.parts} strategy={args.strategy} "
           f"backend={args.backend}", flush=True)
+    if engine.tier_plan is not None:
+        # Admission charges the *HBM* figure only against the device
+        # budget: host-tier partitions stream from DRAM and must not be
+        # counted as device residency (memory_footprint_bytes per-tier
+        # split).  The arena figure is what the tier split itself gated.
+        stats = engine.tiered_stats()
+        resid = engine.residency_bytes()
+        print(f"tiered: {stats['num_hot']} hot / {stats['num_cold']} "
+              f"host-tier partitions; arena hbm={stats['hbm_resident_bytes']:,}"
+              f" B <= budget {args.hbm_budget:,} B; residency "
+              f"hbm={resid['hbm_bytes']:,} B host={resid['host_bytes']:,} B "
+              f"(streams {stats['streamed_bytes_per_superstep']:,} B/"
+              f"superstep over {stats['window_count']} windows)", flush=True)
+        if stats["hbm_resident_bytes"] > args.hbm_budget:
+            print("error: tier plan exceeds the HBM budget", file=sys.stderr)
+            return 2
 
     rng = np.random.default_rng(args.seed)
     sources = rng.integers(0, g.num_vertices, size=args.num_queries)

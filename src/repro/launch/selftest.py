@@ -19,7 +19,8 @@ def main() -> int:
     assert n_dev >= 2, f"need >1 device, got {n_dev}"
     from repro.core import graph as G
     from repro.core import partition as PT
-    from repro.core.bsp import BSPEngine, DistributedBSPEngine
+    from repro.core.bsp import (BSPEngine, DistributedBSPEngine,
+                                batch_state, unbatch_state)
     from repro.algorithms import bfs, pagerank
     from repro.algorithms.bfs import BFS_PROGRAM
     from repro.algorithms.pagerank import pagerank_distributed
@@ -37,7 +38,10 @@ def main() -> int:
     sp = int(pg.assignment.part_of[0])
     sl = int(pg.assignment.local_id[0])
     level0[sp, sl] = 0.0
-    state, steps = dist.run(BFS_PROGRAM, {"level": jnp.asarray(level0)})
+    state_b, steps_q = dist.execute(BFS_PROGRAM,
+                                    batch_state({"level":
+                                                 jnp.asarray(level0)}))
+    state, steps = unbatch_state(state_b), steps_q[0]
     lv_dist = pg.gather_global(np.asarray(state["level"]))
     np.testing.assert_array_equal(lv_local, lv_dist)
     print(f"BFS distributed == local over {n_dev} devices "
@@ -52,8 +56,9 @@ def main() -> int:
     # Fused superstep path (Pallas kernel) sharded over the mesh: the
     # compat shard_map shim + fused compute must compose.
     fused = DistributedBSPEngine(pg, mesh, fused=True)
-    state, _ = fused.run(BFS_PROGRAM, {"level": jnp.asarray(level0)})
-    lv_fused = pg.gather_global(np.asarray(state["level"]))
+    state_b, _ = fused.execute(BFS_PROGRAM,
+                               batch_state({"level": jnp.asarray(level0)}))
+    lv_fused = pg.gather_global(np.asarray(unbatch_state(state_b)["level"]))
     np.testing.assert_array_equal(lv_local, lv_fused)
     pr_fused = pagerank_distributed(fused, num_iterations=10)
     np.testing.assert_allclose(pr_local, pr_fused, rtol=1e-5, atol=1e-8)

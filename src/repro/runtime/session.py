@@ -438,7 +438,19 @@ class ServeSession:
             latency_p50_ms=pct(50), latency_p99_ms=pct(99),
             final_step=int(self._step),
             backend=getattr(self.engine, "backend", None),
-            engine=type(self.engine).__name__)
+            engine=type(self.engine).__name__,
+            # Honest serving capacity under tiered memory: only hbm_bytes
+            # competes with other sessions for device residency; host_bytes
+            # is streamed DRAM (0 when everything is resident).
+            **self._residency())
+
+    def _residency(self) -> dict:
+        fn = getattr(self.engine, "residency_bytes", None)
+        if fn is None:
+            return {}
+        r = fn()
+        return dict(hbm_bytes=int(r["hbm_bytes"]),
+                    host_bytes=int(r["host_bytes"]))
 
     # --------------------------------------------------- checkpoint/restore
 

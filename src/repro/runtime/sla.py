@@ -127,7 +127,7 @@ class QuarantinePolicy:
     min-semiring states keep ``+inf`` legal for unreached slots; sum
     combines treat any non-finite value as poison.
 
-    Use as the ``on_chunk`` hook: ``engine.run_batched_chunked(..,
+    Use as the ``on_chunk`` hook: ``engine.execute(.., chunk=k,
     on_chunk=policy.scan)`` after ``policy.begin(q)``.  ``quarantined``
     accumulates (query, reason, step) reports across runs; ``begin`` resets
     only the per-run kill mask, so a standing query re-poisoned on every

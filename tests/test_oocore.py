@@ -1,0 +1,211 @@
+"""Out-of-core tiered memory (docs/memory.md).
+
+The contract under test: with an HBM budget that forces cold partitions
+into host DRAM, the fused superstep streams their edge arenas through
+bounded double-buffered windows and still reaches the *bitwise identical*
+fixpoint the all-resident engine reaches — on every backend, for every
+algorithm — while steady-state supersteps add zero compile-cache entries
+(the windows reuse one trace; only the partition/window *data* changes).
+
+The budget in these tests is probed, not hardcoded: a throwaway
+``build_tier_plan`` with an unbounded budget yields the per-split byte
+table and the tests pin the budget to a row that leaves >= 2 partitions
+host-tier, so the assertions track layout changes instead of rotting.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core import partition as PT
+from repro.core.bsp import BSPEngine
+from repro.core.dynamic import DynamicGraph
+from repro.core.graph import MutationBatch
+from repro.core.partition import build_tier_plan
+from repro.core.perf_model import choose_tier_split
+from repro.algorithms.bfs import bfs_batched
+from repro.algorithms.sssp import sssp_batched
+from repro.algorithms.cc import connected_components
+from repro.algorithms.pagerank import pagerank
+from repro.algorithms.bc import betweenness_centrality_batched
+
+BACKENDS = {
+    "reference": {},
+    "fused": dict(backend="fused"),
+    "hybrid": dict(backend="hybrid"),
+}
+SOURCES = [0, 3]
+# uniform degrees keep destination runs short, so the block-granularity
+# clean-cut windows exist at this tiny smoke scale (rmat's power-law runs
+# need the larger block_e/win_blocks real runs use)
+BLOCK_E, WIN_BLOCKS = 128, 2
+
+
+@pytest.fixture(scope="module")
+def pg():
+    g = G.uniform(8, 6, seed=0).with_uniform_weights()
+    return PT.partition(g, 4, PT.HIGH, include_reverse=True)
+
+
+_BUDGETS: dict = {}
+
+
+def _budget(pg, backend: str) -> int:
+    """The 2-hot row's exact arena bytes: partitions beyond the densest two
+    are forced host-tier.  Probed per arena flavor — the engine plans
+    reference-backend arenas without block metadata, so a fused-flavor
+    budget would hold *all* reference partitions and nothing would stream."""
+    fused = backend != "reference"
+    if fused not in _BUDGETS:
+        probe = build_tier_plan(pg, 1 << 60, block_e=BLOCK_E,
+                                win_blocks=WIN_BLOCKS, fused=fused)
+        _BUDGETS[fused] = int(probe.table[2]["hbm_bytes"])
+    return _BUDGETS[fused]
+
+
+def _run(eng, alg):
+    if alg == "bfs":
+        return np.asarray(bfs_batched(eng, SOURCES)[0])
+    if alg == "sssp":
+        return np.asarray(sssp_batched(eng, SOURCES)[0])
+    if alg == "cc":
+        return np.asarray(connected_components(eng)[0])
+    if alg == "pagerank":
+        return np.asarray(pagerank(eng, 20))
+    return np.asarray(betweenness_centrality_batched(eng, SOURCES)[0])
+
+
+def _bitwise(a, b) -> bool:
+    return a.shape == b.shape and bool(
+        np.all((a == b) | (np.isnan(a) & np.isnan(b))))
+
+
+@pytest.mark.parametrize("backend", list(BACKENDS))
+@pytest.mark.parametrize("alg", ["bfs", "sssp", "cc", "pagerank", "bc"])
+def test_streamed_matches_resident_bitwise(pg, backend, alg):
+    """The tentpole claim: streaming changes *where* edges live, never a
+    single bit of the fixpoint — including the sum-combine programs whose
+    rounding order the clean-cut windows and pinned FMAs preserve."""
+    bkw = BACKENDS[backend]
+    resident = _run(BSPEngine(pg, interpret=True, **bkw), alg)
+    tiered_eng = BSPEngine(pg, interpret=True, tiered=_budget(pg, backend),
+                           block_e=BLOCK_E, win_blocks=WIN_BLOCKS, **bkw)
+    assert len(tiered_eng.tier_plan.cold) >= 2
+    streamed = _run(tiered_eng, alg)
+    assert _bitwise(resident, streamed)
+
+
+@pytest.mark.parametrize("backend", list(BACKENDS))
+def test_zero_retraces_across_windows(pg, backend):
+    """Steady state adds no compile-cache entries: every window of every
+    cold partition reuses the same traced superstep (static per-block
+    metadata, donated accumulator), run after run."""
+    eng = BSPEngine(pg, backend=None if backend == "reference" else backend,
+                    interpret=True, tiered=_budget(pg, backend),
+                    block_e=BLOCK_E, win_blocks=WIN_BLOCKS)
+    assert eng.tier_plan.fwd.num_windows >= 3   # genuinely multi-window
+    counts = []
+    for _ in range(4):
+        if backend == "hybrid":
+            pagerank(eng, 3)                    # sum path (dense block)
+        bfs_batched(eng, SOURCES)               # min path
+        counts.append(eng.tiered_cache_entries())
+    # first run compiles; every later run must hit the caches exactly
+    assert counts[1:] == [counts[1]] * (len(counts) - 1), counts
+
+
+def test_mutation_roundtrip_on_host_tier_partition(pg):
+    """A mutation batch touching a *host-tier* partition round-trips: the
+    resident and tiered dynamic engines apply the same batch (inserts into
+    the delta overlay, deletes as tombstones in the streamed arena) and
+    reconverge to the same fixpoint."""
+    g = G.uniform(8, 6, seed=0).with_uniform_weights()
+    dg_res = DynamicGraph(g, 4, PT.HIGH, mutation_capacity=64,
+                          include_reverse=True)
+    dg_tier = DynamicGraph(g, 4, PT.HIGH, mutation_capacity=64,
+                           include_reverse=True)
+    probe = build_tier_plan(dg_tier.pg, 1 << 60, block_e=BLOCK_E,
+                            win_blocks=WIN_BLOCKS, fused=False,
+                            dynamic=dg_tier)
+    bdg = int(probe.table[2]["hbm_bytes"])
+    eng_res = BSPEngine(dg_res, interpret=True)
+    eng_tier = BSPEngine(dg_tier, interpret=True, tiered=bdg,
+                         block_e=BLOCK_E, win_blocks=WIN_BLOCKS)
+    cold_p = int(eng_tier.tier_plan.cold[0])
+
+    # two inserts plus two deletes of existing edges into the cold partition
+    src_all, dst_all = g.edge_sources(), g.col
+    part_of = eng_tier.pg.assignment.part_of
+    sel = np.where(part_of[dst_all] == cold_p)[0][:2]
+    assert len(sel) == 2
+    batch = MutationBatch(
+        np.concatenate([np.array([1, 3], np.int64), src_all[sel]]),
+        np.concatenate([np.array([7, 9], np.int64), dst_all[sel]]),
+        np.array([True, True, False, False]),
+        np.ones(4, np.float32))
+    for d in (dg_res, dg_tier):
+        d.apply_mutations(batch)
+    res = np.asarray(bfs_batched(eng_res, SOURCES)[0])
+    tier = np.asarray(bfs_batched(eng_tier, SOURCES)[0])
+    assert _bitwise(res, tier)
+
+
+def test_choose_tier_split_monotone():
+    """A bigger budget keeps a superset of partitions hot (the split is a
+    densest-first prefix, so feasibility can only grow with the budget)."""
+    part_bytes = [700, 300, 1100, 500]
+    window = 100
+    prev: set = set()
+    for budget_b in range(200, 3000, 100):
+        try:
+            hot, _ = choose_tier_split(part_bytes, budget_b,
+                                       window_bytes=window)
+        except ValueError:
+            assert budget_b < 2 * window    # below the double-buffer floor
+            continue
+        cur = set(int(p) for p in hot)
+        assert prev <= cur, (budget_b, prev, cur)
+        prev = cur
+    assert prev == {0, 1, 2, 3}             # unbounded end keeps all hot
+
+
+def test_all_cold_completes_at_4x_capacity(pg):
+    """The capacity claim: a graph >= 4x the device arena budget still
+    completes (every partition host-tier, only the double-buffer and hot
+    metadata resident) and stays bitwise."""
+    # win_blocks=3: all-cold also windows the densest partition, whose
+    # clean boundaries are sparser than the cold partitions' (the window
+    # must span past its longest destination runs)
+    wb = 3
+    probe = build_tier_plan(pg, 1 << 60, block_e=BLOCK_E, win_blocks=wb)
+    row0 = probe.table[0]                   # all-cold: buffers only
+    budget0 = int(row0["hbm_bytes"])
+    assert row0["host_bytes"] >= 4 * budget0
+    eng = BSPEngine(pg, backend="fused", interpret=True, tiered=budget0,
+                    block_e=BLOCK_E, win_blocks=wb)
+    assert len(eng.tier_plan.hot) == 0
+    stats = eng.tiered_stats()
+    assert stats["hbm_resident_bytes"] <= budget0
+    resident = _run(BSPEngine(pg, backend="fused", interpret=True), "bfs")
+    assert _bitwise(resident, _run(eng, "bfs"))
+
+
+def test_budget_below_buffer_floor_raises(pg):
+    with pytest.raises(ValueError, match="double-buffer"):
+        BSPEngine(pg, interpret=True, tiered=64, block_e=BLOCK_E,
+                  win_blocks=WIN_BLOCKS)
+
+
+def test_residency_split_admission_fields(pg):
+    """``residency_bytes`` splits the footprint per tier; serving admission
+    charges only the HBM side (docs/memory.md, "Two accountings")."""
+    eng = BSPEngine(pg, interpret=True, tiered=_budget(pg, "reference"),
+                    block_e=BLOCK_E, win_blocks=WIN_BLOCKS)
+    r = eng.residency_bytes()
+    assert r["hbm_bytes"] + r["host_bytes"] == r["total_bytes"]
+    assert r["host_bytes"] > 0
+    all_res = BSPEngine(pg, interpret=True).residency_bytes()
+    assert all_res["host_bytes"] == 0
+    # streaming trades resident HBM for host DRAM plus the window buffers
+    assert r["hbm_bytes"] < all_res["hbm_bytes"]
