@@ -8,8 +8,9 @@ BASELINE := BENCH_superstep.prev.json
 BENCH_THRESHOLD ?= 0.75
 
 .PHONY: test lint bench bench-quick bench-batched bench-dist bench-dynamic \
-	bench-checkpoint bench-continuous bench-oocore bench-gate bench-check \
-	serve serve-mutate serve-continuous serve-oocore chaos corrupt-drill ci
+	bench-checkpoint bench-continuous bench-oocore bench-dopt bench-gate \
+	bench-check serve serve-mutate serve-continuous serve-oocore chaos \
+	corrupt-drill ci
 
 test:            ## tier-1 suite
 	$(PY) -m pytest -x -q
@@ -24,9 +25,9 @@ lint:            ## fast critical-rule lint (skips if ruff absent)
 bench:           ## reference-vs-fused superstep timings -> BENCH_superstep.json
 	$(PY) benchmarks/superstep_bench.py
 
-bench-quick:     ## smallest scale only (the CI bench job; batched + dynamic + checkpoint + continuous + verify + oocore)
+bench-quick:     ## smallest scale only (the CI bench job; batched + dynamic + checkpoint + continuous + verify + oocore + dopt)
 	$(PY) benchmarks/superstep_bench.py --quick --batched --mutations \
-	  --checkpoint --continuous --verify --oocore
+	  --checkpoint --continuous --verify --oocore --dopt
 
 bench-batched:   ## query-throughput column only (Q in {1,8,32}) + gate
 	$(PY) benchmarks/superstep_bench.py --quick --batched
@@ -61,6 +62,10 @@ serve-oocore:    ## out-of-core serving driver (forced HBM budget, tiered engine
 
 bench-oocore:    ## out-of-core column (tiered vs resident, parity + budget) + gate
 	$(PY) benchmarks/superstep_bench.py --quick --oocore
+	$(MAKE) bench-gate
+
+bench-dopt:      ## direction-optimized column (top-down vs auto BFS edge counters) + gate
+	$(PY) benchmarks/superstep_bench.py --quick --dopt
 	$(MAKE) bench-gate
 
 chaos:           ## fault-injection drill: crash/recover/replay, parity asserts

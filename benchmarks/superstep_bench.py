@@ -17,8 +17,8 @@ same script times the compiled kernels.
 
 Usage (from the repo root):
   python benchmarks/superstep_bench.py [--scales 10 11] [--parts 4]
-      [--quick] [--hybrid] [--batched] [--distributed] [--devices 8]
-      [--seed 1] [--out BENCH_superstep.json]
+      [--quick] [--hybrid] [--batched] [--dopt] [--distributed]
+      [--devices 8] [--seed 1] [--out BENCH_superstep.json]
 
 ``--quick`` keeps only the smallest scale (the CI bench job's ~5-minute
 budget); ``--hybrid`` also times the degree-split two-engine backend per
@@ -38,6 +38,14 @@ compute scales ~linearly with Q, so (exactly like the fused/reference
 economics, see ROADMAP) the ratio inverts and is *recorded* and
 regression-gated by ``scripts/bench_check.py`` instead.  Point
 ``--scales 18`` at it for the rmat18 serving measurement.
+``--dopt`` adds the direction-optimized traversal column (docs/traversal.md):
+batched BFS over the *symmetrized* bench graph under forced top-down
+(``direction="push"``) vs the fitted per-shard auto switch, recording wall
+times (noisy, baseline-gated) and the deterministic superstep-indexed
+counters that are absolutely asserted — auto examines strictly fewer edges
+than top-down through at least one real switch, stays bitwise-identical to
+the numpy oracle, respects the once-per-edge push bound, and never
+retraces across a switch.
 ``--distributed`` adds a multi-device column: the bench re-executes itself
 in a subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
 when the runtime has fewer than ``--devices`` devices, then times one
@@ -190,7 +198,7 @@ def bench_batched_cell(pg, scale: int, parts: int, strategy: str,
         return sorted(times)[len(times) // 2]
 
     bfs_batched(eng, sources)                  # compile the Q-batch loop
-    cache_fn = BSPEngine.run_batched
+    cache_fn = BSPEngine._run_batched
     entries0 = cache_fn._cache_size()
     # Different sources, same Q: must reuse the compiled loop (no retrace).
     bfs_batched(eng, rng.integers(0, pg.num_vertices, size=q))
@@ -211,6 +219,85 @@ def bench_batched_cell(pg, scale: int, parts: int, strategy: str,
         queries_per_sec=q / max(batched_s, 1e-12),
         retraces=retraces,
         compile_cache_entries=cache_fn._cache_size())
+
+
+def bench_dopt_cell(g, pg, scale: int, parts: int, strategy: str,
+                    seed: int, backend: str = "reference",
+                    block_e: int = 256, q: int = 4) -> dict:
+    """One direction-optimized traversal cell: a Q-batch of BFS queries
+    under forced ``direction="push"`` (classic top-down) vs ``"auto"``
+    (per-query, per-shard fitted switching — docs/traversal.md), on the
+    same engine backend.  Timings are noisy on CPU and only recorded; the
+    asserted halves are the *deterministic* edge counters: auto must
+    examine fewer edges than top-down while staying bitwise-identical to
+    the numpy oracle, top-down must respect the once-per-edge BFS bound
+    (every vertex joins the frontier exactly once, so a query scans at
+    most |E| edges), and a direction switch must not retrace.
+
+    The column traverses the *symmetrized* bench graph — undirected BFS
+    is the canonical direction-optimized setting (arXiv 1503.04359):
+    every visited vertex is a reachable parent through its in-edges, so
+    the bottom-up scans early-exit instead of paying full rows for a
+    permanently-unreachable tail."""
+    import time
+
+    from repro.algorithms.bfs import bfs_batched, bfs_reference
+    from repro.algorithms.cc import symmetrize
+
+    g = symmetrize(g)
+    pg = PT.partition(g, parts, strategy)
+    kw = {}
+    if backend == "fused":
+        kw = dict(fused=True, block_e=block_e)
+    elif backend == "hybrid":
+        kw = dict(backend="hybrid")
+    top = BSPEngine(pg, direction="push", **kw)
+    dopt = BSPEngine(pg, direction="auto", **kw)
+
+    rng = np.random.default_rng(seed)
+    sources = rng.integers(0, pg.num_vertices, size=q)
+
+    def wall(fn, iters=3):
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - t0)
+        return sorted(times)[len(times) // 2]
+
+    lv_top, _ = bfs_batched(top, sources)          # compile the push loop
+    st_top = top.last_direction_stats
+    lv_dopt, _ = bfs_batched(dopt, sources)        # compile the auto loop
+    st = dopt.last_direction_stats
+    cache_fn = BSPEngine._run_batched
+    entries0 = cache_fn._cache_size()
+    # Different sources, same Q: switch points move between supersteps and
+    # queries, but direction is traced-carry data — no retrace allowed.
+    bfs_batched(dopt, rng.integers(0, pg.num_vertices, size=q))
+    retraces = cache_fn._cache_size() - entries0
+
+    oracle = np.stack([bfs_reference(g, int(s)) for s in sources])
+    bitwise = int(np.array_equal(np.asarray(lv_top), oracle)
+                  and np.array_equal(np.asarray(lv_dopt), oracle))
+
+    topdown_ms = wall(lambda: bfs_batched(top, sources)) * 1e3
+    dopt_ms = wall(lambda: bfs_batched(dopt, sources)) * 1e3
+
+    topdown_edges = int(np.asarray(st_top["edges_examined"]).sum())
+    dopt_edges = int(np.asarray(st["edges_examined"]).sum())
+    return dict(
+        scale=scale, parts=parts, strategy=strategy, algorithm="bfs",
+        combine="min", mode="dopt", q=q, block_e=block_e, backend=backend,
+        num_edges=g.num_edges,
+        topdown_ms=topdown_ms, dopt_ms=dopt_ms,
+        topdown_edges=topdown_edges, dopt_edges=dopt_edges,
+        # once-per-edge push bound: Q queries scan at most Q·|E| edges
+        edges_bound=q * g.num_edges,
+        edges_saved_ratio=1.0 - dopt_edges / max(topdown_edges, 1),
+        dopt_switches=int(np.asarray(st["switches"]).sum()),
+        topdown_switches=int(np.asarray(st_top["switches"]).sum()),
+        retraces=retraces,
+        bitwise=bitwise)
 
 
 def bench_mutations_cell(g, scale: int, parts: int, strategy: str,
@@ -687,6 +774,13 @@ def main(argv=None) -> int:
     ap.add_argument("--batched-backend", default="reference",
                     choices=("reference", "fused", "hybrid"),
                     help="engine backend for the --batched column")
+    ap.add_argument("--dopt", action="store_true",
+                    help="add the direction-optimized traversal column "
+                         "(top-down vs auto BFS, deterministic "
+                         "edges-examined counters + bitwise/retrace guards)")
+    ap.add_argument("--dopt-backend", default="reference",
+                    choices=["reference", "fused", "hybrid"],
+                    help="engine backend for the --dopt column")
     ap.add_argument("--mutations", action="store_true",
                     help="add the dynamic-graph column: in-place mutation "
                          "edges/s, incremental-vs-cold supersteps, and the "
@@ -831,6 +925,56 @@ def main(argv=None) -> int:
                 if rec["ref_hlo_msg_arrays"] == 0:
                     failures.append(f"reference HLO unexpectedly clean "
                                     f"(check the detector) in {rec}")
+            if args.dopt:
+                drec = bench_dopt_cell(g, pg, scale, args.parts, strategy,
+                                       args.seed, backend=args.dopt_backend,
+                                       block_e=args.block_e)
+                results.append(drec)
+                print(f"scale={scale} {strategy:>4} dopt"
+                      f"[{drec['backend']}]: topdown "
+                      f"{drec['topdown_ms']:.1f}ms/"
+                      f"{drec['topdown_edges']}e vs dopt "
+                      f"{drec['dopt_ms']:.1f}ms/{drec['dopt_edges']}e "
+                      f"(saved {drec['edges_saved_ratio']:.1%}, "
+                      f"switches={drec['dopt_switches']}, "
+                      f"retraces={drec['retraces']}, "
+                      f"bitwise={drec['bitwise']})", flush=True)
+                # Direction-optimization contract, all halves deterministic
+                # (the counters are superstep-indexed int32 sums — no
+                # timing noise): auto must beat top-down on examined edges
+                # via at least one real switch, stay bitwise-identical to
+                # the numpy oracle, respect the once-per-edge push bound,
+                # and never retrace across a switch.
+                if not drec["bitwise"]:
+                    failures.append(
+                        f"dopt {strategy}: push/auto BFS diverged from the "
+                        f"reference fixpoint — direction is no longer a "
+                        f"pure performance choice")
+                if drec["retraces"] != 0:
+                    failures.append(
+                        f"dopt {strategy}: {drec['retraces']} compile-cache "
+                        f"entries added across direction switches — "
+                        f"direction is no longer traced-carry data")
+                if drec["dopt_edges"] >= drec["topdown_edges"]:
+                    failures.append(
+                        f"dopt {strategy}: auto examined "
+                        f"{drec['dopt_edges']} edges, not fewer than "
+                        f"top-down's {drec['topdown_edges']} — the fitted "
+                        f"crossover no longer wins on the scale-free graph")
+                if drec["dopt_switches"] == 0:
+                    failures.append(
+                        f"dopt {strategy}: auto never left push on the "
+                        f"scale-free graph (0 switches)")
+                if drec["topdown_switches"] != 0:
+                    failures.append(
+                        f"dopt {strategy}: forced push reported "
+                        f"{drec['topdown_switches']} switches")
+                if drec["topdown_edges"] > drec["edges_bound"]:
+                    failures.append(
+                        f"dopt {strategy}: top-down examined "
+                        f"{drec['topdown_edges']} edges, above the "
+                        f"once-per-edge bound {drec['edges_bound']} — the "
+                        f"push counter is over-charging")
             if args.mutations:
                 mrec = bench_mutations_cell(g, scale, args.parts, strategy,
                                             args.seed,

@@ -75,7 +75,8 @@ def main(argv=None) -> int:
                              "quarantined", "chunk_retraces", "refills",
                              "windows", "monitors_fired",
                              "hbm_resident_bytes", "host_bytes",
-                             "streamed_bytes_per_superstep", "window_count"],
+                             "streamed_bytes_per_superstep", "window_count",
+                             "topdown_edges", "dopt_edges", "dopt_switches"],
                     help="deterministic metrics gated at --byte-threshold "
                          "regardless of timing noise (retraces must stay "
                          "0: any growth fails; the mutation column's "
@@ -86,7 +87,10 @@ def main(argv=None) -> int:
                          "verify column's monitor-fire count must stay 0; "
                          "the oocore column's arena/stream byte fields and "
                          "window count are plan-deterministic for a pinned "
-                         "seed)")
+                         "seed; the dopt column's edges-examined and "
+                         "switch counters are superstep-indexed int32 sums "
+                         "— a growing dopt_edges means the direction vote "
+                         "got lazier)")
     ap.add_argument("--byte-threshold", type=float, default=0.20,
                     help="max allowed fractional growth in --byte-fields")
     args = ap.parse_args(argv)

@@ -120,8 +120,12 @@ def _inc_seed(prev_state, dirty):
 # per-edge messages) over the mesh axis.
 BFS_PROGRAM = VertexProgram(combine=MIN, edge_fn=_edge_fn,
                             apply_fn=_apply_fn,
+                            # Every frontier vertex sends the SAME value
+                            # (step+1) — the bottom-up kernel's early exit
+                            # is exact (kernels/bottomup.py).
                             edge_msg=EdgeMessage(gather=("level",),
-                                                 fn=_edge_msg_fn),
+                                                 fn=_edge_msg_fn,
+                                                 frontier_uniform=True),
                             incremental=IncrementalForm(BFS_RELAX_PROGRAM,
                                                         _inc_seed))
 

@@ -103,6 +103,13 @@ class EdgeMessage:
     consts: Tuple[str, ...] = ()
     use_weight: bool = False
     weight_op: Optional[str] = None   # None | "add" | "mul"
+    # True iff every non-identity message of one superstep carries the SAME
+    # value (BFS: all frontier vertices send step+1).  Licenses the
+    # bottom-up kernel's per-row early exit as *exact* — the first live
+    # parent's value IS the row minimum.  Programs whose messages differ per
+    # source (CC labels, SSSP distances) must leave this False; their pull
+    # steps scan full rows.
+    frontier_uniform: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,6 +193,110 @@ class FusedConfig:
     interpret: Optional[bool] = None
 
 
+# ---------------------------------------------------------------------------
+# Direction-optimized traversal (docs/traversal.md)
+#
+# For min-combine programs a superstep can run top-down ("push": every
+# frontier vertex scatters along its out-edges) or bottom-up ("pull": every
+# destination row scans its in-neighbours, with early exit when messages are
+# uniform).  Both directions reduce the same value multiset per destination
+# under a min ⊕ — rounding-free and order-independent — so direction is
+# purely a performance choice and results stay bitwise identical.
+#
+# The decision state rides IN the traced carry as three [Q, P] int32 leaves
+# (direction, edges-examined counter, switch counter), injected by
+# ``BSPEngine.execute`` and stripped before the user sees the state.  Because
+# the direction is a *value*, switching mid-run never retraces: one compiled
+# superstep contains both branches under ``lax.cond``.  Under ``shard_map``
+# each shard sees its local [Q, pl] slice and votes from its own frontier
+# density — the per-shard switching of the issue — writing its counters into
+# local column 0, so a global axis-1 sum aggregates per query.
+# ---------------------------------------------------------------------------
+
+_DOPT_KEYS = ("_dopt_dir", "_dopt_edges", "_dopt_switch")
+_DIR_PUSH = 0
+_DIR_PULL = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class _DoptCfg:
+    """Static direction config for the reference/fused superstep closure."""
+
+    semiring: str                 # "min" | "min_plus"
+    uniform: bool                 # EdgeMessage.frontier_uniform
+    forced: Optional[int] = None  # None = auto, else _DIR_PUSH/_DIR_PULL
+    interpret: Optional[bool] = None
+
+
+def _dopt_strip(state: State):
+    """Split the dopt leaves out of the carry before user code sees it."""
+    if _DOPT_KEYS[0] not in state:
+        return state, None
+    user = {k: v for k, v in state.items() if k not in _DOPT_KEYS}
+    return user, {k: state[k] for k in _DOPT_KEYS}
+
+
+def _dopt_fold(dopt: dict, want: Array, cnt: Array) -> dict:
+    """Fold one superstep's decisions into the carried dopt leaves.
+
+    ``want [Q]`` is this superstep's direction, ``cnt [Q]`` the edges the
+    chosen direction examined (the deterministic work model).  Writes land
+    in local column 0 — per-shard columns of the global [Q, P] leaf under
+    ``shard_map`` — and the direction broadcasts across local columns."""
+    prev = dopt["_dopt_dir"][:, 0]
+    sw = jnp.logical_and(prev >= 0, prev != want).astype(jnp.int32)
+    return {
+        "_dopt_dir": jnp.broadcast_to(want[:, None].astype(jnp.int32),
+                                      dopt["_dopt_dir"].shape),
+        "_dopt_edges": dopt["_dopt_edges"].at[:, 0].add(cnt),
+        "_dopt_switch": dopt["_dopt_switch"].at[:, 0].add(sw),
+    }
+
+
+def _direction_select(want: Array, run_push, run_pull, x):
+    """Run push/pull per the [Q] direction vector.
+
+    Homogeneous batches take a single branch through nested ``lax.cond``;
+    mixed batches compute both and select per query.  Branch fns map
+    ``x -> (y, push_cnt [Q], pull_cnt [Q])`` with identical shapes."""
+    def mixed(x):
+        y_p, cp, _ = run_push(x)
+        y_l, _, sl = run_pull(x)
+        sel = (want == _DIR_PULL)
+        shape = (-1,) + (1,) * (y_p.ndim - 1)
+        zero = jnp.zeros_like(cp)
+        return (jnp.where(sel.reshape(shape), y_l, y_p),
+                jnp.where(sel, zero, cp), jnp.where(sel, sl, zero))
+
+    return jax.lax.cond(
+        jnp.all(want == _DIR_PUSH), run_push,
+        lambda x: jax.lax.cond(jnp.all(want == _DIR_PULL),
+                               run_pull, mixed, x),
+        x)
+
+
+def _dopt_want(forced: Optional[int], density: Array, unvisited: Array,
+               threshold) -> Array:
+    """Per-query direction vote — the α-style two-term crossover.
+
+    Pull pays one scan per destination row, early-exiting at the first
+    live parent, so it wins only when (a) the frontier is dense enough
+    that rows exit after ~1/density slots (the fitted ``threshold`` —
+    perf_model.fit_pull_threshold's sqrt(γ/deg) crossover) AND (b) the
+    frontier outweighs the *unvisited* mass: rows whose value is still
+    the ⊕-identity have no live parent yet, never early-exit, and pay
+    their full in-degree every pull superstep — on directed graphs the
+    unreachable tail would otherwise be rescanned forever (Beamer's
+    m_f > m_u/α switch, degree-uniform proxy with α = 1).  Sum combines
+    never reach this vote; for min combines both directions are bitwise
+    so the vote is a pure perf choice.
+    """
+    if forced is not None:
+        return jnp.full(density.shape, forced, jnp.int32)
+    pull = jnp.logical_and(density >= threshold, density > unvisited)
+    return jnp.where(pull, _DIR_PULL, _DIR_PUSH).astype(jnp.int32)
+
+
 @dataclasses.dataclass(frozen=True)
 class _HybridCfg:
     """Static geometry of one hybrid degree-split direction.
@@ -204,6 +315,12 @@ class _HybridCfg:
     num_vertices: int
     pull_threshold: float
     interpret: Optional[bool]
+    # direction-optimization statics (docs/traversal.md): forced direction
+    # (None = auto crossover), message uniformity (licenses the bottom-up
+    # early exit), and the static dense-stage work charge k_dense².
+    forced: Optional[int] = None
+    uniform: bool = False
+    e_dense: int = 0
 
 
 def _superstep_hybrid(program: VertexProgram, cfg: _HybridCfg, arrs: dict,
@@ -223,15 +340,19 @@ def _superstep_hybrid(program: VertexProgram, cfg: _HybridCfg, arrs: dict,
     ``slot``/``hid`` in ``arrs`` translate between the engine's [P, v_max]
     partition layout and the split's degree-ranked global id space (sink =
     n for padding slots); ``push_*`` absent disables the direction switch
-    (sum combines, ``direction_switch=False``, or the dynamic engine, whose
-    pull SpMV is frontier-oblivious and mutation-stable).
+    (sum combines, or ``direction_switch=False``).  The dynamic engine
+    carries spare sentinel slots in its push arenas so mutations ride the
+    same extended-segment reduce without a reshape.
     """
-    from repro.core.hybrid import add_identity, hybrid_spmv
+    from repro.core.hybrid import add_identity, hybrid_spmv, hybrid_spmv_scan
 
     chaos.visit("kernel.hybrid", distributed=False)
     spec = program.edge_msg
     ident = add_identity(cfg.semiring)
+    state, dopt = _dopt_strip(state)
+    track = dopt is not None and "push_src" in arrs and "ell_kreal" in arrs
     q = state[spec.gather[0]].shape[0]
+    n = cfg.num_vertices
     vals = {k: state[k].astype(jnp.float32).reshape(q, -1)[:, arrs["slot"]]
             for k in spec.gather}           # [Q, n] in hybrid id space
     # Per-partition scalar consts are replicated across partitions in the
@@ -250,22 +371,64 @@ def _superstep_hybrid(program: VertexProgram, cfg: _HybridCfg, arrs: dict,
                            interpret=cfg.interpret)
 
     if "push_src" in arrs:
-        def push(x):
-            msgs = x[:, arrs["push_src"]]                # [Q, E]
+        def push_msgs(x):
+            # Extended (n+1)-segment form: sentinel slots (src = dst = n,
+            # e.g. the dynamic engine's spare push capacity) gather the
+            # ⊕-identity sink and reduce into a discarded segment, so
+            # padding is inert by construction.
+            x_ext = jnp.concatenate(
+                [x, jnp.full((q, 1), ident, x.dtype)], axis=1)
+            msgs = x_ext[:, arrs["push_src"]]            # [Q, E]
             if "push_w" in arrs:
                 msgs = msgs + arrs["push_w"]
-            offs = (jnp.arange(q, dtype=jnp.int32)
-                    * cfg.num_vertices)[:, None]
+            offs = (jnp.arange(q, dtype=jnp.int32) * (n + 1))[:, None]
             y = jax.ops.segment_min(msgs.ravel(),
                                     (arrs["push_dst"][None] + offs).ravel(),
-                                    num_segments=q * cfg.num_vertices)
-            return y.reshape(q, cfg.num_vertices)
+                                    num_segments=q * (n + 1))
+            return y.reshape(q, n + 1)[:, :n], msgs
 
-        # One direction per superstep for the whole batch: the mean frontier
-        # density across queries decides (direction is a perf choice only —
-        # both directions are exact for min combines).
-        density = jnp.mean((x != ident).astype(jnp.float32))
-        y = jax.lax.cond(density < cfg.pull_threshold, push, pull, x)
+        # Per-query frontier density vs the fitted crossover, guarded by
+        # the unvisited mass (still-⊕-identity vertices never early-exit
+        # a pull scan), picks the direction — a perf choice only; both
+        # directions are exact for min combines, and each query votes for
+        # itself (satellite 1).
+        nf = jnp.float32(max(n, 1))
+        density = jnp.sum((x != ident).astype(jnp.float32), axis=1) / nf
+        unvisited = jnp.sum(
+            (vals[spec.gather[0]] == ident).astype(jnp.float32), axis=1) / nf
+        want = _dopt_want(cfg.forced if track else None, density, unvisited,
+                          cfg.pull_threshold)
+
+        if track:
+            e_dense = jnp.full((q,), cfg.e_dense, jnp.int32)
+
+            def run_push(x):
+                y, msgs = push_msgs(x)
+                cnt = jnp.sum((msgs != ident).astype(jnp.int32), axis=1)
+                return y, cnt, jnp.zeros((q,), jnp.int32)
+
+            # Under the uniform licence a row already holding a value is
+            # final — a sequential bottom-up skips it (zero scanned slots).
+            skip = ((vals[spec.gather[0]] != ident) if cfg.uniform
+                    else None)
+
+            def run_pull(x):
+                y, scanned = hybrid_spmv_scan(
+                    arrs["dense"], arrs["ell_col"], arrs["ell_val"], x,
+                    arrs["ell_kreal"], semiring=cfg.semiring,
+                    k_dense=cfg.k_dense, early_exit=cfg.uniform,
+                    skip=skip, interpret=cfg.interpret)
+                return y, jnp.zeros((q,), jnp.int32), scanned + e_dense
+
+            y, cnt_push, cnt_pull = _direction_select(
+                want, run_push, run_pull, x)
+            dopt = _dopt_fold(dopt, want, cnt_push + cnt_pull)
+        else:
+            zero = jnp.zeros((q,), jnp.int32)
+            y, _, _ = _direction_select(
+                want,
+                lambda x: (push_msgs(x)[0], zero, zero),
+                lambda x: (pull(x), zero, zero), x)
     else:
         y = pull(x)
 
@@ -273,6 +436,8 @@ def _superstep_hybrid(program: VertexProgram, cfg: _HybridCfg, arrs: dict,
     acc = y_ext[:, arrs["hid"]]             # back to [Q, P, v_max] layout
     new_state, finished = jax.vmap(program.apply_fn,
                                    in_axes=(0, 0, None))(state, acc, step)
+    if dopt is not None:
+        new_state = dict(new_state, **dopt)
     return new_state, all_finished(finished)
 
 
@@ -282,8 +447,10 @@ def _superstep_hybrid_dist(program: VertexProgram, shd, arrs: dict,
                            all_finished: Callable[[Array], Array],
                            state: State, step: Array, *,
                            guard=None,
-                           n_shards: Optional[int] = None
-                           ) -> Tuple[State, Array]:
+                           n_shards: Optional[int] = None,
+                           forced: Optional[int] = None,
+                           uniform: bool = False,
+                           e_dense: int = 0) -> Tuple[State, Array]:
     """One BSP superstep of the *distributed* degree-split backend.
 
     Runs inside ``shard_map``: ``state`` leaves are the local
@@ -304,7 +471,7 @@ def _superstep_hybrid_dist(program: VertexProgram, shd, arrs: dict,
       4. scatter inbox values into the local accumulator, combine with the
          SpMV result, apply + vote (global AND via psum).
     """
-    from repro.core.hybrid import add_identity, hybrid_spmv
+    from repro.core.hybrid import add_identity, hybrid_spmv, hybrid_spmv_scan
     from repro.kernels.ops import outbox_reduce_op
 
     chaos.visit("kernel.hybrid", distributed=True)
@@ -313,6 +480,8 @@ def _superstep_hybrid_dist(program: VertexProgram, shd, arrs: dict,
     pl = shd.parts_per_shard
     v_max = shd.v_max
     slot = arrs["slot"][0]
+    state, dopt = _dopt_strip(state)
+    track = dopt is not None and "push_src" in arrs and "ell_kreal" in arrs
     q = state[spec.gather[0]].shape[0]
     vals = {k: state[k].astype(jnp.float32).reshape(q, -1)[:, slot]
             for k in spec.gather}                       # [Q, n_max]
@@ -332,7 +501,7 @@ def _superstep_hybrid_dist(program: VertexProgram, shd, arrs: dict,
                            k_dense=shd.k_dense, interpret=interpret)
 
     if "push_src" in arrs:
-        def push(xv):
+        def push_msgs(xv):
             x_ext = jnp.concatenate(
                 [xv, jnp.full((q, 1), ident, xv.dtype)], axis=1)
             msgs = x_ext[:, arrs["push_src"][0]]        # [Q, ei]
@@ -343,13 +512,64 @@ def _superstep_hybrid_dist(program: VertexProgram, shd, arrs: dict,
             y = jax.ops.segment_min(
                 msgs.ravel(), (arrs["push_dst"][0][None] + offs).ravel(),
                 num_segments=q * (shd.n_max + 1))
-            return y.reshape(q, shd.n_max + 1)[:, : shd.n_max]
+            return y.reshape(q, shd.n_max + 1)[:, : shd.n_max], msgs
 
-        # Batch-aggregate frontier density picks one direction per superstep
-        # (a perf choice only; both directions are exact for min combines).
-        density = (jnp.sum((x != ident).astype(jnp.float32))
-                   / jnp.maximum(q * n_vert.astype(jnp.float32), 1.0))
-        y = jax.lax.cond(density < pull_threshold, push, pull, x)
+        # Per-(query, shard) frontier density vs this shard's fitted
+        # crossover, guarded by the shard's unvisited mass, picks the
+        # direction — each query votes for itself from the shard's own
+        # frontier slice (a perf choice only; both directions are exact
+        # for min combines).
+        thr = (arrs["pull_thr"][0][0, 0] if "pull_thr" in arrs
+               else pull_threshold)
+        nf = jnp.maximum(n_vert.astype(jnp.float32), 1.0)
+        density = jnp.sum((x != ident).astype(jnp.float32), axis=1) / nf
+        unvisited = jnp.sum(jnp.logical_and(
+            vals[spec.gather[0]] == ident,
+            vmask[None]).astype(jnp.float32), axis=1) / nf
+        want = _dopt_want(forced if track else None, density, unvisited, thr)
+
+        if track:
+            ed = (arrs["e_dense"][0][0] if "e_dense" in arrs
+                  else jnp.int32(e_dense))
+            e_dense_q = jnp.broadcast_to(ed.astype(jnp.int32), (q,))
+
+            def run_push(xv):
+                y, msgs = push_msgs(xv)
+                cnt = jnp.sum((msgs != ident).astype(jnp.int32), axis=1)
+                return y, cnt, jnp.zeros((q,), jnp.int32)
+
+            # Uniform licence: rows already holding a value are final and
+            # charge zero scanned slots (sequential bottom-up skips them).
+            skip = ((vals[spec.gather[0]] != ident) if uniform else None)
+
+            def run_pull(xv):
+                y, scanned = hybrid_spmv_scan(
+                    arrs["dense"][0], arrs["ell_col"][0], arrs["ell_val"][0],
+                    xv, arrs["ell_kreal"][0], semiring=shd.semiring,
+                    k_dense=shd.k_dense, early_exit=uniform,
+                    skip=skip, interpret=interpret)
+                return y, jnp.zeros((q,), jnp.int32), scanned + e_dense_q
+
+            y, cnt_push, cnt_pull = _direction_select(
+                want, run_push, run_pull, x)
+            cnt = cnt_push + cnt_pull
+            if shd.has_boundary:
+                # Boundary edges always run the push-style outbox reduction
+                # below, whichever way the intra step went — charge them in
+                # both directions.
+                x_ext = jnp.concatenate(
+                    [x, jnp.full((q, 1), ident, x.dtype)], axis=1)
+                live = (x_ext[:, arrs["b_src"][0]] != ident)
+                live = jnp.logical_and(
+                    live, (arrs["b_mask"][0] != 0)[None])
+                cnt = cnt + jnp.sum(live.astype(jnp.int32), axis=1)
+            dopt = _dopt_fold(dopt, want, cnt)
+        else:
+            zero = jnp.zeros((q,), jnp.int32)
+            y, _, _ = _direction_select(
+                want,
+                lambda xv: (push_msgs(xv)[0], zero, zero),
+                lambda xv: (pull(xv), zero, zero), x)
     else:
         y = pull(x)
 
@@ -410,6 +630,8 @@ def _superstep_hybrid_dist(program: VertexProgram, shd, arrs: dict,
         acc = _COMBINE[program.combine](acc, racc)
     new_state, finished = jax.vmap(program.apply_fn,
                                    in_axes=(0, 0, None))(state, acc, step)
+    if dopt is not None:
+        new_state = dict(new_state, **dopt)
     return new_state, all_finished(finished)
 
 
@@ -475,7 +697,9 @@ def _superstep(dims: _Dims, program: VertexProgram, edges: dict,
                all_finished: Callable[[Array], Array],
                fused_cfg: Optional[FusedConfig],
                state: BatchedState, step: Array,
-               dyn: Optional[dict] = None) -> Tuple[BatchedState, Array]:
+               dyn: Optional[dict] = None,
+               dopt_cfg: Optional[_DoptCfg] = None
+               ) -> Tuple[BatchedState, Array]:
     """One BSP superstep of the whole query batch over the local shard.
 
     ``dyn`` (a ``DynamicGraph.payload`` dict, sharded alongside ``edges``)
@@ -490,6 +714,10 @@ def _superstep(dims: _Dims, program: VertexProgram, edges: dict,
     combine = program.combine
     seg_op = _SEGMENT_OP[combine]
     pl = edges["src"].shape[0]  # local partition count
+    state, dopt = _dopt_strip(state)
+    spec = program.edge_msg
+    track = (dopt is not None and dyn is None and spec is not None
+             and dopt_cfg is not None and "t_col" in edges)
 
     if dyn is not None:
         edges = dict(edges)
@@ -503,10 +731,99 @@ def _superstep(dims: _Dims, program: VertexProgram, edges: dict,
                 edges["blk_mask"].dtype)
 
     # -- compute: per-edge messages, reduced over extended destinations -----
-    if fused_cfg is not None and program.edge_msg is not None:
-        acc = _compute_fused(dims, program, edges, fused_cfg, state, step)
+    def compute_push(state, step):
+        if fused_cfg is not None and program.edge_msg is not None:
+            return _compute_fused(dims, program, edges, fused_cfg, state,
+                                  step)
+        return _compute_reference(dims, program, edges, state, step)
+
+    if track:
+        from repro.kernels import ops as kops
+
+        # Min combines only: both directions reduce the same per-destination
+        # value multiset, so direction is a pure perf choice (bitwise).
+        ident = jnp.float32(jnp.inf)
+        v_max = dims.v_max
+        q = state[spec.gather[0]].shape[0]
+        # Per-vertex messages; the push direction's per-edge messages are
+        # gathers of exactly these values (the reference↔fused bitwise
+        # parity already leans on edge_fn ≡ gather∘edge_msg.fn).
+        vvals = {k: state[k].astype(jnp.float32) for k in spec.gather}
+        vconsts = {c: state[c][:, :, None].astype(jnp.float32)
+                   for c in spec.consts}
+        w_ident = None
+        if spec.use_weight:
+            w_ident = jnp.float32(0.0 if spec.weight_op == "add" else 1.0)
+        xv = spec.fn(vvals, w_ident, step.astype(jnp.float32),
+                     vconsts).astype(jnp.float32)        # [Q, Pl, v_max]
+        vmask = edges["t_vmask"]
+        act = jnp.logical_and(xv != ident,
+                              vmask[None]).astype(jnp.float32)
+        nreal = jnp.maximum(jnp.sum(vmask.astype(jnp.float32)), 1.0)
+        density = jnp.sum(act, axis=(1, 2)) / nreal
+        unvisited = jnp.sum(jnp.logical_and(
+            vvals[spec.gather[0]] == ident,
+            vmask[None]).astype(jnp.float32), axis=(1, 2)) / nreal
+        deg = edges["t_deg"].astype(jnp.float32)
+        bnd = edges["t_bnd"].astype(jnp.float32)
+        # One direction serves every partition in this trace, so the vote
+        # threshold is the edge-mass-weighted blend of the per-partition
+        # fitted crossovers — exactly the shard's own fit when shard_map
+        # hands this trace a single partition.
+        emass = jnp.sum(deg, axis=1)
+        thr = (jnp.sum(edges["t_thr"][:, 0] * emass)
+               / jnp.maximum(jnp.sum(emass), 1.0))
+        want = _dopt_want(dopt_cfg.forced, density, unvisited, thr)
+        # Push examines every out-edge of a live vertex; the boundary leg
+        # always pushes (its messages ride the outbox/exchange either way),
+        # so pull is charged the boundary out-edges on top of its scans.
+        cnt_push = jnp.sum(act * deg[None], axis=(1, 2)).astype(jnp.int32)
+        cnt_bnd = jnp.sum(act * bnd[None], axis=(1, 2)).astype(jnp.int32)
+        zero = jnp.zeros((q,), jnp.int32)
+
+        def run_push(opd):
+            st, step = opd
+            return compute_push(st, step), cnt_push, zero
+
+        def run_pull(opd):
+            st, step = opd
+            # Boundary-only reference pass: intra destinations redirect to
+            # the segment sink, leaving outbox slots bitwise identical to
+            # the full compute's — the local region comes from the
+            # bottom-up kernel instead.
+            e_bnd = dict(edges)
+            e_bnd["dst_ext"] = jnp.where(edges["dst_ext"] < v_max, v_max,
+                                         edges["dst_ext"])
+            acc_b = _compute_reference(dims, program, e_bnd, st, step)
+            offs = (jnp.arange(pl, dtype=jnp.int32)
+                    * (v_max + 1))[:, None, None]
+            colf = (edges["t_col"] + offs).reshape(pl * v_max, -1)
+            xf = jnp.concatenate(
+                [xv, jnp.full((q, pl, 1), ident, xv.dtype)],
+                axis=2).reshape(q, pl * (v_max + 1))
+            valf = None
+            if dopt_cfg.semiring == "min_plus":
+                valf = edges["t_val"].reshape(pl * v_max, -1)
+            # Uniform licence: already-written rows are final — a
+            # sequential bottom-up visits only unvisited rows, so they
+            # charge zero scanned slots in the work model.
+            skip = None
+            if dopt_cfg.uniform:
+                skip = (vvals[spec.gather[0]] != ident).reshape(
+                    q, pl * v_max)
+            y, scanned = kops.bottomup_scan_op(
+                colf, valf, xf, edges["t_kreal"].reshape(pl * v_max),
+                semiring=dopt_cfg.semiring, early_exit=dopt_cfg.uniform,
+                skip=skip, interpret=dopt_cfg.interpret)
+            acc = acc_b.at[:, :, :v_max].min(y.reshape(q, pl, v_max))
+            cnt = jnp.sum(scanned, axis=1).astype(jnp.int32) + cnt_bnd
+            return acc, zero, cnt
+
+        acc, cp, cl = _direction_select(want, run_push, run_pull,
+                                        (state, step))
+        dopt = _dopt_fold(dopt, want, cp + cl)
     else:
-        acc = _compute_reference(dims, program, edges, state, step)
+        acc = compute_push(state, step)
 
     if dyn is not None:
         # Delta-slot tail: inserted edges, reduced over the same segment
@@ -539,6 +856,8 @@ def _superstep(dims: _Dims, program: VertexProgram, edges: dict,
     # -- apply + vote (per query) -------------------------------------------
     new_state, finished = jax.vmap(program.apply_fn,
                                    in_axes=(0, 0, None))(state, total, step)
+    if dopt is not None:
+        new_state = dict(new_state, **dopt)
     return new_state, all_finished(finished)
 
 
@@ -1111,25 +1430,6 @@ def tiered_cache_entries() -> int:
 # one-shot DeprecationWarnings for the pre-execute() aliases
 # ---------------------------------------------------------------------------
 
-_ALIAS_WARNED: set = set()
-
-
-def _warn_alias(engine, name: str, replacement: str) -> None:
-    """One-shot DeprecationWarning per alias name, suppressed while
-    ``execute()`` itself dispatches through the alias (the jitted class
-    attributes must stay the methods they are — their compile cache is the
-    serving contract's retrace gate — so the warning rides *inside* them,
-    gated on the engine's ``_alias_warn_ok`` flag)."""
-    if not getattr(engine, "_alias_warn_ok", True):
-        return
-    if name in _ALIAS_WARNED:
-        return
-    _ALIAS_WARNED.add(name)
-    warnings.warn(
-        f"BSPEngine.{name}() is a deprecated alias; call "
-        f"engine.{replacement} instead", DeprecationWarning, stacklevel=3)
-
-
 REFERENCE = "reference"
 FUSED = "fused"
 HYBRID = "hybrid"
@@ -1163,7 +1463,8 @@ class BSPEngine:
                  max_span: int = 4096, gather_chunk: int = 256,
                  interpret: Optional[bool] = None,
                  hybrid_k_dense: Optional[int] = None,
-                 pull_threshold: float = 0.05,
+                 pull_threshold: Optional[float] = None,
+                 direction: str = "auto",
                  direction_switch: bool = True,
                  dynamic_ell_spare: int = 8,
                  tiered=None, win_blocks: int = 8):
@@ -1174,6 +1475,9 @@ class BSPEngine:
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; pick one of "
                              f"{BACKENDS}")
+        if direction not in ("auto", "push", "pull"):
+            raise ValueError(f"direction must be 'auto', 'push' or 'pull', "
+                             f"got {direction!r}")
         self.backend = backend
         self.fused = backend == FUSED
         self.interpret = interpret
@@ -1181,15 +1485,26 @@ class BSPEngine:
         self._max_span = max_span
         self._gather_chunk = gather_chunk
         self._hybrid_k_dense = hybrid_k_dense
-        self._pull_threshold = pull_threshold
+        # None → fit the push/pull crossover from the perf model
+        # (perf_model.fit_pull_threshold, per backend / per shard); a float
+        # forces that density threshold everywhere.
+        self._pull_threshold_req = pull_threshold
+        self._pull_threshold = (0.05 if pull_threshold is None
+                                else pull_threshold)
+        self.direction = direction
+        self._dopt_forced = {"auto": None, "push": _DIR_PUSH,
+                             "pull": _DIR_PULL}[direction]
         self._direction_switch = direction_switch
+        # Per-query direction decisions of the last execute() on an
+        # eligible min-combine program: {"direction" [Q, P] (-1 = never
+        # decided), "edges_examined" [Q], "switches" [Q]}.
+        self.last_direction_stats: Optional[dict] = None
         self._dyn_ell_spare = dynamic_ell_spare
         # Out-of-core tiering: ``tiered`` is an HBM byte budget (int) or a
         # prebuilt partition.TierPlan; None keeps everything resident.
         self._tiered_req = tiered
         self._win_blocks = win_blocks
         self.tier_plan = None
-        self._alias_warn_ok = True
         # One guard per engine: jitted chunk windows arm it with the traced
         # poison operand and accumulate exchange-checksum mismatches.
         self._guard = _ExchangeGuard()
@@ -1219,15 +1534,15 @@ class BSPEngine:
             # Instance-level dispatch: the class attributes stay the jitted
             # static-path methods (their compile-cache introspection is part
             # of the serving contract); a dynamic engine shadows them.
-            self.run_batched = self._run_batched_dyn
-            self.run_fixed_batched = self._run_fixed_batched_dyn
+            self._run_batched = self._run_batched_dyn
+            self._run_fixed_batched = self._run_fixed_batched_dyn
         if self.tier_plan is not None:
             # Tiered shadows go on *after* the dynamic ones so tiered
             # dispatch wins; the tiered loop folds the dynamic payload in
             # itself (hot rows sliced on device, cold tombstones/deltas
             # streamed with their partitions' windows).
-            self.run_batched = self._run_batched_tiered
-            self.run_fixed_batched = self._run_fixed_batched_tiered
+            self._run_batched = self._run_batched_tiered
+            self._run_fixed_batched = self._run_fixed_batched_tiered
 
     @property
     def pg(self) -> PartitionedGraph:
@@ -1444,9 +1759,12 @@ class BSPEngine:
     def _hybrid_key(self, program: VertexProgram):
         # use_weight in the key: a weighted and a weightless program can map
         # to the same semiring (plus_times) but need different ⊗ values
-        # (edge weights vs multiplicity counts).
+        # (edge weights vs multiplicity counts).  frontier_uniform too: it
+        # is baked into the static cfg (bottom-up early-exit licence), and
+        # programs sharing a semiring can disagree on it (BFS vs CC).
         return (self._hybrid_semiring(program), program.use_reverse,
-                program.edge_msg.use_weight)
+                program.edge_msg.use_weight,
+                program.edge_msg.frontier_uniform)
 
     def _build_hybrid(self, program: VertexProgram, g,
                       with_push: bool) -> Tuple[_HybridCfg, dict, Any]:
@@ -1480,11 +1798,24 @@ class BSPEngine:
             arrs["push_dst"] = hg.inv_perm[g.col].astype(np.int32)
             if semiring == "min_plus" and g.weights is not None:
                 arrs["push_w"] = g.weights.astype(np.float32)
+            # real (non-sentinel) in-neighbour slots per ELL row — the
+            # bottom-up scan kernel's per-row work bound
+            arrs["ell_kreal"] = (hg.ell_col != n).sum(axis=1).astype(
+                np.int32)
 
+        thr = self._pull_threshold_req
+        if thr is None:
+            from repro.core import perf_model
+            thr = perf_model.fit_pull_threshold(
+                g.num_edges / max(n, 1), hg.ell_col.shape[1],
+                backend="hybrid")
         cfg = _HybridCfg(semiring=semiring, k_dense=hg.k_dense,
                          num_vertices=n,
-                         pull_threshold=self._pull_threshold,
-                         interpret=self.interpret)
+                         pull_threshold=float(thr),
+                         interpret=self.interpret,
+                         forced=self._dopt_forced,
+                         uniform=program.edge_msg.frontier_uniform,
+                         e_dense=int(hg.k_dense) ** 2)
         return cfg, arrs, hg
 
     def _hybrid_for(self, program: VertexProgram) -> Tuple[_HybridCfg, dict]:
@@ -1538,6 +1869,82 @@ class BSPEngine:
         return _Dims(self.dims.num_parts, self.dims.v_max,
                      edges["src"].shape[1], edges["inbox_dst"].shape[2])
 
+    # ------------------ direction-optimized traversal ----------------------
+
+    def _dopt_semiring(self, program: VertexProgram) -> Optional[str]:
+        """Min semiring the reference/fused direction machinery would run
+        ``program`` under, or None when ineligible."""
+        spec = program.edge_msg
+        if spec is None or program.combine != MIN:
+            return None
+        if spec.use_weight:
+            return "min_plus" if spec.weight_op == "add" else None
+        return "min"
+
+    def _dopt_cfg_for(self, program: VertexProgram) -> Optional[_DoptCfg]:
+        semiring = self._dopt_semiring(program)
+        if semiring is None:
+            return None
+        return _DoptCfg(semiring=semiring,
+                        uniform=program.edge_msg.frontier_uniform,
+                        forced=self._dopt_forced, interpret=self.interpret)
+
+    def _direction_enabled(self, program: VertexProgram) -> bool:
+        """Can ``execute`` thread the direction carry through ``program``?
+
+        Min combines with an EdgeMessage only (direction is a bitwise no-op
+        there).  The hybrid backend switches on its push arenas (static and
+        dynamic); reference/fused need the transposed layout, which does
+        not track mutations — dynamic graphs and tiered engines stay
+        push-only, as do ``use_reverse`` programs (their traversal direction
+        is already the reverse graph's)."""
+        if not self._direction_switch or self.tier_plan is not None:
+            return False
+        if program.combine != MIN or program.edge_msg is None:
+            return False
+        if self._uses_hybrid(program):
+            return True
+        if self.dg is not None or program.use_reverse:
+            return False
+        if self._dopt_semiring(program) is None:
+            return False
+        if (self._dopt_semiring(program) == "min_plus"
+                and self._pg.fwd.weight is None):
+            return False
+        return self._fwd is not None
+
+    def _ensure_direction_edges(self) -> None:
+        """Lazily grow the forward edges dict with the transposed-ELL
+        arrays the pull direction needs (built once per binding; rebinds
+        drop them with the dict).  Keys ride the edges dict so they shard
+        over the partition axis as ordinary shard_map operands."""
+        if self._fwd is None or "t_col" in self._fwd:
+            return
+        from repro.core import perf_model
+        from repro.core.partition import build_transposed_ell
+
+        pg = self._pg
+        tell = build_transposed_ell(pg.fwd, pg.v_max)
+        vmask = np.asarray(pg.vertex_mask, dtype=bool)
+        nreal = np.maximum(vmask.sum(axis=1), 1).astype(np.float64)
+        avg = tell.deg_out.sum(axis=1) / nreal
+        if self._pull_threshold_req is not None:
+            thr = np.full((pg.num_parts, 1), self._pull_threshold_req,
+                          np.float32)
+        else:
+            thr = perf_model.fit_shard_pull_thresholds(
+                avg, [tell.kmax] * pg.num_parts,
+                backend=self.backend).reshape(-1, 1)
+        self._fwd.update(
+            t_col=jnp.asarray(tell.col),
+            t_kreal=jnp.asarray(tell.kreal),
+            t_deg=jnp.asarray(tell.deg_out),
+            t_bnd=jnp.asarray(tell.deg_bnd),
+            t_vmask=jnp.asarray(vmask),
+            t_thr=jnp.asarray(thr.astype(np.float32)))
+        if tell.val is not None:
+            self._fwd["t_val"] = jnp.asarray(tell.val)
+
     def _step_fn(self, program: VertexProgram, edges: Optional[dict],
                  exchange: Callable, all_finished: Callable) -> Callable:
         if self._uses_hybrid(program):
@@ -1546,7 +1953,8 @@ class BSPEngine:
                                      all_finished)
         return functools.partial(_superstep, self.dims_for(edges), program,
                                  edges, exchange, all_finished,
-                                 self.fused_cfg_for(program))
+                                 self.fused_cfg_for(program),
+                                 dopt_cfg=self._dopt_cfg_for(program))
 
     def _edges_or_none(self, program: VertexProgram) -> Optional[dict]:
         """Edge arrays for the program, or None when the hybrid backend
@@ -1586,12 +1994,23 @@ class BSPEngine:
           mask; returns ``(state, steps_q)`` or ``None`` when the
           program has no :class:`IncrementalForm`.
 
-        The legacy entry points (``run``, ``run_fixed``, ``run_batched``,
-        ``run_fixed_batched``, ``run_batched_chunked``,
-        ``run_incremental``) survive as thin deprecated aliases of these
-        modes — they stay because their jitted class attributes are the
-        compile-cache the zero-retrace serving contract introspects.
-        Incompatible keyword combinations raise with the fix spelled out.
+        Eligible min-combine programs additionally run **direction
+        optimized** (docs/traversal.md): execute() threads three [Q, P]
+        int32 leaves through the carry (per-shard direction, deterministic
+        edges-examined counter, switch counter), strips them from the
+        returned state, and records per-query aggregates in
+        ``engine.last_direction_stats``.  Chunked/continuous mode stays
+        push-only — the slot-refill protocol swaps user state rows and
+        must not see engine-internal leaves.
+
+        This is the ONLY public run entry point (the historical
+        ``run``/``run_batched``/``run_fixed*``/``run_incremental``/
+        ``run_batched_chunked`` aliases are gone — see docs/serving.md for
+        the migration table).  The jitted private methods behind each mode
+        (``_run_batched``, ``_run_fixed_batched``) remain class attributes
+        because their compile cache is the zero-retrace serving contract's
+        retrace gate.  Incompatible keyword combinations raise with the
+        fix spelled out.
         """
         modes = {"num_steps": num_steps is not None,
                  "chunk": chunk is not None,
@@ -1625,62 +2044,75 @@ class BSPEngine:
                     f"chunk= — boundary hooks and resume carries only "
                     f"exist in chunked mode; pass chunk=<supersteps per "
                     f"window> (e.g. chunk=2).")
-        self._alias_warn_ok = False
-        try:
-            if modes["num_steps"]:
-                return self.run_fixed_batched(program, num_steps, state)
-            if modes["chunk"]:
-                return self.run_batched_chunked(
-                    program, state, checkpoint_every=chunk,
-                    on_chunk=on_chunk, start_step=start_step, fin=fin,
-                    steps_q=steps_q, max_chunks=max_chunks,
-                    chaos_ctx=chaos_ctx, monitor=monitor)
-            if modes["incremental"]:
-                return self.run_incremental(program, state, incremental)
-            return self.run_batched(program, state)
-        finally:
-            self._alias_warn_ok = True
+        if modes["chunk"]:
+            return self._run_batched_chunked(
+                program, state, checkpoint_every=chunk,
+                on_chunk=on_chunk, start_step=start_step, fin=fin,
+                steps_q=steps_q, max_chunks=max_chunks,
+                chaos_ctx=chaos_ctx, monitor=monitor)
+        self.last_direction_stats = None
+        if modes["incremental"]:
+            inc = program.incremental
+            if inc is None:
+                return None
+            # Seed here, then fall through to convergence dispatch so the
+            # relaxation program runs direction-optimized too.
+            state = inc.seed(state, jnp.asarray(incremental))
+            program = inc.program
+        use_dopt = isinstance(state, dict) and self._direction_enabled(
+            program)
+        if use_dopt:
+            if not self._uses_hybrid(program):
+                self._ensure_direction_edges()
+            q = num_queries(state)
+            parts = self._pg.num_parts
+            state = dict(
+                state,
+                _dopt_dir=jnp.full((q, parts), -1, jnp.int32),
+                _dopt_edges=jnp.zeros((q, parts), jnp.int32),
+                _dopt_switch=jnp.zeros((q, parts), jnp.int32))
+        if modes["num_steps"]:
+            out = self._run_fixed_batched(program, num_steps, state)
+            return self._dopt_finish(out) if use_dopt else out
+        out_state, steps_run = self._run_batched(program, state)
+        if use_dopt:
+            out_state = self._dopt_finish(out_state)
+        return out_state, steps_run
+
+    def _dopt_finish(self, state: BatchedState) -> BatchedState:
+        """Strip the direction carry and record per-query aggregates."""
+        state = dict(state)
+        d = np.asarray(state.pop(_DOPT_KEYS[0]))
+        e = np.asarray(state.pop(_DOPT_KEYS[1]))
+        s = np.asarray(state.pop(_DOPT_KEYS[2]))
+        self.last_direction_stats = dict(
+            direction=d,
+            edges_examined=e.sum(axis=1).astype(np.int64),
+            switches=s.sum(axis=1).astype(np.int64))
+        return state
 
     @functools.partial(jax.jit, static_argnums=(0, 1))
-    def run_batched(self, program: VertexProgram,
-                    state: BatchedState) -> Tuple[BatchedState, Array]:
+    def _run_batched(self, program: VertexProgram,
+                     state: BatchedState) -> Tuple[BatchedState, Array]:
         """Advance a [Q, Pl, ...] batch of queries through **one** compiled
         ``lax.while_loop`` until every query votes finish; returns the final
         batched state and per-query superstep counts [Q].  The compiled
         computation is cached on (program, state shape): batches of the same
-        Q never retrace, whatever their sources.
-
-        Deprecated alias: prefer ``execute(program, state)`` — kept (and
-        kept jitted) because this class attribute *is* the compile cache
-        the serving contract introspects."""
-        _warn_alias(self, "run_batched", "execute(program, state)")
+        Q never retrace, whatever their sources.  Private: dispatch through
+        ``execute(program, state)`` — this stays a jitted class attribute
+        because its compile cache is the serving contract's retrace gate."""
         edges = self._edges_or_none(program)
         step_fn = self._step_fn(program, edges, self._exchange,
                                 self._all_finished)
         return _run_batched_loop(step_fn, program.max_steps, state,
                                  num_queries(state))
 
-    def run(self, program: VertexProgram, state: State) -> Tuple[State, Array]:
-        """Run supersteps until all partitions vote finish (lax.while_loop).
-
-        Single-query compatibility wrapper: a Q=1 slice of the batched
-        path, bitwise-identical semantics to the pre-batching engine.
-        Deprecated alias: prefer ``execute(program, batch_state(state))``."""
-        _warn_alias(self, "run", "execute(program, batch_state(state))")
-        ok, self._alias_warn_ok = self._alias_warn_ok, False
-        try:
-            state, steps = self.run_batched(program, batch_state(state))
-        finally:
-            self._alias_warn_ok = ok
-        return unbatch_state(state), steps[0]
-
     @functools.partial(jax.jit, static_argnums=(0, 1, 2))
-    def run_fixed_batched(self, program: VertexProgram, num_steps: int,
-                          state: BatchedState) -> BatchedState:
+    def _run_fixed_batched(self, program: VertexProgram, num_steps: int,
+                           state: BatchedState) -> BatchedState:
         """Fixed-iteration algorithms (PageRank), batched over queries.
-        Deprecated alias: prefer ``execute(program, state, num_steps=n)``."""
-        _warn_alias(self, "run_fixed_batched",
-                    "execute(program, state, num_steps=n)")
+        Private: dispatch through ``execute(program, state,
+        num_steps=n)``."""
         edges = self._edges_or_none(program)
         step_fn = self._step_fn(program, edges, self._exchange,
                                 self._all_finished)
@@ -1690,20 +2122,6 @@ class BSPEngine:
             return state
 
         return jax.lax.fori_loop(0, num_steps, body, state)
-
-    def run_fixed(self, program: VertexProgram, num_steps: int,
-                  state: State) -> State:
-        """Fixed-iteration algorithms (PageRank); Q=1 wrapper.
-        Deprecated alias: prefer ``execute(..., num_steps=n)``."""
-        _warn_alias(self, "run_fixed",
-                    "execute(program, batch_state(state), num_steps=n)")
-        ok, self._alias_warn_ok = self._alias_warn_ok, False
-        try:
-            return unbatch_state(
-                self.run_fixed_batched(program, num_steps,
-                                       batch_state(state)))
-        finally:
-            self._alias_warn_ok = ok
 
     # ---------------------- checkpointable run mode ------------------------
 
@@ -1765,14 +2183,14 @@ class BSPEngine:
         return self._run_chunk(program, chunk, state, step, fin, steps_q,
                                poison)
 
-    def run_batched_chunked(self, program: VertexProgram,
-                            state: BatchedState, *, checkpoint_every: int,
-                            on_chunk: Optional[Callable] = None,
-                            start_step: int = 0, fin=None, steps_q=None,
-                            max_chunks: Optional[int] = None,
-                            chaos_ctx: Optional[dict] = None,
-                            monitor=None):
-        """``run_batched`` in bounded ``checkpoint_every``-superstep chunks.
+    def _run_batched_chunked(self, program: VertexProgram,
+                             state: BatchedState, *, checkpoint_every: int,
+                             on_chunk: Optional[Callable] = None,
+                             start_step: int = 0, fin=None, steps_q=None,
+                             max_chunks: Optional[int] = None,
+                             chaos_ctx: Optional[dict] = None,
+                             monitor=None):
+        """``_run_batched`` in bounded ``checkpoint_every``-superstep chunks.
 
         Chains :func:`_run_chunked_loop` windows, so the full superstep
         sequence — and every query's result and step count — is **bitwise
@@ -1814,10 +2232,8 @@ class BSPEngine:
         ``exchange.payload`` chaos sites inject here (host seam / traced
         poison operand — neither perturbs the jit cache).
 
-        Deprecated alias: prefer ``execute(program, state, chunk=k, ...)``.
+        Private: dispatch through ``execute(program, state, chunk=k, ...)``.
         """
-        _warn_alias(self, "run_batched_chunked",
-                    "execute(program, state, chunk=k, ...)")
         if self.tier_plan is not None:
             raise ValueError(
                 "chunked/continuous mode is not supported on a tiered "
@@ -1917,16 +2333,13 @@ class BSPEngine:
 
     def _run_batched_dyn(self, program: VertexProgram,
                          state: BatchedState) -> Tuple[BatchedState, Array]:
-        """Dynamic-graph ``run_batched``: same contract, but every graph
+        """Dynamic-graph ``_run_batched``: same contract, but every graph
         array rides as a traced argument so mutation batches never retrace
         (see ``_run_dyn_jit``)."""
-        _warn_alias(self, "run_batched", "execute(program, state)")
         return self._dispatch_dyn(program, state, fixed_steps=None)
 
     def _run_fixed_batched_dyn(self, program: VertexProgram, num_steps: int,
                                state: BatchedState) -> BatchedState:
-        _warn_alias(self, "run_fixed_batched",
-                    "execute(program, state, num_steps=n)")
         return self._dispatch_dyn(program, state, fixed_steps=num_steps)
 
     def _dispatch_dyn(self, program: VertexProgram, state: BatchedState,
@@ -1947,14 +2360,11 @@ class BSPEngine:
     def _run_batched_tiered(self, program: VertexProgram,
                             state: BatchedState
                             ) -> Tuple[BatchedState, Array]:
-        _warn_alias(self, "run_batched", "execute(program, state)")
         return self._tiered_run(program, state)
 
     def _run_fixed_batched_tiered(self, program: VertexProgram,
                                   num_steps: int,
                                   state: BatchedState) -> BatchedState:
-        _warn_alias(self, "run_fixed_batched",
-                    "execute(program, state, num_steps=n)")
         state, _ = self._tiered_run(_fixed_step_program(program, num_steps),
                                     state)
         return state
@@ -2154,39 +2564,6 @@ class BSPEngine:
                     window_count=int(plan.window_count),
                     num_hot=len(plan.hot), num_cold=len(plan.cold))
 
-    def run_incremental(self, program: VertexProgram,
-                        prev_state: BatchedState, dirty
-                        ) -> Optional[Tuple[BatchedState, Array]]:
-        """Warm-start ``program`` from a previous fixpoint.
-
-        ``prev_state`` is the batched final state of an earlier run of the
-        same queries; ``dirty`` a ``[Pl, v_max]`` bool mask of vertices whose
-        out-edges changed since (``DynamicGraph.dirty_since`` scattered into
-        partition layout).  Runs the program's :class:`IncrementalForm`
-        relaxation seeded at the dirty frontier — typically a handful of
-        supersteps instead of the full traversal depth.  Returns ``(state,
-        steps)``, or ``None`` when the program has no incremental form
-        (non-monotone: PageRank, BC) — the caller must recompute cold.  The
-        *caller* is also responsible for the monotonicity of the mutation
-        window itself (``dirty_since`` reports it): a deletion invalidates
-        the previous fixpoint as an over-approximation, so warm-starting
-        across one is unsound.
-
-        Deprecated alias: prefer ``execute(program, prev_state,
-        incremental=dirty)``.
-        """
-        _warn_alias(self, "run_incremental",
-                    "execute(program, prev_state, incremental=dirty)")
-        inc = program.incremental
-        if inc is None:
-            return None
-        state = inc.seed(prev_state, jnp.asarray(dirty))
-        ok, self._alias_warn_ok = self._alias_warn_ok, False
-        try:
-            return self.run_batched(inc.program, state)
-        finally:
-            self._alias_warn_ok = ok
-
     def should_resplit_hybrid(self, threshold: float = 0.10) -> bool:
         """The ``perf_model.should_resplit`` rule, applied to this engine's
         frozen dynamic-hybrid split: re-evaluate the candidate ladder on
@@ -2253,7 +2630,7 @@ class BSPEngine:
         from repro.kernels.ell_spmv import SEMIRINGS
 
         cfg, arrs, hg = self._build_hybrid(program, self.dg.mutated_csr(),
-                                           with_push=False)
+                                           with_push=True)
         n = cfg.num_vertices
         mul_ident = SEMIRINGS[cfg.semiring][3]
         spare = self._dyn_ell_spare
@@ -2262,7 +2639,38 @@ class BSPEngine:
         ell_val = np.pad(hg.ell_val, ((0, 0), (0, spare)),
                          constant_values=mul_ident)
         arrs = dict(arrs, ell_col=ell_col, ell_val=ell_val)
-        return dict(
+        push_extra = dict(push_src=None, push_dst=None, push_w=None)
+        if "push_src" in arrs:
+            # Push arenas ride mutations too: spare sentinel slots
+            # (src = dst = n, inert under the extended-segment reduce) take
+            # inserts, deletes tombstone slots back to the sentinel, and the
+            # capacity is pow2-rounded so a post-growth rebuild usually
+            # lands on shapes the jit cache has already seen.
+            e = int(arrs["push_src"].shape[0])
+            need = e + max(4 * self.dg.mutation_capacity, 64)
+            cap = 1 << (need - 1).bit_length()
+            push_src = np.pad(arrs["push_src"], (0, cap - e),
+                              constant_values=n)
+            push_dst = np.pad(arrs["push_dst"], (0, cap - e),
+                              constant_values=n)
+            arrs = dict(arrs, push_src=push_src, push_dst=push_dst)
+            if "push_w" in arrs:
+                arrs["push_w"] = np.pad(arrs["push_w"], (0, cap - e),
+                                        constant_values=0.0)
+            # Reconcile fills spare ELL columns out of slot order, so the
+            # bottom-up scan's per-row bound must cover the full (spared)
+            # width — early exit still cuts the live-parent common case.
+            arrs["ell_kreal"] = np.full(n, ell_col.shape[1], np.int32)
+            pair_slots: dict = {}
+            for j in range(e):
+                pair_slots.setdefault(
+                    (int(push_src[j]), int(push_dst[j])), []).append(j)
+            push_extra = dict(
+                push_src=push_src.copy(), push_dst=push_dst.copy(),
+                push_w=(arrs["push_w"].copy() if "push_w" in arrs
+                        else None),
+                pair_slots=pair_slots, push_free=list(range(e, cap)))
+        ent = dict(
             cfg=cfg,
             arrs={k: jnp.asarray(v) for k, v in arrs.items()},
             # host mirrors for entry location + free-slot scans
@@ -2270,20 +2678,27 @@ class BSPEngine:
             ell_col=ell_col.copy(), ell_val=ell_val.copy(),
             inv_perm=hg.inv_perm, mul_ident=float(mul_ident),
             cursor=self.dg.num_batches)
+        ent.update(push_extra)
+        return ent
 
     def _reconcile_hybrid(self, ent: dict, key, pairs) -> None:
         """Reconcile the split's ⊗ values for every touched (u, v) pair
-        against the ledger's current live multiset, then scatter the writes
-        into the device arrays (eager ``.at[]`` updates — the compiled
-        superstep only ever sees the arrays as operands)."""
+        against the ledger's current live multiset, then apply every write
+        — dense block, ELL pull layout, *and* the push arenas — through the
+        **one** compiled padded scatter the mutation path already uses
+        (``dynamic._scatter_payload``): both traversal layouts stay in sync
+        out of a single device dispatch, and the compiled superstep only
+        ever sees the arrays as operands."""
+        from repro.core.dynamic import _scatter_payload
         from repro.core.hybrid import add_identity
 
-        semiring, use_reverse, use_weight = key
+        semiring, use_reverse, use_weight = key[:3]
         cfg = ent["cfg"]
         inv, k = ent["inv_perm"], cfg.k_dense
         ident = add_identity(semiring)
         n = cfg.num_vertices
-        dense_w, col_w, val_w = {}, {}, {}
+        writes = {m: {} for m in ("dense", "ell_col", "ell_val",
+                                  "push_src", "push_dst", "push_w")}
         for (u, v) in pairs:
             a, b = (v, u) if use_reverse else (u, v)
             ha, hb = int(inv[a]), int(inv[b])
@@ -2304,29 +2719,83 @@ class BSPEngine:
                     cell = float(acc)
                 else:
                     cell = min(vals)
-                dense_w[ha * k + hb] = cell
+                writes["dense"][ha * k + hb] = cell
             else:
                 self._reconcile_ell_row(ent, hb, ha, vals, n,
-                                        col_w, val_w)
-        for flat, val in dense_w.items():
+                                        writes["ell_col"],
+                                        writes["ell_val"])
+            if ent.get("push_src") is not None:
+                self._reconcile_push(ent, ha, hb, vals, n, writes)
+        for flat, val in writes["dense"].items():
             ent["dense"].reshape(-1)[flat] = val
-        if dense_w:
-            idx = jnp.asarray(list(dense_w.keys()), dtype=jnp.int32)
-            vals = jnp.asarray(list(dense_w.values()), dtype=jnp.float32)
-            d = ent["arrs"]["dense"]
-            ent["arrs"]["dense"] = d.reshape(-1).at[idx].set(
-                vals).reshape(d.shape)
-        for w_map, mkey in ((col_w, "ell_col"), (val_w, "ell_val")):
-            if not w_map:
-                continue
-            arr = ent["arrs"][mkey]
-            idx = jnp.asarray(list(w_map.keys()), dtype=jnp.int32)
-            vals = jnp.asarray(list(w_map.values()))
-            ent["arrs"][mkey] = arr.reshape(-1).at[idx].set(
-                vals.astype(arr.dtype)).reshape(arr.shape)
+        for mkey in ("ell_col", "ell_val"):
             mirror = ent[mkey].reshape(-1)
-            for flat, val in w_map.items():
+            for flat, val in writes[mkey].items():
                 mirror[flat] = val
+        # One compiled scatter over a fixed key set with pow2-padded write
+        # widths: batches of any composition reuse the same trace.
+        live = {m: w for m, w in writes.items() if m in ent["arrs"]}
+        payload = {m: ent["arrs"][m] for m in live}
+        upd = {}
+        for m, w in live.items():
+            arr = payload[m]
+            width = 1 << (max(len(w), 1) - 1).bit_length()
+            idx = np.full(width, arr.size, dtype=np.int64)  # drop sentinel
+            val = np.zeros(width, dtype=arr.dtype)
+            if w:
+                idx[:len(w)] = np.fromiter(w.keys(), dtype=np.int64,
+                                           count=len(w))
+                val[:len(w)] = np.asarray(list(w.values()), dtype=arr.dtype)
+            upd[m] = (jnp.asarray(idx), jnp.asarray(val))
+        out = _scatter_payload(payload, upd)
+        for m in live:
+            ent["arrs"][m] = out[m]
+
+    def _reconcile_push(self, ent: dict, ha: int, hb: int, vals,
+                        sentinel: int, writes: dict) -> None:
+        """Match the push arena's (ha → hb) slots to the live multiset:
+        tombstone extras back to the sentinel, claim spare slots for new
+        edges.  Weightless arenas match by count; min_plus by ⊗ value.
+        Raises :class:`_EllOverflow` when the spare pool runs dry (the
+        caller rebuilds from the mutated CSR)."""
+        slots = ent["pair_slots"].setdefault((ha, hb), [])
+        w = ent["push_w"]
+        if w is None:
+            keep, extras = slots[:len(vals)], slots[len(vals):]
+            remaining = vals[len(slots):]
+        else:
+            remaining, keep, extras = list(vals), [], []
+            for j in slots:
+                x = float(w[j])
+                if x in remaining:
+                    remaining.remove(x)
+                    keep.append(j)
+                else:
+                    extras.append(j)
+        for j in extras:
+            writes["push_src"][j] = sentinel
+            writes["push_dst"][j] = sentinel
+            ent["push_src"][j] = sentinel
+            ent["push_dst"][j] = sentinel
+            if w is not None:
+                writes["push_w"][j] = 0.0
+                w[j] = 0.0
+            ent["push_free"].append(j)
+        if remaining:
+            free = ent["push_free"]
+            if len(free) < len(remaining):
+                raise _EllOverflow((ha, hb))
+            for x in remaining:
+                j = free.pop()
+                writes["push_src"][j] = ha
+                writes["push_dst"][j] = hb
+                ent["push_src"][j] = ha
+                ent["push_dst"][j] = hb
+                if w is not None:
+                    writes["push_w"][j] = float(x)
+                    w[j] = float(x)
+                keep.append(j)
+        ent["pair_slots"][(ha, hb)] = keep
 
     def _reconcile_ell_row(self, ent: dict, row: int, col: int, want,
                            sentinel: int, col_w: dict, val_w: dict) -> None:
@@ -2419,7 +2888,7 @@ class DistributedBSPEngine(BSPEngine):
         # The sharded path is already stale-constant-safe: edge arrays and
         # the mutation payload travel as shard_map operands rebuilt from the
         # engine's current binding on every call (see _dist_step_parts).
-        return DistributedBSPEngine.run_batched(self, program, state)
+        return DistributedBSPEngine._run_batched(self, program, state)
 
     def should_resplit_hybrid(self, threshold: float = 0.10) -> bool:
         # the distributed hybrid consumes mutations via forced compactions,
@@ -2506,6 +2975,28 @@ class DistributedBSPEngine(BSPEngine):
             arrs["push_dst"] = shd.push_dst
             if shd.push_w is not None:
                 arrs["push_w"] = shd.push_w
+            # direction-optimization operands, per shard: real ELL slot
+            # counts (bottom-up scan bound), the perf-model-fitted
+            # push/pull crossover, and the static dense-stage work charge
+            arrs["ell_kreal"] = (shd.ell_col
+                                 != shd.n_max).sum(axis=2).astype(np.int32)
+            ks = [int(rec["k_dense"])
+                  for rec in self._hybrid_plan["per_shard"]]
+            arrs["e_dense"] = np.asarray(
+                [[k * k] for k in ks], dtype=np.int32)
+            if self._pull_threshold_req is not None:
+                thr = np.full((shd.num_shards, 1, 1),
+                              self._pull_threshold_req, np.float32)
+            else:
+                from repro.core import perf_model
+                nv = np.maximum(np.asarray(shd.n_vert,
+                                           np.float64).reshape(-1), 1.0)
+                intra = (np.asarray(arrs["ell_kreal"], np.int64).sum(axis=1)
+                         + np.asarray(ks, np.int64) ** 2)
+                thr = perf_model.fit_shard_pull_thresholds(
+                    intra / nv, [shd.ell_col.shape[2]] * shd.num_shards,
+                    backend="hybrid").reshape(-1, 1, 1)
+            arrs["pull_thr"] = thr.astype(np.float32)
         sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
         arrs = {k: jax.device_put(jnp.asarray(v), sharding)
                 for k, v in arrs.items()}
@@ -2518,7 +3009,9 @@ class DistributedBSPEngine(BSPEngine):
                                  self.axis, self.interpret,
                                  self._pull_threshold, self._dist_finished,
                                  guard=guard,
-                                 n_shards=self.mesh.shape[self.axis])
+                                 n_shards=self.mesh.shape[self.axis],
+                                 forced=self._dopt_forced,
+                                 uniform=program.edge_msg.frontier_uniform)
 
     # ----------------------------- exchange --------------------------------
 
@@ -2636,15 +3129,17 @@ class DistributedBSPEngine(BSPEngine):
             return functools.partial(_superstep, dims, program, extra,
                                      exchange,
                                      self._dist_finished,
-                                     self.fused_cfg_for(program))
+                                     self.fused_cfg_for(program),
+                                     dopt_cfg=self._dopt_cfg_for(program))
 
         return edges, make, False
 
-    def run_batched(self, program: VertexProgram,
-                    state: BatchedState) -> Tuple[BatchedState, Array]:
+    def _run_batched(self, program: VertexProgram,
+                     state: BatchedState) -> Tuple[BatchedState, Array]:
         """Advance a [Q, P, ...] batch of queries through one sharded
         ``lax.while_loop``; the termination vote is a per-query global AND
-        (psum over the mesh axis).  Returns (batched state, steps [Q])."""
+        (psum over the mesh axis).  Returns (batched state, steps [Q]).
+        Private: dispatch through ``execute(program, state)``."""
         self._validate_state(state)
         q = num_queries(state)
         # State shards on the *partition* axis (axis 1); the query axis is
@@ -2735,10 +3230,6 @@ class DistributedBSPEngine(BSPEngine):
                                  extra)
         return jitted(state, extra, jnp.int32(step), fin, steps_q,
                       jnp.float32(poison))
-
-    def run(self, program: VertexProgram, state: State) -> Tuple[State, Array]:
-        state, steps = self.run_batched(program, batch_state(state))
-        return unbatch_state(state), steps[0]
 
     def superstep(self, program: VertexProgram) -> Callable:
         """One jitted distributed superstep ``f(state, step) -> (state,

@@ -220,6 +220,45 @@ def hybrid_spmv(dense: jax.Array, ell_col: jax.Array, ell_val: jax.Array,
     return y[0] if squeeze else y
 
 
+def hybrid_spmv_scan(dense: jax.Array, ell_col: jax.Array,
+                     ell_val: Optional[jax.Array], x: jax.Array,
+                     kreal: jax.Array, *, semiring: str, k_dense: int,
+                     early_exit: bool = False,
+                     skip: Optional[jax.Array] = None,
+                     interpret: Optional[bool] = None):
+    """``hybrid_spmv`` with the bottom-up scan kernel on the ELL path.
+
+    Returns ``(y, scanned)`` where ``y`` is bitwise equal to
+    ``hybrid_spmv``'s (the scan kernel's reduction is the same vectorized
+    gather + row-min, and the dense MXU stage below is the identical
+    barrier-pinned subgraph) and ``scanned [Q]`` sums the per-row
+    early-exit work model (kernels/bottomup.py) — the slots a sequential
+    bottom-up scan would examine.  ``kreal [n]`` is the per-row real slot
+    count; ``skip`` [Q, n] marks rows whose value is already final under
+    the uniform-frontier licence (they charge zero scanned slots — a
+    sequential bottom-up visits only unvisited rows); min combines only.
+    """
+    ident = add_identity(semiring)
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+    q = x.shape[0]
+    xs = jnp.concatenate([x, jnp.full((q, 1), ident, x.dtype)], axis=1)
+    y, scanned = kops.bottomup_scan_op(
+        ell_col, ell_val if semiring == MIN_PLUS else None, xs, kreal,
+        semiring=semiring, early_exit=early_exit, skip=skip,
+        interpret=interpret)
+    if k_dense:
+        # Same barrier discipline as hybrid_spmv — the two paths must round
+        # identically so direction is purely a performance choice.
+        xd = jax.lax.optimization_barrier(x[:, :k_dense])
+        yh = jax.lax.optimization_barrier(
+            kops.dense_spmv_minplus_op(xd, dense, interpret=interpret))
+        y = y.at[:, :k_dense].min(yh)
+    cnt = jnp.sum(scanned, axis=1)
+    return (y[0], cnt[0]) if squeeze else (y, cnt)
+
+
 # ---------------------------------------------------------------------------
 # Per-shard degree split for the distributed hybrid engine (paper §4.3, §6)
 # ---------------------------------------------------------------------------

@@ -435,6 +435,119 @@ def build_block_metadata(ea: EdgeArrays, *, block_e: int = 1024,
                          weight=weight, block_spans=block_spans)
 
 
+# ---------------------------------------------------------------------------
+# Transposed (CSC-as-ELL) intra-partition layout: direction-optimized pull
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TransposedEll:
+    """Per-partition transposed intra-edge layout for bottom-up traversal.
+
+    The push arenas above are source-major (``src``/``dst_ext`` pairs, sorted
+    by extended destination).  Direction-optimized supersteps additionally
+    need the CSC view: for each *destination* row, its in-neighbour local
+    source ids, packed ELL-style — ``col[p, v, k]`` is the k-th in-neighbour
+    of local vertex ``v`` in partition ``p`` (sentinel ``v_max`` → the
+    per-partition ⊕-identity sink column the engine appends to ``x``).
+
+    The layout keeps the same clean-cut discipline the tier streamer relies
+    on: rows *are* destinations, in ascending local id (destination-sorted by
+    construction), grouped into ``lane``-aligned row blocks whose per-block
+    metadata (``blk_kmax``/``blk_edges``) bounds each block's scan work —
+    and since a row's slots never straddle a block boundary, every cut
+    between row blocks is clean (no destination's reduction spans two
+    blocks), so windowed execution combines pure ⊕-identities across cuts.
+
+    Within a row, slots are ordered by in-neighbour *out-degree descending*
+    (ties by local id): the bottom-up early exit terminates on the first
+    frontier parent, and on scale-free graphs the high-degree neighbour is
+    the likeliest to be reached already — the same ranking intuition as the
+    hybrid degree split.
+
+    ``deg_out``/``deg_bnd`` carry each local vertex's real total / boundary
+    out-degree — the deterministic per-superstep ``edges_examined`` charges
+    for the push direction and the always-push boundary leg.
+
+    Only the *intra*-partition edges transpose: boundary edges keep their
+    outbox-slot push path in both directions (the exchange is
+    source-aggregated either way; see docs/traversal.md).
+    """
+
+    col: np.ndarray               # [P, v_max, kmax] int32 (sentinel = v_max)
+    val: Optional[np.ndarray]     # [P, v_max, kmax] f32 ⊗ values, or None
+    kreal: np.ndarray             # [P, v_max] int32 real in-slots per row
+    deg_out: np.ndarray           # [P, v_max] int32 real out-degree
+    deg_bnd: np.ndarray           # [P, v_max] int32 boundary out-degree
+    kmax: int                     # shared in-degree bound (>= 1)
+    lane: int                     # row-block alignment
+    blk_kmax: np.ndarray          # [P, nb] max kreal per row block
+    blk_edges: np.ndarray         # [P, nb] real intra edges per row block
+
+    @property
+    def num_blocks(self) -> int:
+        return self.blk_kmax.shape[1]
+
+
+def build_transposed_ell(ea: EdgeArrays, v_max: int, *,
+                         lane: int = 128) -> TransposedEll:
+    """Transpose one direction's intra-partition edges into ELL rows.
+
+    Numpy preprocessing (runs once at bind time).  Tombstones/delta slots of
+    a dynamic overlay are *not* reflected — the engine reconciles mutations
+    into its own transposed arenas (hybrid) or keeps dynamic runs push-only
+    (reference/fused); see core/bsp.py.
+    """
+    P, _ = ea.src.shape
+    deg_out = np.zeros((P, v_max), dtype=np.int32)
+    deg_bnd = np.zeros((P, v_max), dtype=np.int32)
+    intra_edges = []            # per partition: (dst, src, w) intra arrays
+    kmax = 1
+    for p in range(P):
+        em = ea.edge_mask[p]
+        np.add.at(deg_out[p], ea.src[p][em], 1)
+        bm = em & (ea.dst_ext[p] > v_max)
+        np.add.at(deg_bnd[p], ea.src[p][bm], 1)
+        im = em & (ea.dst_ext[p] < v_max)
+        dst = ea.dst_ext[p][im]
+        src = ea.src[p][im]
+        w = ea.weight[p][im] if ea.weight is not None else None
+        if len(dst):
+            kmax = max(kmax, int(np.bincount(dst, minlength=1).max()))
+        intra_edges.append((dst, src, w))
+
+    col = np.full((P, v_max, kmax), v_max, dtype=np.int32)
+    val = (np.zeros((P, v_max, kmax), dtype=np.float32)
+           if ea.weight is not None else None)
+    kreal = np.zeros((P, v_max), dtype=np.int32)
+    for p, (dst, src, w) in enumerate(intra_edges):
+        if not len(dst):
+            continue
+        # slot order: source out-degree descending, ties by (src, arrival)
+        order = np.lexsort((np.arange(len(dst)), src,
+                            -deg_out[p][src].astype(np.int64), dst))
+        dst, src = dst[order], src[order]
+        w = w[order] if w is not None else None
+        counts = np.bincount(dst, minlength=v_max)
+        slots = np.arange(len(dst)) - np.repeat(
+            np.cumsum(counts) - counts, counts)[: len(dst)]
+        # np.repeat over counts yields rows in ascending dst order — which
+        # is exactly the sort order above, so slots align with (dst, src).
+        col[p, dst, slots] = src
+        if val is not None:
+            val[p, dst, slots] = w
+        kreal[p] = counts.astype(np.int32)
+
+    v_pad = max(_round_up(v_max, lane), lane)
+    nb = v_pad // lane
+    kreal_pad = np.pad(kreal, ((0, 0), (0, v_pad - v_max)))
+    blocks = kreal_pad.reshape(P, nb, lane)
+    return TransposedEll(
+        col=col, val=val, kreal=kreal, deg_out=deg_out, deg_bnd=deg_bnd,
+        kmax=kmax, lane=lane,
+        blk_kmax=blocks.max(axis=2).astype(np.int32),
+        blk_edges=blocks.sum(axis=2).astype(np.int32))
+
+
 def memory_footprint_bytes(pg: PartitionedGraph, state_bytes: int = 4,
                            vid_bytes: int = 4,
                            eid_bytes: int = 4,

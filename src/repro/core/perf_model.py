@@ -156,6 +156,71 @@ def hybrid_makespan_tpu(e_dense: float, dense_density: float,
 
 
 # ---------------------------------------------------------------------------
+# Direction-optimized traversal: the push/pull crossover (docs/traversal.md)
+# ---------------------------------------------------------------------------
+
+# Per-slot scan cost of the bottom-up path relative to the push path's
+# per-edge cost, by backend.  The push direction pays a full gather +
+# segment reduction per examined edge; the bottom-up scan is a contiguous
+# ELL row walk (hybrid: the same kernel that already serves pull), so its
+# relative per-slot cost is lowest there.  The reference/fused backends
+# keep their boundary leg in push either way and pay an extra masked
+# compute for it, so their scans are charged more conservatively.
+DIRECTION_GAMMA = {"hybrid": 1.0, "fused": 1.5, "reference": 2.0}
+
+
+def fit_pull_threshold(avg_degree: float, kmax: int | None = None, *,
+                       backend: str = "hybrid",
+                       gamma: float | None = None) -> float:
+    """Fitted frontier-density threshold above which bottom-up (pull) wins.
+
+    The α-style crossover of direction-optimized BFS (arXiv 1503.04359),
+    recast for frontier density d (fraction of vertices live this
+    superstep) on a graph of average degree ``deg``:
+
+      push cost  ≈ d · V · deg            (edges out of the frontier)
+      pull cost  ≈ V · E[scan] · γ        (early-exit row scans)
+
+    with E[scan] ≈ min(1/d, kmax) — a random in-slot is live with
+    probability ~d, so the expected first-hit position is ~1/d, capped by
+    the ELL row width — and γ the backend's relative per-slot scan cost
+    (``DIRECTION_GAMMA``).  Equating the two gives the crossover density
+
+      d* = sqrt(γ / deg)          (uncapped scans)
+      d* = γ · kmax / deg         (kmax-capped scans)
+
+    and the fitted threshold is the smaller of the two, clamped to
+    (0, 0.9].  Monotone non-increasing in ``avg_degree``: denser graphs
+    flip to bottom-up at sparser frontiers — exactly the scale-free win.
+    """
+    if gamma is None:
+        gamma = DIRECTION_GAMMA[backend]
+    deg = max(float(avg_degree), 1e-9)
+    thr = (gamma / deg) ** 0.5
+    if kmax is not None:
+        thr = min(thr, gamma * max(int(kmax), 1) / deg)
+    return float(min(max(thr, 1e-4), 0.9))
+
+
+def fit_shard_pull_thresholds(shard_avg_degrees, shard_kmaxes=None, *,
+                              backend: str = "hybrid",
+                              gamma: float | None = None) -> np.ndarray:
+    """Per-shard crossover thresholds [S] for the distributed engines.
+
+    HIGH/LOW partitioning gives shards very different degree profiles, so
+    each shard fits (and applies) its own threshold — the per-shard
+    direction decision of docs/traversal.md.
+    """
+    degs = np.atleast_1d(np.asarray(shard_avg_degrees, dtype=np.float64))
+    if shard_kmaxes is None:
+        kmaxes = [None] * len(degs)
+    else:
+        kmaxes = list(np.atleast_1d(np.asarray(shard_kmaxes)))
+    return np.array([fit_pull_threshold(d, k, backend=backend, gamma=gamma)
+                     for d, k in zip(degs, kmaxes)], dtype=np.float32)
+
+
+# ---------------------------------------------------------------------------
 # Degree-split selection (the paper's Eq. 4 role: the model picks the split)
 # ---------------------------------------------------------------------------
 

@@ -170,6 +170,55 @@ def ell_spmv_op(col: jax.Array, val: jax.Array, x: jax.Array, *,
     return y[0] if squeeze else y
 
 
+def bottomup_scan_op(col: jax.Array, val: jax.Array | None, x: jax.Array,
+                     kreal: jax.Array, *, semiring: str,
+                     early_exit: bool = False, skip: jax.Array | None = None,
+                     block_v: int = 512,
+                     interpret: bool | None = None):
+    """Bottom-up pull scan for arbitrary V; pads rows to the block size.
+
+    ``col`` [V, K] in-neighbour ids (sentinel = x_len-1), ``val`` [V, K]
+    (``min_plus``) or None (``min``), ``x`` [Q, x_len] with the ⊕-identity
+    sink appended per row, ``kreal`` [V] real slot counts.  Returns
+    ``(y [Q, V], scanned [Q, V] int32)`` — the row reduction (bitwise equal
+    to ``ell_spmv_op``'s) plus the early-exit scan-work model
+    (kernels/bottomup.py).  Padding rows report zero scanned slots.
+
+    ``skip`` [Q, V] bool (uniform-frontier programs only, alongside
+    ``early_exit``) marks rows whose value is already final — under
+    message uniformity a vertex's first write is its fixpoint value, so
+    a sequential bottom-up pass visits only the still-unvisited rows
+    (Beamer's frontier loop) and skipped rows charge zero scanned slots.
+    The reduction still covers them (that is the bitwise-parity
+    guarantee); only the work model changes.
+    """
+    from repro.kernels import bottomup as _bu
+
+    if interpret is None:
+        interpret = _interpret_default()
+    v = col.shape[0]
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+        if skip is not None and skip.ndim == 1:
+            skip = skip[None]
+    bv = min(block_v, max(8, 1 << (v - 1).bit_length()))
+    sentinel = x.shape[1] - 1  # callers append the ⊕-identity slot
+    colp = _pad_to(col, bv, 0, value=sentinel)
+    valp = (_pad_to(val, bv, 0, value=_ell.SEMIRINGS[semiring][3])
+            if val is not None else None)
+    krealp = _pad_to(kreal.astype(jnp.int32), bv, 0)[:, None]
+    y, scanned = _bu.bottomup_scan(colp, valp, x, krealp, semiring=semiring,
+                                   early_exit=early_exit, block_v=bv,
+                                   interpret=interpret)
+    y, scanned = y[:, :v], scanned[:, :v]
+    if skip is not None and early_exit:
+        scanned = jnp.where(skip, 0, scanned)
+    if squeeze:
+        return y[0], scanned[0]
+    return y, scanned
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

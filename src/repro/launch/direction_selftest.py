@@ -1,0 +1,88 @@
+"""Direction-optimized traversal parity self-test: every min-combine
+traversal (BFS, SSSP, CC) through forced ``direction="push"``, forced
+``"pull"``, and per-shard ``"auto"`` on every backend, against the
+single-device push reference — bitwise.  Invoked in a subprocess so the
+forced device count never leaks into the caller's jax runtime:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      python -m repro.launch.direction_selftest [--scale 8] [--parts 4]
+
+Direction is a pure performance choice for min combines (push and pull
+reduce the same value multiset per destination — docs/traversal.md), so
+every cell of the matrix must agree exactly, and the auto runs must
+additionally report live ``last_direction_stats`` (edges examined > 0 on
+every query, zero switches under forced directions).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=8)
+    ap.add_argument("--edge-factor", type=int, default=4)
+    ap.add_argument("--parts", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=13)
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+
+    from repro.algorithms.bfs import bfs_batched
+    from repro.algorithms.cc import connected_components, symmetrize
+    from repro.algorithms.sssp import sssp_batched
+    from repro.core import graph as G
+    from repro.core import partition as PT
+    from repro.core.bsp import BSPEngine, DistributedBSPEngine
+
+    n_dev = len(jax.devices())
+    assert args.parts % n_dev == 0, (args.parts, n_dev)
+    mesh = jax.make_mesh((n_dev,), ("parts",))
+    g = G.rmat(args.scale, args.edge_factor,
+               seed=args.seed).with_uniform_weights(seed=1)
+    gs = symmetrize(G.rmat(args.scale, args.edge_factor, seed=args.seed))
+    pg = PT.partition(g, args.parts, PT.HIGH)
+    pgs = PT.partition(gs, args.parts, PT.HIGH)
+    sources = [0, 3, 11]
+
+    backends = {"reference": dict(), "fused": dict(fused=True, block_e=256),
+                "hybrid": dict(backend="hybrid")}
+
+    # single-device push baselines (the repo's long-standing oracle chain
+    # ends at the numpy references; parity suites pin that elsewhere)
+    base = BSPEngine(pg, direction="push")
+    want_bfs, _ = bfs_batched(base, sources)
+    want_sssp, _ = sssp_batched(base, sources)
+    want_cc, _ = connected_components(BSPEngine(pgs, direction="push"))
+
+    for bname, kw in backends.items():
+        for direction in ("push", "pull", "auto"):
+            eng = DistributedBSPEngine(pg, mesh, direction=direction, **kw)
+            got_bfs, _ = bfs_batched(eng, sources)
+            np.testing.assert_array_equal(want_bfs, got_bfs,
+                                          err_msg=f"bfs {bname} {direction}")
+            st = eng.last_direction_stats
+            assert st is not None and (st["edges_examined"] > 0).all(), \
+                (bname, direction, st)
+            if direction != "auto":
+                assert (st["switches"] == 0).all(), (bname, direction, st)
+
+            got_sssp, _ = sssp_batched(eng, sources)
+            np.testing.assert_array_equal(
+                want_sssp, got_sssp, err_msg=f"sssp {bname} {direction}")
+
+            ec = DistributedBSPEngine(pgs, mesh, direction=direction, **kw)
+            got_cc, _ = connected_components(ec)
+            np.testing.assert_array_equal(want_cc, got_cc,
+                                          err_msg=f"cc {bname} {direction}")
+        print(f"{bname:>9}: bfs/sssp/cc push==pull==auto over "
+              f"{n_dev} device(s)", flush=True)
+
+    print(f"DIRECTION SELFTEST OK ({n_dev} devices)")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -230,7 +230,7 @@ def serve(engine, alg: str, sources: np.ndarray, batch: int,
     batches = stream.reshape(-1, batch)
 
     tiered = getattr(engine, "tier_plan", None) is not None
-    cache_fn = type(engine).run_batched
+    cache_fn = type(engine)._run_batched
     entries0 = None
     lat_ms, cold_ms = [], None
     batch_done_ms = []                  # cumulative wall at batch completion

@@ -165,10 +165,10 @@ def test_batched_runs_do_not_retrace():
     g = G.rmat(8, 4, seed=2)
     eng = BSPEngine(PT.partition(g, 2, PT.RAND), **INTERP)
     bfs_batched(eng, [0, 1, 2, 3])                       # compiles
-    before = BSPEngine.run_batched._cache_size()
+    before = BSPEngine._run_batched._cache_size()
     bfs_batched(eng, [4, 5, 6, 7])
     bfs_batched(eng, [9, 8, 7, 6])
-    assert BSPEngine.run_batched._cache_size() == before
+    assert BSPEngine._run_batched._cache_size() == before
 
 
 def test_graph_serve_smoke(tmp_path):

@@ -173,7 +173,7 @@ def test_run_rejects_mis_sharded_state():
     eng = DistributedBSPEngine(pg, mesh)
     bad = {"level": jnp.zeros((3, pg.v_max), jnp.float32)}  # 3 != num_parts
     with pytest.raises(ValueError, match="num_parts"):
-        eng.run(BFS_PROGRAM, bad)
+        eng.execute(BFS_PROGRAM, bad)
 
 
 def test_mesh_must_divide_num_parts():

@@ -258,7 +258,7 @@ def test_memory_footprint_accounts_delta_and_tombstones():
 # incremental API + retrace guard (single device, quick)
 # ---------------------------------------------------------------------------
 
-def test_run_incremental_returns_none_without_incremental_form():
+def test_execute_incremental_returns_none_without_incremental_form():
     from repro.algorithms.pagerank import make_pagerank_program
 
     g = G.rmat(6, 4, seed=3)
@@ -266,7 +266,8 @@ def test_run_incremental_returns_none_without_incremental_form():
     eng = BSPEngine(dg, **INTERP)
     program = make_pagerank_program(g.num_vertices)
     assert program.incremental is None
-    assert eng.run_incremental(program, {}, np.zeros((2, 8), bool)) is None
+    assert eng.execute(program, {},
+                       incremental=np.zeros((2, 8), bool)) is None
 
 
 def test_warm_start_bitwise_and_fewer_supersteps():

@@ -178,7 +178,10 @@ def test_program_without_edge_msg_falls_back_to_reference():
     import jax.numpy as jnp
     level0 = np.full((2, pg.v_max), np.inf, dtype=np.float32)
     level0[int(pg.assignment.part_of[0]), int(pg.assignment.local_id[0])] = 0.0
-    state, _ = eng.run(plain, {"level": jnp.asarray(level0)})
+    from repro.core.bsp import batch_state, unbatch_state
+    state, _ = eng.execute(plain,
+                           batch_state({"level": jnp.asarray(level0)}))
+    state = unbatch_state(state)
     np.testing.assert_array_equal(
         lr, pg.gather_global(np.asarray(state["level"])))
 

@@ -75,9 +75,9 @@ def test_chunked_matches_resident_loop(kw):
     g, pg, sources = _setup()
     eng = BSPEngine(pg, **kw)
     state0 = {"level": jnp.asarray(multi_source_state(pg, sources))}
-    ref_state, ref_steps = eng.run_batched(BFS_PROGRAM, dict(state0))
-    st, sq, info = eng.run_batched_chunked(BFS_PROGRAM, dict(state0),
-                                           checkpoint_every=2)
+    ref_state, ref_steps = eng.execute(BFS_PROGRAM, dict(state0))
+    st, sq, info = eng.execute(BFS_PROGRAM, dict(state0),
+                                           chunk=2)
     np.testing.assert_array_equal(np.asarray(st["level"]),
                                   np.asarray(ref_state["level"]))
     np.testing.assert_array_equal(np.asarray(sq), np.asarray(ref_steps))
@@ -90,10 +90,10 @@ def test_chunk_carry_resumes_through_checkpoint(tmp_path):
     g, pg, sources = _setup()
     eng = BSPEngine(pg)
     state0 = {"level": jnp.asarray(multi_source_state(pg, sources))}
-    ref_state, ref_steps = eng.run_batched(BFS_PROGRAM, dict(state0))
+    ref_state, ref_steps = eng.execute(BFS_PROGRAM, dict(state0))
 
-    st, sq, info = eng.run_batched_chunked(BFS_PROGRAM, dict(state0),
-                                           checkpoint_every=2, max_chunks=1)
+    st, sq, info = eng.execute(BFS_PROGRAM, dict(state0),
+                                           chunk=2, max_chunks=1)
     mgr = CheckpointManager(tmp_path)
     mgr.save_tree(info["final_step"],
                   {"state": st, "fin": info["finished"], "steps_q": sq},
@@ -104,8 +104,8 @@ def test_chunk_carry_resumes_through_checkpoint(tmp_path):
             "steps_q": np.zeros(len(sources), np.int32)}
     step, tree = CheckpointManager(tmp_path).restore_tree(like)
     eng2 = BSPEngine(pg)          # a restarted process rebuilds the engine
-    final, fsq, _ = eng2.run_batched_chunked(
-        BFS_PROGRAM, tree["state"], checkpoint_every=3, start_step=step,
+    final, fsq, _ = eng2.execute(
+        BFS_PROGRAM, tree["state"], chunk=3, start_step=step,
         fin=tree["fin"], steps_q=tree["steps_q"])
     np.testing.assert_array_equal(np.asarray(final["level"]),
                                   np.asarray(ref_state["level"]))
@@ -122,17 +122,17 @@ def test_dynamic_chunked_parity_and_no_recompile_on_rebuild():
     dg.apply_mutations(edge_stream(g, 1, 32, churn=1.0, seed=3)[0])
     eng = BSPEngine(dg)
     state0 = {"level": jnp.asarray(multi_source_state(eng.pg, sources))}
-    ref_state, ref_steps = eng.run_batched(BFS_PROGRAM, dict(state0))
-    st, sq, _ = eng.run_batched_chunked(BFS_PROGRAM, dict(state0),
-                                        checkpoint_every=2)
+    ref_state, ref_steps = eng.execute(BFS_PROGRAM, dict(state0))
+    st, sq, _ = eng.execute(BFS_PROGRAM, dict(state0),
+                                        chunk=2)
     np.testing.assert_array_equal(np.asarray(st["level"]),
                                   np.asarray(ref_state["level"]))
     np.testing.assert_array_equal(np.asarray(sq), np.asarray(ref_steps))
 
     entries = bsp._run_dyn_chunk_jit._cache_size()
     eng2 = BSPEngine(dg)          # restart: same shapes, same trace
-    st2, sq2, _ = eng2.run_batched_chunked(BFS_PROGRAM, dict(state0),
-                                           checkpoint_every=2)
+    st2, sq2, _ = eng2.execute(BFS_PROGRAM, dict(state0),
+                                           chunk=2)
     np.testing.assert_array_equal(np.asarray(st2["level"]),
                                   np.asarray(st["level"]))
     assert bsp._run_dyn_chunk_jit._cache_size() == entries
@@ -162,15 +162,15 @@ def test_quarantine_kills_nan_query_and_freezes_rest():
     g, pg, sources = _setup(queries=3)
     eng = BSPEngine(pg)
     clean0 = {"level": jnp.asarray(multi_source_state(pg, sources))}
-    ref_state, _ = eng.run_batched(BFS_PROGRAM, dict(clean0))
+    ref_state, _ = eng.execute(BFS_PROGRAM, dict(clean0))
 
     poisoned = np.asarray(clean0["level"]).copy()
     poisoned[0] = np.nan
     quar = QuarantinePolicy()
     quar.begin(3)
-    st, _, info = eng.run_batched_chunked(
+    st, _, info = eng.execute(
         BFS_PROGRAM, {"level": jnp.asarray(poisoned)},
-        checkpoint_every=2, on_chunk=quar.scan)
+        chunk=2, on_chunk=quar.scan)
     assert [r["query"] for r in quar.quarantined] == [0]
     assert quar.quarantined[0]["reason"] == "nonfinite"
     assert info["finished"].all()
@@ -191,8 +191,8 @@ def test_quarantine_superstep_budget():
         multi_source_state(pg, np.array([[0], [n - 1]])))}
     quar = QuarantinePolicy(superstep_budget=4)
     quar.begin(2)
-    _, sq, info = eng.run_batched_chunked(
-        BFS_PROGRAM, state0, checkpoint_every=2, on_chunk=quar.scan)
+    _, sq, info = eng.execute(
+        BFS_PROGRAM, state0, chunk=2, on_chunk=quar.scan)
     assert [(r["query"], r["reason"]) for r in quar.quarantined] == \
         [(0, "superstep_budget")]
     assert info["finished"].all()
@@ -269,7 +269,7 @@ def test_injected_shard_failure_recovered_by_chunk_retry():
     g, pg, sources = _setup()
     eng = BSPEngine(pg)
     state0 = {"level": jnp.asarray(multi_source_state(pg, sources))}
-    ref_state, ref_steps = eng.run_batched(BFS_PROGRAM, dict(state0))
+    ref_state, ref_steps = eng.execute(BFS_PROGRAM, dict(state0))
 
     carry = dict(state=dict(state0), step=0,
                  fin=np.zeros(len(sources), bool),
@@ -281,10 +281,10 @@ def test_injected_shard_failure_recovered_by_chunk_retry():
     inj = FaultInjector(sites={"superstep.chunk": [{"chunk": 1}]})
     with chaos.active(inj):
         with pytest.raises(WorkerFailure):
-            eng.run_batched_chunked(BFS_PROGRAM, dict(state0),
-                                    checkpoint_every=2, on_chunk=on_chunk)
-        st, sq, _ = eng.run_batched_chunked(   # resume from last good carry
-            BFS_PROGRAM, carry["state"], checkpoint_every=2,
+            eng.execute(BFS_PROGRAM, dict(state0),
+                                    chunk=2, on_chunk=on_chunk)
+        st, sq, _ = eng.execute(   # resume from last good carry
+            BFS_PROGRAM, carry["state"], chunk=2,
             start_step=carry["step"], fin=carry["fin"],
             steps_q=carry["steps_q"])
     np.testing.assert_array_equal(np.asarray(st["level"]),

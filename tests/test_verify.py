@@ -258,9 +258,9 @@ class TestExchangeIntegrity:
         engine = BSPEngine(pg, **kw)
 
         def run():
-            st, steps_q, _ = engine.run_batched_chunked(
+            st, steps_q, _ = engine.execute(
                 BFS_PROGRAM, {"level": multi_source_state(pg, [1, 2])},
-                checkpoint_every=2)
+                chunk=2)
             return gather_batch(pg, st["level"]), np.asarray(steps_q)
 
         clean, steps = run()
@@ -278,17 +278,17 @@ class TestExchangeIntegrity:
         inj = FaultInjector(
             sites={"state.corrupt": [{"step": 0, "flag": True}]})
         with chaos.active(inj):
-            _, _, info = engine.run_batched_chunked(
+            _, _, info = engine.execute(
                 BFS_PROGRAM, {"level": multi_source_state(pg, [1, 2])},
-                checkpoint_every=2, max_chunks=4,
+                chunk=2, max_chunks=4,
                 monitor=monitor_for("bfs", chunk=2))
         assert info["monitors_fired"] >= 1
 
     def test_clean_run_fires_no_monitors(self, pg):
         engine = BSPEngine(pg)
-        _, _, info = engine.run_batched_chunked(
+        _, _, info = engine.execute(
             BFS_PROGRAM, {"level": multi_source_state(pg, [1, 2])},
-            checkpoint_every=2, monitor=monitor_for("bfs", chunk=2))
+            chunk=2, monitor=monitor_for("bfs", chunk=2))
         assert info["monitors_fired"] == 0
 
 
